@@ -1,0 +1,74 @@
+//! Figure B.15 — plane Poiseuille convergence: u-profiles vs the analytic
+//! solution for increasing resolution, uniform vs wall-refined vs distorted
+//! grids. Also Figure 3/B.16: lid-driven cavity centerline profiles vs the
+//! Ghia reference across resolutions.
+
+use pict::coordinator::references::{GHIA_RE100_U, GHIA_RE100_V};
+use pict::mesh::{field, gen, VectorField};
+use pict::piso::{PisoConfig, PisoSolver, State};
+use pict::util::bench::{print_table, write_report};
+use pict::util::json::Json;
+
+fn main() {
+    // --- B.15: Poiseuille max error vs resolution ---
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    for (ny, refined) in [(8, false), (16, false), (32, false), (16, true), (32, true)] {
+        let mesh = gen::channel2d(6, ny, 1.0, 1.0, 1.12, refined);
+        let mut solver =
+            PisoSolver::new(mesh, PisoConfig { dt: 0.05, ..Default::default() }, 1.0);
+        let mut state = State::zeros(&solver.mesh);
+        let mut src = VectorField::zeros(solver.mesh.ncells);
+        src.comp[0].iter_mut().for_each(|v| *v = 1.0);
+        solver.run(&mut state, &src, 40);
+        let mut max_err = 0.0f64;
+        for (cell, c) in solver.mesh.centers.iter().enumerate() {
+            let exact = 0.5 * c[1] * (1.0 - c[1]);
+            max_err = max_err.max((state.u.comp[0][cell] - exact).abs());
+        }
+        rows.push(vec![
+            format!("{ny}{}", if refined { " refined" } else { "" }),
+            format!("{:.2e}", max_err),
+            format!("{:.2}%", 100.0 * max_err / 0.125),
+        ]);
+        jrows.push(Json::obj(vec![
+            ("ny", Json::Num(ny as f64)),
+            ("refined", Json::Bool(refined)),
+            ("max_err", Json::Num(max_err)),
+        ]));
+    }
+    print_table("Fig B.15 — Poiseuille max error vs analytic", &["grid", "max err", "rel"], &rows);
+
+    // --- Fig 3 / B.16: cavity Re=100 profiles vs Ghia across resolutions ---
+    let mut rows = Vec::new();
+    for n in [16usize, 32] {
+        let mesh = gen::cavity2d(n, 1.0, 1.0, false);
+        let mut solver =
+            PisoSolver::new(mesh, PisoConfig { dt: 0.02, ..Default::default() }, 0.01);
+        let mut state = State::zeros(&solver.mesh);
+        let src = VectorField::zeros(solver.mesh.ncells);
+        solver.run(&mut state, &src, 1200);
+        let mut worst_u = 0.0f64;
+        for (y, u_ref) in GHIA_RE100_U {
+            let u = field::sample_idw(&solver.mesh, &state.u.comp[0], [0.5, y, 0.5]);
+            worst_u = worst_u.max((u - u_ref).abs());
+        }
+        let mut worst_v = 0.0f64;
+        for (x, v_ref) in GHIA_RE100_V {
+            let v = field::sample_idw(&solver.mesh, &state.u.comp[1], [x, 0.5, 0.5]);
+            worst_v = worst_v.max((v - v_ref).abs());
+        }
+        rows.push(vec![format!("{n}x{n}"), format!("{worst_u:.3}"), format!("{worst_v:.3}")]);
+        jrows.push(Json::obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("worst_u_err", Json::Num(worst_u)),
+            ("worst_v_err", Json::Num(worst_v)),
+        ]));
+    }
+    print_table(
+        "Fig B.16 — cavity Re=100 centerline error vs Ghia (converges with resolution)",
+        &["grid", "max |u-u_ghia|", "max |v-v_ghia|"],
+        &rows,
+    );
+    write_report("figb15_poiseuille", &[], vec![("rows", Json::Arr(jrows))]);
+}

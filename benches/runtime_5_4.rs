@@ -1,0 +1,124 @@
+//! §5.4 runtime comparison: coarse+NN hybrid vs the fine reference solve at
+//! matched accuracy (the paper's PICT+NN-vs-OpenFOAM/medium-res comparison,
+//! self-substituted per DESIGN.md §5), plus the xla-vs-native engine
+//! comparison for the AOT hot path and the solver-fraction profile.
+
+use pict::coordinator::experiments::tcf_sgs::*;
+use pict::mesh::VectorField;
+use pict::piso::State;
+use pict::runtime::ArtifactSet;
+use pict::util::bench::{print_table, write_report, Bench};
+use pict::util::json::Json;
+use pict::util::timer;
+
+fn main() {
+    // --- coarse+NN vs fine channel at matched statistics accuracy ---
+    let cfg = TcfSgsCfg { coarse_n: [8, 8, 4], ..Default::default() };
+    let target = reference_statistics(&cfg, [12, 14, 6], 120);
+    let result = train_tcf_sgs(&cfg, &target);
+    let steps = 60;
+    let bench = Bench::new(0, 1);
+    let r_nn = bench.run("coarse + learned SGS (60 steps)", || {
+        eval_sgs(&cfg, Some(&result.net), &target, steps)
+    });
+    let r_base = bench.run("coarse no-SGS     (60 steps)", || {
+        eval_sgs(&cfg, None, &target, steps)
+    });
+    // the fine reference: same horizon at the reference resolution (timing
+    // only — a zero-weight target keeps the loss hook grid-agnostic)
+    let fine_cfg = TcfSgsCfg { coarse_n: [12, 14, 6], dt: cfg.dt * 0.5, ..cfg.clone() };
+    let dummy_target = pict::train::StatsTarget {
+        mean: [vec![], vec![], vec![]],
+        stress: [vec![], vec![], vec![], vec![]],
+        w_mean: [0.0; 3],
+        w_stress: [0.0; 4],
+    };
+    let r_fine = bench.run("fine reference    (120 steps)", || {
+        eval_sgs(&fine_cfg, None, &dummy_target, steps * 2)
+    });
+    let acc_nn = eval_sgs(&cfg, Some(&result.net), &target, steps);
+    let acc_no = eval_sgs(&cfg, None, &target, steps);
+    let tail = |v: &[f64]| v[v.len() - 10..].iter().sum::<f64>() / 10.0;
+    let rows = vec![
+        vec![
+            "coarse+NN".into(),
+            format!("{:.2}s", r_nn.mean_s),
+            format!("{:.3e}", tail(&acc_nn)),
+        ],
+        vec![
+            "coarse no-SGS".into(),
+            format!("{:.2}s", r_base.mean_s),
+            format!("{:.3e}", tail(&acc_no)),
+        ],
+        vec!["fine reference".into(), format!("{:.2}s", r_fine.mean_s), "~0 (is the target)".into()],
+    ];
+    print_table("§5.4 — wall clock vs statistics error", &["config", "time", "stats err"], &rows);
+    println!(
+        "speedup of coarse+NN over fine: {:.1}x at {:.1}x lower error than coarse-no-model",
+        r_fine.mean_s / r_nn.mean_s,
+        tail(&acc_no) / tail(&acc_nn)
+    );
+    println!("paper: 40x over OpenFOAM at 36% lower aggregate error (full scale)");
+
+    // --- AOT engine: xla piso_step2d vs native step at the E4 shape ---
+    if let Ok(mut set) = ArtifactSet::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
+        use pict::mesh::gen;
+        use pict::piso::{PisoConfig, PisoSolver};
+        let (ny, nx) = (16usize, 18);
+        let mesh = gen::periodic_box2d(nx, ny, 1.0, 1.0);
+        let mut solver =
+            PisoSolver::new(mesh, PisoConfig { dt: 0.01, ..Default::default() }, 0.02);
+        let mut state = State::zeros(&solver.mesh);
+        for (i, c) in solver.mesh.centers.iter().enumerate() {
+            state.u.comp[0][i] = (6.28 * c[1]).cos() * 0.5;
+            state.u.comp[1][i] = (6.28 * c[0]).sin() * 0.3;
+        }
+        let src = VectorField::zeros(solver.mesh.ncells);
+        let rb = bench.run("native PISO step 18x16", || {
+            let mut s = state.clone();
+            solver.step(&mut s, &src, None)
+        });
+        let exe = set.get("piso_step2d").expect("artifact");
+        // row-major [ny][nx] layout: cell (i,j) -> j*nx + i matches x-fastest
+        let pack = |v: &Vec<f64>| v.clone();
+        let scal = |x: f64| vec![x];
+        let args = vec![
+            pack(&state.u.comp[0]),
+            pack(&state.u.comp[1]),
+            pack(&state.p),
+            vec![0.0; nx * ny],
+            vec![0.0; nx * ny],
+            scal(0.02),
+            scal(0.01),
+            scal(1.0 / nx as f64),
+            scal(1.0 / ny as f64),
+        ];
+        let rx = bench.run("xla AOT PISO step 18x16", || exe.run_f64(&args).unwrap());
+        // cross-validate numerics
+        let out = exe.run_f64(&args).unwrap();
+        let mut s = state.clone();
+        solver.step(&mut s, &src, None);
+        let err = pict::util::rel_l2(&out[0], &s.u.comp[0]);
+        println!("xla-vs-native u relative L2: {err:.2e} (AOT artifact reproduces the native step)");
+        assert!(err < 1e-5, "cross-engine mismatch {err}");
+        write_report(
+            "runtime_5_4",
+            &[rb, rx, r_nn, r_base, r_fine],
+            vec![("xla_native_rel_l2", Json::Num(err))],
+        );
+    } else {
+        println!("artifacts not built; skipping xla engine comparison (run `make artifacts`)");
+        write_report("runtime_5_4", &[r_nn, r_base, r_fine], vec![]);
+    }
+
+    // --- solver fraction profile (the paper's 70-90% linear-solve claim) ---
+    timer::set_profiling(true);
+    timer::reset_profile();
+    let mut s2 = coarse_solver(&cfg);
+    let mut st2 = State::zeros(&s2.mesh);
+    st2.u = perturbed_channel_init(&s2.mesh, cfg.l[1], 0.4, 3);
+    let src = forcing_field(&s2.mesh, cfg.forcing);
+    s2.run(&mut st2, &src, 30);
+    println!("\nPISO step profile:\n{}", timer::profile_table());
+    timer::set_profiling(false);
+}

@@ -1,0 +1,133 @@
+"""AOT lowering: jit + lower the Layer-2 entry points to HLO *text* and
+write them under artifacts/ with a manifest the Rust runtime consumes.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+# canonical shapes: the gradient-validation box of paper §4.2 (18x16 there;
+# rows must divide the Pallas tile, so we use ny=16, nx=18) and the E5
+# corrector resolution
+PISO_NY, PISO_NX = 16, 18
+CNN_NY, CNN_NX = 24, 48
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_piso_step():
+    f64 = jnp.float64
+    spec = jax.ShapeDtypeStruct((PISO_NY, PISO_NX), f64)
+    scalar = jax.ShapeDtypeStruct((), f64)
+
+    def entry(u, v, p, sx, sy, nu, dt, dx, dy):
+        return model.piso_step(u, v, p, sx, sy, nu, dt, dx, dy, tile=8)
+
+    lowered = jax.jit(entry).lower(
+        spec, spec, spec, spec, spec, scalar, scalar, scalar, scalar
+    )
+    return to_hlo_text(lowered), {
+        "entry": "piso_step2d",
+        "inputs": [
+            {"name": n, "shape": [PISO_NY, PISO_NX], "dtype": "f64"}
+            for n in ["u", "v", "p", "sx", "sy"]
+        ]
+        + [{"name": n, "shape": [], "dtype": "f64"} for n in ["nu", "dt", "dx", "dy"]],
+        "outputs": [
+            {"name": n, "shape": [PISO_NY, PISO_NX], "dtype": "f64"}
+            for n in ["u_next", "v_next", "p_next"]
+        ],
+    }
+
+
+def lower_stencil():
+    f64 = jnp.float64
+    xp = jax.ShapeDtypeStruct((PISO_NY + 2, PISO_NX + 2), f64)
+    c = jax.ShapeDtypeStruct((PISO_NY, PISO_NX), f64)
+
+    def entry(x_pad, cc, cxm, cxp, cym, cyp):
+        from .kernels import stencil
+
+        return (stencil.stencil_apply_2d(x_pad, cc, cxm, cxp, cym, cyp, tile=8),)
+
+    lowered = jax.jit(entry).lower(xp, c, c, c, c, c)
+    return to_hlo_text(lowered), {
+        "entry": "stencil_matvec2d",
+        "inputs": [{"name": "x_pad", "shape": [PISO_NY + 2, PISO_NX + 2], "dtype": "f64"}]
+        + [
+            {"name": n, "shape": [PISO_NY, PISO_NX], "dtype": "f64"}
+            for n in ["cc", "cxm", "cxp", "cym", "cyp"]
+        ],
+        "outputs": [{"name": "y", "shape": [PISO_NY, PISO_NX], "dtype": "f64"}],
+    }
+
+
+def lower_cnn():
+    f32 = jnp.float32
+    params = model.cnn_init_params(jax.random.PRNGKey(0), dtype=f32)
+    flat, tree = jax.tree_util.tree_flatten(params)
+    x = jax.ShapeDtypeStruct((2, CNN_NY, CNN_NX), f32)
+
+    def entry(x, *flat_params):
+        p = jax.tree_util.tree_unflatten(tree, list(flat_params))
+        return (model.cnn_forward(p, x),)
+
+    specs = [jax.ShapeDtypeStruct(f.shape, f.dtype) for f in flat]
+    lowered = jax.jit(entry).lower(x, *specs)
+    meta = {
+        "entry": "cnn_corrector2d",
+        "inputs": [{"name": "x", "shape": [2, CNN_NY, CNN_NX], "dtype": "f32"}]
+        + [
+            {"name": f"p{i}", "shape": list(f.shape), "dtype": "f32"}
+            for i, f in enumerate(flat)
+        ],
+        "outputs": [{"name": "s", "shape": [2, CNN_NY, CNN_NX], "dtype": "f32"}],
+    }
+    return to_hlo_text(lowered), meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"artifacts": []}
+    for name, fn in [
+        ("stencil_matvec2d", lower_stencil),
+        ("piso_step2d", lower_piso_step),
+        ("cnn_corrector2d", lower_cnn),
+    ]:
+        text, meta = fn()
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta["file"] = f"{name}.hlo.txt"
+        manifest["artifacts"].append(meta)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

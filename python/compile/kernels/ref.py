@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness contract.
+
+Every kernel in this package must match its reference here to float
+round-off; pytest (with hypothesis shape/dtype sweeps) enforces it.
+"""
+
+import jax.numpy as jnp
+
+
+def stencil_apply_2d_ref(x_pad, cc, cxm, cxp, cym, cyp):
+    """Reference 5-point stencil on a ghost-padded field (pure jnp)."""
+    center = x_pad[1:-1, 1:-1]
+    xm = x_pad[1:-1, :-2]
+    xp_ = x_pad[1:-1, 2:]
+    ym = x_pad[:-2, 1:-1]
+    yp = x_pad[2:, 1:-1]
+    return cc * center + cxm * xm + cxp * xp_ + cym * ym + cyp * yp
+
+
+def cg_ref(apply_a, b, x0, iters):
+    """Textbook CG with a fixed iteration count (matches kernels.solve.cg)."""
+    x = x0
+    r = b - apply_a(x)
+    p = r
+    rs = jnp.vdot(r, r)
+    for _ in range(iters):
+        ap = apply_a(p)
+        alpha = rs / jnp.maximum(jnp.vdot(p, ap), 1e-300)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.vdot(r, r)
+        p = r + (rs_new / jnp.maximum(rs, 1e-300)) * p
+        rs = rs_new
+    return x

@@ -1,0 +1,94 @@
+"""Fixed-iteration Krylov solvers built on the Pallas stencil kernel.
+
+These are the L2 building blocks for the AOT PISO step: a CG for the
+(symmetric) pressure system and a BiCGStab for the advection-diffusion
+system, both with a compile-time iteration count (`lax.fori_loop`) so the
+whole solve lowers into one HLO module with no host round-trips.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+EPS = 1e-300
+
+
+def _safe_div(num, den):
+    """num/den, but 0 when the denominator has collapsed to round-off —
+    the standard Krylov breakdown guard (sign-preserving, unlike max)."""
+    ok = jnp.abs(den) > 1e-290
+    return jnp.where(ok, num / jnp.where(ok, den, 1.0), 0.0)
+
+
+def cg(apply_a, b, x0, iters, project_nullspace=False):
+    """Fixed-iteration conjugate gradient; optionally keeps iterates
+    mean-free (constant-nullspace deflation for periodic Laplacians)."""
+
+    def proj(v):
+        return v - jnp.mean(v) if project_nullspace else v
+
+    b = proj(b)
+
+    bnorm2 = jnp.vdot(b, b)
+
+    def body(_, carry):
+        x, r, p, rs = carry
+        done = rs <= 1e-28 * (bnorm2 + 1e-30)
+        ap = proj(apply_a(p))
+        alpha = _safe_div(rs, jnp.vdot(p, ap))
+        x_new = x + alpha * p
+        r_new = r - alpha * ap
+        rs_new = jnp.vdot(r_new, r_new)
+        beta = _safe_div(rs_new, rs)
+        p_new = r_new + beta * p
+        # freeze once converged to round-off (prevents breakdown noise)
+        keep = lambda old, new: jnp.where(done, old, new)
+        return (keep(x, x_new), keep(r, r_new), keep(p, p_new), keep(rs, rs_new))
+
+    x0 = proj(x0)
+    r0 = proj(b - apply_a(x0))
+    x, _, _, _ = lax.fori_loop(0, iters, body, (x0, r0, r0, jnp.vdot(r0, r0)))
+    return proj(x)
+
+
+def bicgstab(apply_a, b, x0, iters):
+    """Fixed-iteration BiCGStab (unpreconditioned)."""
+
+    bnorm2 = jnp.vdot(b, b)
+
+    def body(_, carry):
+        x, r, r0, p, v, rho, alpha, omega = carry
+        done = jnp.vdot(r, r) <= 1e-28 * (bnorm2 + 1e-30)
+        rho_new = jnp.vdot(r0, r)
+        beta = _safe_div(rho_new, rho) * _safe_div(alpha, omega)
+        p_new = r + beta * (p - omega * v)
+        v_new = apply_a(p_new)
+        alpha_new = _safe_div(rho_new, jnp.vdot(r0, v_new))
+        s = r - alpha_new * v_new
+        t = apply_a(s)
+        omega_new = _safe_div(jnp.vdot(t, s), jnp.vdot(t, t))
+        x_new = x + alpha_new * p_new + omega_new * s
+        r_new = s - omega_new * t
+        keep = lambda old, new: jnp.where(done, old, new)
+        return (
+            keep(x, x_new), keep(r, r_new), r0, keep(p, p_new), keep(v, v_new),
+            keep(rho, rho_new), keep(alpha, alpha_new), keep(omega, omega_new),
+        )
+
+    r0 = b - apply_a(x0)
+    init = (x0, r0, r0, jnp.zeros_like(b), jnp.zeros_like(b), jnp.asarray(1.0, b.dtype),
+            jnp.asarray(1.0, b.dtype), jnp.asarray(1.0, b.dtype))
+    x, *_ = lax.fori_loop(0, iters, body, init)
+    return x
+
+
+def make_periodic_stencil_apply(cc, cxm, cxp, cym, cyp, tile=8):
+    """Stencil matvec closure over a periodic 2D box using the L1 kernel."""
+    from . import stencil
+
+    def apply_a(x):
+        return stencil.stencil_apply_2d(
+            stencil.pad_periodic(x), cc, cxm, cxp, cym, cyp, tile=tile
+        )
+
+    return apply_a

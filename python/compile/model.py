@@ -1,0 +1,152 @@
+"""Layer-2 JAX model: the full PISO step on a uniform periodic 2D box,
+mirroring the Rust discretization exactly (fvm/assemble.rs conventions:
+1/J-scaled momentum rows, collocated central fluxes, negated pressure
+matrix, two correctors). Lowered once by `aot.py` to HLO text and executed
+from the Rust hot path via PJRT — Python is never on the request path.
+
+Also defines the corrector-CNN forward (periodic multi-block convolution
+degenerates to wrap padding on a single periodic block).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import solve, stencil
+
+jax.config.update("jax_enable_x64", True)
+
+
+def piso_coefficients(u, v, nu, dt, dx, dy):
+    """Stencil coefficients of the advection-diffusion matrix C (1/J-scaled).
+
+    u, v: (ny, nx) velocity components; returns (cc, cxm, cxp, cym, cyp).
+    """
+    jac = dx * dy
+    a00 = jac / (dx * dx)  # alpha_00 = J T00^2
+    a11 = jac / (dy * dy)
+    ux = jac * u / dx  # contravariant U^0
+    uy = jac * v / dy  # contravariant U^1
+    uf_xp = 0.5 * (ux + jnp.roll(ux, -1, axis=1))
+    uf_xm = 0.5 * (ux + jnp.roll(ux, 1, axis=1))
+    uf_yp = 0.5 * (uy + jnp.roll(uy, -1, axis=0))
+    uf_ym = 0.5 * (uy + jnp.roll(uy, 1, axis=0))
+    inv_j = 1.0 / jac
+    dnu_x = a00 * nu * inv_j
+    dnu_y = a11 * nu * inv_j
+    cxp = 0.5 * uf_xp * inv_j - dnu_x
+    cxm = -0.5 * uf_xm * inv_j - dnu_x
+    cyp = 0.5 * uf_yp * inv_j - dnu_y
+    cym = -0.5 * uf_ym * inv_j - dnu_y
+    cc = (
+        1.0 / dt
+        + 0.5 * (uf_xp - uf_xm) * inv_j
+        + 0.5 * (uf_yp - uf_ym) * inv_j
+        + 2.0 * (dnu_x + dnu_y)
+    )
+    return cc, cxm, cxp, cym, cyp
+
+
+def pressure_coefficients(a_inv, dx, dy):
+    """Stencil coefficients of M = -P (negated pressure Laplacian)."""
+    jac = dx * dy
+    a00 = jac / (dx * dx)
+    a11 = jac / (dy * dy)
+    m_xp = -0.5 * a00 * (a_inv + jnp.roll(a_inv, -1, axis=1))
+    m_xm = -0.5 * a00 * (a_inv + jnp.roll(a_inv, 1, axis=1))
+    m_yp = -0.5 * a11 * (a_inv + jnp.roll(a_inv, -1, axis=0))
+    m_ym = -0.5 * a11 * (a_inv + jnp.roll(a_inv, 1, axis=0))
+    mc = -(m_xp + m_xm + m_yp + m_ym)
+    return mc, m_xm, m_xp, m_ym, m_yp
+
+
+def grad_p(p, dx, dy):
+    """Collocated central pressure gradient (A.20) on a periodic box."""
+    gx = (jnp.roll(p, -1, axis=1) - jnp.roll(p, 1, axis=1)) / (2.0 * dx)
+    gy = (jnp.roll(p, -1, axis=0) - jnp.roll(p, 1, axis=0)) / (2.0 * dy)
+    return gx, gy
+
+def divergence(hx, hy, dx, dy):
+    """Volume-form divergence with collocated central interpolation (A.18)."""
+    jac = dx * dy
+    ux = jac * hx / dx
+    uy = jac * hy / dy
+    return 0.5 * (jnp.roll(ux, -1, axis=1) - jnp.roll(ux, 1, axis=1)) + 0.5 * (
+        jnp.roll(uy, -1, axis=0) - jnp.roll(uy, 1, axis=0)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("adv_iters", "p_iters", "n_correctors", "tile")
+)
+def piso_step(
+    u, v, p, sx, sy, nu, dt, dx, dy, adv_iters=60, p_iters=120, n_correctors=2, tile=8
+):
+    """One PISO step on a uniform fully-periodic 2D box.
+
+    Mirrors `PisoSolver::step` for this mesh class; the stencil matvecs run
+    through the Layer-1 Pallas kernel.
+    """
+    cc, cxm, cxp, cym, cyp = piso_coefficients(u, v, nu, dt, dx, dy)
+    apply_c = solve.make_periodic_stencil_apply(cc, cxm, cxp, cym, cyp, tile=tile)
+
+    gpx, gpy = grad_p(p, dx, dy)
+    rhs_base_x = u / dt + sx
+    rhs_base_y = v / dt + sy
+    u_star = solve.bicgstab(apply_c, rhs_base_x - gpx, u, adv_iters)
+    v_star = solve.bicgstab(apply_c, rhs_base_y - gpy, v, adv_iters)
+
+    a_inv = 1.0 / cc
+    mc, m_xm, m_xp, m_ym, m_yp = pressure_coefficients(a_inv, dx, dy)
+    apply_m = solve.make_periodic_stencil_apply(mc, m_xm, m_xp, m_ym, m_yp, tile=tile)
+    apply_h = solve.make_periodic_stencil_apply(
+        jnp.zeros_like(cc), cxm, cxp, cym, cyp, tile=tile
+    )
+
+    u_cur, v_cur, p_cur = u_star, v_star, p
+    for _ in range(n_correctors):
+        hx = a_inv * (rhs_base_x - apply_h(u_cur))
+        hy = a_inv * (rhs_base_y - apply_h(v_cur))
+        div = divergence(hx, hy, dx, dy)
+        p_cur = solve.cg(apply_m, -div, p_cur, p_iters, project_nullspace=True)
+        gx, gy = grad_p(p_cur, dx, dy)
+        u_cur = hx - a_inv * gx
+        v_cur = hy - a_inv * gy
+    return u_cur, v_cur, p_cur
+
+
+# ---------------------------------------------------------------------------
+# Corrector CNN (paper §5.1 architecture, periodic padding)
+# ---------------------------------------------------------------------------
+
+CNN_LAYERS = [(16, 7), (32, 5), (64, 5), (64, 3), (64, 3), (64, 1), (2, 1)]
+
+
+def cnn_init_params(key, cin=2, layers=CNN_LAYERS, dtype=jnp.float32):
+    """He-initialized parameters for the 7-layer corrector CNN."""
+    params = []
+    prev = cin
+    for cout, k in layers:
+        key, sub = jax.random.split(key)
+        fan_in = prev * k * k
+        w = jax.random.normal(sub, (cout, prev, k, k), dtype) * jnp.sqrt(2.0 / fan_in)
+        b = jnp.zeros((cout,), dtype)
+        params.append((w, b))
+        prev = cout
+    return params
+
+
+def cnn_forward(params, x):
+    """x: (cin, ny, nx) -> (2, ny, nx); periodic padding, ReLU except last."""
+    h = x
+    for li, (w, b) in enumerate(params):
+        k = w.shape[-1]
+        pad = k // 2
+        hp = jnp.pad(h, ((0, 0), (pad, pad), (pad, pad)), mode="wrap")
+        h = jax.lax.conv_general_dilated(
+            hp[None], w, (1, 1), "VALID", dimension_numbers=("NCHW", "OIHW", "NCHW")
+        )[0] + b[:, None, None]
+        if li + 1 < len(params):
+            h = jax.nn.relu(h)
+    return h

@@ -1,0 +1,125 @@
+"""L1 kernel correctness: the Pallas stencil against the pure-jnp oracle,
+with hypothesis sweeping shapes and dtypes (the session's CORE correctness
+signal for the kernel layer)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, solve, stencil
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    tile=st.sampled_from([4, 8]),
+    nx=st.integers(min_value=3, max_value=33),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stencil_matches_ref_hypothesis(tiles, tile, nx, dtype, seed):
+    ny = tiles * tile
+    rng = np.random.default_rng(seed)
+    x_pad = rand(rng, (ny + 2, nx + 2), dtype)
+    coeffs = [rand(rng, (ny, nx), dtype) for _ in range(5)]
+    got = stencil.stencil_apply_2d(x_pad, *coeffs, tile=tile)
+    want = ref.stencil_apply_2d_ref(x_pad, *coeffs)
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_stencil_identity_kernel():
+    ny, nx = 8, 6
+    x = jnp.arange(ny * nx, dtype=jnp.float64).reshape(ny, nx)
+    one = jnp.ones((ny, nx))
+    zero = jnp.zeros((ny, nx))
+    y = stencil.stencil_apply_2d(stencil.pad_periodic(x), one, zero, zero, zero, zero)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+
+
+def test_stencil_periodic_shift():
+    ny, nx = 8, 5
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((ny, nx)))
+    one = jnp.ones((ny, nx))
+    zero = jnp.zeros((ny, nx))
+    # pure +x neighbor pick == roll by -1 along axis 1
+    y = stencil.stencil_apply_2d(stencil.pad_periodic(x), zero, zero, one, zero, zero)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(jnp.roll(x, -1, axis=1)))
+
+
+def test_cg_solves_periodic_poisson():
+    ny, nx = 16, 18
+    # M = negated periodic Laplacian (SPD on the mean-free subspace)
+    one = jnp.ones((ny, nx), jnp.float64)
+    apply_m = solve.make_periodic_stencil_apply(4.0 * one, -one, -one, -one, -one)
+    rng = np.random.default_rng(1)
+    b = jnp.asarray(rng.standard_normal((ny, nx)))
+    b = b - jnp.mean(b)
+    x = solve.cg(apply_m, b, jnp.zeros_like(b), 300, project_nullspace=True)
+    np.testing.assert_allclose(np.asarray(apply_m(x) - b), 0.0, atol=1e-8)
+
+
+def test_cg_matches_ref():
+    ny, nx = 8, 9
+    one = jnp.ones((ny, nx), jnp.float64)
+    apply_m = solve.make_periodic_stencil_apply(5.0 * one, -one, -one, -one, -one)
+    rng = np.random.default_rng(2)
+    b = jnp.asarray(rng.standard_normal((ny, nx)))
+    x0 = jnp.zeros_like(b)
+    got = solve.cg(apply_m, b, x0, 25)
+    want = ref.cg_ref(apply_m, b, x0, 25)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-10)
+
+
+def test_bicgstab_solves_nonsymmetric():
+    ny, nx = 8, 8
+    one = jnp.ones((ny, nx), jnp.float64)
+    # asymmetric advection-diffusion-like stencil, diagonally dominant
+    apply_a = solve.make_periodic_stencil_apply(
+        5.0 * one, -1.5 * one, -0.5 * one, -1.2 * one, -0.8 * one
+    )
+    rng = np.random.default_rng(3)
+    xs = jnp.asarray(rng.standard_normal((ny, nx)))
+    b = apply_a(xs)
+    x = solve.bicgstab(apply_a, b, jnp.zeros_like(b), 200)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(xs), rtol=1e-7, atol=1e-8)
+
+
+def test_stencil_rejects_non_divisible_tile():
+    ny, nx = 10, 8  # 10 % 8 != 0
+    x = jnp.zeros((ny + 2, nx + 2))
+    c = jnp.zeros((ny, nx))
+    with pytest.raises(AssertionError):
+        stencil.stencil_apply_2d(x, c, c, c, c, c, tile=8)
+
+
+def test_pad_helpers_shapes_and_values():
+    x = jnp.arange(12.0).reshape(3, 4)
+    pw = stencil.pad_periodic(x)
+    pe = stencil.pad_neumann(x)
+    pz = stencil.pad_zero(x)
+    assert pw.shape == pe.shape == pz.shape == (5, 6)
+    assert float(pw[0, 1]) == float(x[-1, 0])  # wrap
+    assert float(pe[0, 1]) == float(x[0, 0])   # replicate
+    assert float(pz[0, 1]) == 0.0              # zero
+
+
+def test_bicgstab_handles_exact_initial_solution():
+    ny, nx = 8, 8
+    one = jnp.ones((ny, nx), jnp.float64)
+    apply_a = solve.make_periodic_stencil_apply(5.0 * one, -one, -one, -one, -one)
+    rng = np.random.default_rng(4)
+    xs = jnp.asarray(rng.standard_normal((ny, nx)))
+    b = apply_a(xs)
+    x = solve.bicgstab(apply_a, b, xs, 50)  # x0 is already the solution
+    assert np.isfinite(np.asarray(x)).all()
+    np.testing.assert_allclose(np.asarray(x), np.asarray(xs), rtol=1e-10)

@@ -1,0 +1,25 @@
+//! The DtO/OtD hybrid adjoint engine (paper §2.3–2.4, Appendix A.5).
+//!
+//! The forward PISO step records every intermediate on a
+//! [`StepRecord`](crate::piso::StepRecord) (DtO tape); the backward pass
+//! chains hand-derived per-operation VJPs, treating the two embedded linear
+//! solves in OtD fashion: for `A x = b`, the incoming gradient ∂x is
+//! propagated by solving `Aᵀ ∂b = ∂x` and the matrix gradient is the sparse
+//! outer product `∂A = −∂b ⊗ x` (Giles 2008).
+//!
+//! [`GradientPaths`] selects which backward linear solves participate,
+//! reproducing the paper's Adv+P / Adv / P / none variants (§2.4): even
+//! with both solves skipped, the `J_none` bypass paths of eq. (8) still
+//! deliver per-cell gradients from output to input.
+//!
+//! Omitted (as in the paper, A.29/A.41): gradients of the non-orthogonal
+//! deferred-correction terms and of the mesh transformation metrics. The
+//! advective-outflow boundary update is treated as an external state
+//! transition (no gradient), like the paper's warm-up steps.
+
+pub mod ops;
+pub mod rollout;
+pub mod step;
+
+pub use rollout::{rollout_backward, RolloutTape};
+pub use step::{backward_step, GradientPaths, StepGrads};

@@ -1,0 +1,307 @@
+//! Backward pass of one full PISO step: chains the per-op VJPs of `ops`
+//! with the OtD adjoint linear solves, honoring the selected
+//! [`GradientPaths`] (paper §2.4).
+
+use super::ops;
+use crate::fvm;
+use crate::linsolve::{bicgstab, cg, Jacobi, SolveOpts};
+use crate::mesh::{Mesh, VectorField};
+use crate::piso::{PisoSolver, StepRecord};
+use crate::util::timer;
+
+/// Which backward linear solves to include (§2.4): `adv` ⇒ J^Adv (transpose
+/// BiCGStab through the predictor), `pressure` ⇒ J^P (transpose CG through
+/// each corrector). Both false = the cheap `J_none` bypass gradients only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GradientPaths {
+    pub adv: bool,
+    pub pressure: bool,
+}
+
+impl GradientPaths {
+    pub const FULL: GradientPaths = GradientPaths { adv: true, pressure: true };
+    pub const ADV: GradientPaths = GradientPaths { adv: true, pressure: false };
+    pub const P: GradientPaths = GradientPaths { adv: false, pressure: true };
+    pub const NONE: GradientPaths = GradientPaths { adv: false, pressure: false };
+
+    pub fn label(&self) -> &'static str {
+        match (self.adv, self.pressure) {
+            (true, true) => "Adv+P",
+            (true, false) => "Adv",
+            (false, true) => "P",
+            (false, false) => "none",
+        }
+    }
+}
+
+/// Gradients of one PISO step w.r.t. its differentiable inputs.
+#[derive(Clone, Debug)]
+pub struct StepGrads {
+    /// ∂L/∂u^{n-1}.
+    pub du_n: VectorField,
+    /// ∂L/∂p^{n-1} (the previous pressure feeds the predictor RHS).
+    pub dp_in: Vec<f64>,
+    /// ∂L/∂S (per-cell source; this is the NN-training signal).
+    pub dsource: VectorField,
+    /// ∂L/∂ν for spatially uniform viscosity.
+    pub dnu: f64,
+    /// ∂L/∂(Dirichlet boundary velocities), per bc-value set.
+    pub dbc: Vec<Vec<[f64; 3]>>,
+}
+
+impl StepGrads {
+    pub fn zeros(mesh: &Mesh) -> StepGrads {
+        StepGrads {
+            du_n: VectorField::zeros(mesh.ncells),
+            dp_in: vec![0.0; mesh.ncells],
+            dsource: VectorField::zeros(mesh.ncells),
+            dnu: 0.0,
+            dbc: mesh.bc_values.iter().map(|b| vec![[0.0; 3]; b.vel.len()]).collect(),
+        }
+    }
+}
+
+/// Backpropagate `(du_out, dp_out)` through the recorded PISO step.
+pub fn backward_step(
+    solver: &PisoSolver,
+    rec: &StepRecord,
+    du_out: &VectorField,
+    dp_out: &[f64],
+    paths: GradientPaths,
+) -> StepGrads {
+    let mesh = &solver.mesh;
+    let dim = mesh.dim;
+    let n = mesh.ncells;
+    let dt = rec.dt;
+
+    // reconstruct the step's matrices from the tape
+    let mut c = solver.c.clone();
+    c.vals = rec.c_vals.clone();
+    let mut m = solver.pmat.clone();
+    m.vals = rec.pmat_vals.clone();
+    let a_inv = &rec.a_inv;
+
+    let mut grads = StepGrads::zeros(mesh);
+    let mut d_c = vec![0.0; c.nnz()];
+    let mut d_m = vec![0.0; m.nnz()];
+    let mut d_a_inv = vec![0.0; n];
+    let mut d_rhs_base = VectorField::zeros(n);
+
+    // gradient flowing into the velocity entering the current corrector
+    let mut du = du_out.clone();
+    // gradient on the pressure produced by the current corrector
+    let mut dp: Vec<f64> = dp_out.to_vec();
+
+    // ---- correctors, backwards ----
+    for r in (0..rec.correctors.len()).rev() {
+        let cr = &rec.correctors[r];
+
+        // u_r = h_r − a_inv ⊙ ∇p_r      (A.19/A.25–A.27)
+        let g_r = fvm::pressure_gradient(mesh, &cr.p);
+        let mut dh = du.clone();
+        let mut dg = VectorField::zeros(n);
+        for comp in 0..dim {
+            for cell in 0..n {
+                let d = du.comp[comp][cell];
+                d_a_inv[cell] -= g_r.comp[comp][cell] * d;
+                dg.comp[comp][cell] = -a_inv[cell] * d;
+            }
+        }
+        let mut dp_r = dp.clone();
+        let dp_from_g = ops::pressure_gradient_adjoint(mesh, &dg);
+        for cell in 0..n {
+            dp_r[cell] += dp_from_g[cell];
+        }
+
+        // pressure solve M p = −div  (OtD adjoint: M λ = dp_r, M symmetric)
+        let mut dd = vec![0.0; n];
+        if paths.pressure {
+            let mut lambda = vec![0.0; n];
+            let precond = Jacobi::new(&m);
+            timer::scoped("adj_p_solve", || {
+                cg(
+                    &m,
+                    &dp_r,
+                    &mut lambda,
+                    &precond,
+                    true,
+                    SolveOpts { tol: solver.cfg.p_opts.tol, max_iter: solver.cfg.p_opts.max_iter, transpose: false },
+                )
+            });
+            // rhs was −div ⇒ ∂(div) = −λ ; ∂M = −λ ⊗ p
+            for cell in 0..n {
+                dd[cell] = -lambda[cell];
+            }
+            for row in 0..n {
+                if lambda[row] == 0.0 {
+                    continue;
+                }
+                for k in m.row_ptr[row]..m.row_ptr[row + 1] {
+                    d_m[k] -= lambda[row] * cr.p[m.col_idx[k] as usize];
+                }
+            }
+        }
+
+        // div = ∇·h (+ boundary flux)   (A.30 + A.34-like bc term)
+        let dh_from_div = ops::divergence_adjoint(mesh, &dd);
+        dh.axpy(1.0, &dh_from_div);
+        ops::divergence_bc_adjoint(mesh, &dd, &mut grads.dbc);
+
+        // h = a_inv ⊙ (rhs_base − H u_prev)   (A.17/A.33–A.39)
+        let mut du_prev = VectorField::zeros(n);
+        for comp in 0..dim {
+            for cell in 0..n {
+                let d = dh.comp[comp][cell];
+                if d == 0.0 {
+                    continue;
+                }
+                // q = rhs_base − H u_prev = h / a_inv
+                let q = cr.h.comp[comp][cell] / a_inv[cell];
+                d_a_inv[cell] += q * d;
+                d_rhs_base.comp[comp][cell] += a_inv[cell] * d;
+            }
+            // du_prev = −Hᵀ (a_inv ⊙ dh) ; dH = −(a_inv dh) ⊗ u_prev (A.39)
+            for row in 0..n {
+                let w = a_inv[row] * dh.comp[comp][row];
+                if w == 0.0 {
+                    continue;
+                }
+                for k in c.row_ptr[row]..c.row_ptr[row + 1] {
+                    let col = c.col_idx[k] as usize;
+                    if col != row {
+                        du_prev.comp[comp][col] -= c.vals[k] * w;
+                        d_c[k] -= w * cr.u_in.comp[comp][col];
+                    }
+                }
+            }
+        }
+
+        du = du_prev;
+        // earlier correctors' pressures only seeded CG initial guesses —
+        // no mathematical dependence, so the pressure cotangent resets
+        dp = vec![0.0; n];
+    }
+
+    // ---- predictor: C u* = rhs_base − ∇p_in ----
+    if paths.adv {
+        for comp in 0..dim {
+            let mut lambda = vec![0.0; n];
+            let precond = Jacobi::new(&c);
+            timer::scoped("adj_adv_solve", || {
+                bicgstab(
+                    &c,
+                    &du.comp[comp],
+                    &mut lambda,
+                    &precond,
+                    SolveOpts { tol: solver.cfg.adv_opts.tol, max_iter: solver.cfg.adv_opts.max_iter, transpose: true },
+                )
+            });
+            // ∂rhs_pred = λ ; ∂C = −λ ⊗ u*
+            for cell in 0..n {
+                d_rhs_base.comp[comp][cell] += lambda[cell];
+            }
+            for row in 0..n {
+                if lambda[row] == 0.0 {
+                    continue;
+                }
+                for k in c.row_ptr[row]..c.row_ptr[row + 1] {
+                    d_c[k] -= lambda[row] * rec.u_star.comp[comp][c.col_idx[k] as usize];
+                }
+            }
+            // rhs_pred = rhs_base − ∇p_in ⇒ ∂(∇p_in) = −λ
+            let mut dg = VectorField::zeros(n);
+            dg.comp[comp] = lambda.iter().map(|v| -v).collect();
+            let dp_in = ops::pressure_gradient_adjoint(mesh, &dg);
+            for cell in 0..n {
+                grads.dp_in[cell] += dp_in[cell];
+            }
+        }
+    }
+
+    // ---- M = assemble_pressure(a_inv)  ⇒ d_a_inv ----
+    ops::assemble_pressure_adjoint(mesh, &m, &d_m, &mut d_a_inv);
+
+    // ---- a_inv = 1/diag(C)  ⇒ dC_diag −= a_inv² d_a_inv (A.38-like) ----
+    for cell in 0..n {
+        let k = c.find(cell, cell).expect("diag");
+        d_c[k] -= a_inv[cell] * a_inv[cell] * d_a_inv[cell];
+    }
+
+    // ---- C = assemble_c(u_n, ν, dt) (A.40–A.41) ----
+    ops::assemble_c_adjoint(mesh, &c, &d_c, &solver.nu, &mut grads.du_n, &mut grads.dnu);
+
+    // ---- rhs_base = bflux(ν, bc) + u_n/Δt + S (A.42–A.45) ----
+    for comp in 0..dim {
+        for cell in 0..n {
+            let d = d_rhs_base.comp[comp][cell];
+            grads.du_n.comp[comp][cell] += d / dt;
+            grads.dsource.comp[comp][cell] += d;
+        }
+    }
+    ops::boundary_flux_adjoint(mesh, &solver.nu, &d_rhs_base, &mut grads.dnu, &mut grads.dbc);
+
+    grads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::gen;
+    use crate::piso::{PisoConfig, State};
+
+    fn empty_record() -> StepRecord {
+        StepRecord {
+            dt: 0.0,
+            u_n: VectorField::zeros(0),
+            p_in: vec![],
+            source: VectorField::zeros(0),
+            c_vals: vec![],
+            a_inv: vec![],
+            pmat_vals: vec![],
+            rhs_base: VectorField::zeros(0),
+            grad_p_in: VectorField::zeros(0),
+            u_star: VectorField::zeros(0),
+            correctors: vec![],
+        }
+    }
+
+    /// Backward step runs and produces finite gradients for all paths.
+    #[test]
+    fn backward_produces_finite_grads() {
+        let mesh = gen::periodic_box2d(8, 6, 1.0, 1.0);
+        let mut solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: 0.02, ..Default::default() },
+            0.02,
+        );
+        let mut state = State::zeros(&solver.mesh);
+        for (i, c) in solver.mesh.centers.iter().enumerate() {
+            state.u.comp[0][i] = (6.28 * c[1]).cos() * 0.5;
+            state.u.comp[1][i] = (6.28 * c[0]).sin() * 0.3;
+        }
+        let src = VectorField::zeros(solver.mesh.ncells);
+        let mut rec = empty_record();
+        solver.step(&mut state, &src, Some(&mut rec));
+        let du_out = {
+            let mut f = VectorField::zeros(solver.mesh.ncells);
+            f.comp[0].iter_mut().for_each(|v| *v = 1.0);
+            f
+        };
+        let dp_out = vec![0.0; solver.mesh.ncells];
+        for paths in [GradientPaths::FULL, GradientPaths::ADV, GradientPaths::P, GradientPaths::NONE]
+        {
+            let g = backward_step(&solver, &rec, &du_out, &dp_out, paths);
+            let s: f64 = g.du_n.comp[0].iter().sum();
+            assert!(s.is_finite(), "{}: non-finite grads", paths.label());
+            // some gradient must reach the input even for `none`
+            let norm: f64 = g.du_n.comp[0].iter().map(|v| v * v).sum();
+            assert!(norm > 0.0, "{}: zero gradient", paths.label());
+        }
+    }
+
+    #[test]
+    fn path_labels() {
+        assert_eq!(GradientPaths::FULL.label(), "Adv+P");
+        assert_eq!(GradientPaths::NONE.label(), "none");
+    }
+}

@@ -1,0 +1,257 @@
+//! E5/E6 — learned corrector training for the 2D scenarios (vortex street
+//! §5.1, backward-facing step §5.2): a multi-block CNN estimates a
+//! correcting force S_θ that pulls a coarse simulation toward the
+//! coordinate-resampled trajectory of a fine reference simulation, trained
+//! by backpropagating an unrolled MSE loss through the PISO solver and the
+//! network (curriculum over the unroll length as in the paper).
+
+use crate::adjoint::{backward_step, GradientPaths};
+use crate::adjoint::rollout::empty_record;
+use crate::fvm;
+use crate::mesh::{field, Mesh, VectorField};
+use crate::nn::{Cnn, LayerCfg};
+use crate::piso::{PisoSolver, State};
+use crate::train::{mse_loss_grad, Adam, Optimizer};
+use crate::util;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Corrector2dCfg {
+    /// Fine steps per coarse step (temporal downsampling factor).
+    pub t_ratio: usize,
+    /// Number of coarse-aligned reference frames to generate.
+    pub n_frames: usize,
+    /// Warm-up fine steps before recording (let the flow develop).
+    pub fine_warmup: usize,
+    /// Unroll lengths of the curriculum (e.g. [4, 8] — paper: 4→8→16).
+    pub curriculum: Vec<usize>,
+    /// Optimizer steps per curriculum stage.
+    pub opt_steps_per_stage: usize,
+    pub lr: f64,
+    /// Gradient paths for backprop through the solver (the paper's base
+    /// trainings use the cheap `none` variant, fine-tunings add Adv).
+    pub paths: GradientPaths,
+    /// λ for the divergence gradient modification (eq. 11); 0 = off.
+    pub lambda_div: f64,
+    /// Output scale applied to the raw network output (keeps early-training
+    /// corrections small relative to the dynamics; the paper clamps the
+    /// forcing instead).
+    pub output_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for Corrector2dCfg {
+    fn default() -> Self {
+        Corrector2dCfg {
+            t_ratio: 2,
+            n_frames: 60,
+            fine_warmup: 80,
+            curriculum: vec![2, 4],
+            opt_steps_per_stage: 40,
+            lr: 3e-3,
+            paths: GradientPaths::NONE,
+            lambda_div: 1e-3,
+            output_scale: 0.05,
+            seed: 0xC0DE,
+        }
+    }
+}
+
+pub struct Corrector2dResult {
+    pub net: Cnn,
+    pub train_losses: Vec<f64>,
+    /// (step, mse_no_model, mse_nn, corr_no_model, corr_nn) at checkpoints.
+    pub eval: Vec<(usize, f64, f64, f64, f64)>,
+}
+
+/// Reference frames: run the fine solver and resample every `t_ratio`-th
+/// state onto the coarse mesh.
+pub fn make_reference_frames(
+    fine: &mut PisoSolver,
+    fine_state: &mut State,
+    coarse_mesh: &Mesh,
+    cfg: &Corrector2dCfg,
+) -> Vec<VectorField> {
+    let src = VectorField::zeros(fine.mesh.ncells);
+    fine.run(fine_state, &src, cfg.fine_warmup);
+    let mut frames = Vec::with_capacity(cfg.n_frames);
+    for _ in 0..cfg.n_frames {
+        let mut coarse_u = VectorField::zeros(coarse_mesh.ncells);
+        for c in 0..2 {
+            coarse_u.comp[c] =
+                field::resample(&fine.mesh, &fine_state.u.comp[c], coarse_mesh);
+        }
+        frames.push(coarse_u);
+        fine.run(fine_state, &src, cfg.t_ratio);
+    }
+    frames
+}
+
+/// Default corrector architecture (scaled-down version of the paper's
+/// 7-layer net; kernel radii 1 keep the conv tables small).
+pub fn corrector_net(mesh: &Mesh, seed: u64) -> Cnn {
+    Cnn::new(
+        mesh,
+        2,
+        vec![
+            LayerCfg { cout: 12, radius: 2, relu: true },
+            LayerCfg { cout: 16, radius: 1, relu: true },
+            LayerCfg { cout: 8, radius: 1, relu: true },
+            LayerCfg { cout: 2, radius: 0, relu: false },
+        ],
+        seed,
+    )
+}
+
+fn net_input(u: &VectorField) -> Vec<Vec<f64>> {
+    vec![u.comp[0].clone(), u.comp[1].clone()]
+}
+
+/// One unrolled training episode: returns (loss, dparams).
+#[allow(clippy::too_many_arguments)]
+fn episode(
+    solver: &mut PisoSolver,
+    net: &Cnn,
+    frames: &[VectorField],
+    start: usize,
+    unroll: usize,
+    paths: GradientPaths,
+    lambda_div: f64,
+    output_scale: f64,
+) -> (f64, Vec<f64>) {
+    let ncells = solver.mesh.ncells;
+    let mut state = State::zeros(&solver.mesh);
+    state.u = frames[start].clone();
+
+    // forward: record solver tapes + CNN tapes
+    let mut recs = Vec::with_capacity(unroll);
+    let mut net_ins = Vec::with_capacity(unroll);
+    let mut net_tapes = Vec::with_capacity(unroll);
+    let mut sources = Vec::with_capacity(unroll);
+    let mut states = vec![state.clone()];
+    for _ in 0..unroll {
+        let input = net_input(&state.u);
+        let (out, tape) = net.forward(&input);
+        let mut src = VectorField::zeros(ncells);
+        for c in 0..2 {
+            src.comp[c] = out[c].iter().map(|v| output_scale * v).collect();
+        }
+        let mut rec = empty_record();
+        solver.step(&mut state, &src, Some(&mut rec));
+        recs.push(rec);
+        net_ins.push(input);
+        net_tapes.push(tape);
+        sources.push(src);
+        states.push(state.clone());
+    }
+
+    // losses on every step vs the aligned reference frame
+    let mut total_loss = 0.0;
+    let mut dparams = vec![0.0; net.nparams()];
+    let mut du = VectorField::zeros(ncells);
+    let mut dp = vec![0.0; ncells];
+    for t in (0..unroll).rev() {
+        let (l, mut cot) = mse_loss_grad(2, &states[t + 1].u, &frames[start + t + 1]);
+        total_loss += l;
+        cot.axpy(1.0, &du);
+        let g = backward_step(solver, &recs[t], &cot, &dp, paths);
+        // source gradient → CNN (with optional divergence modification)
+        let ds = if lambda_div > 0.0 {
+            crate::train::div_gradient_modification(
+                &solver.mesh,
+                &sources[t],
+                &g.dsource,
+                lambda_div,
+            )
+        } else {
+            g.dsource.clone()
+        };
+        let dout: Vec<Vec<f64>> = (0..2)
+            .map(|c| ds.comp[c].iter().map(|v| output_scale * v).collect())
+            .collect();
+        let (dpar, dins) = net.backward(&net_ins[t], &net_tapes[t], &dout);
+        for (a, b) in dparams.iter_mut().zip(&dpar) {
+            *a += b;
+        }
+        // state gradient: solver path + network-input path
+        du = g.du_n;
+        for c in 0..2 {
+            for i in 0..ncells {
+                du.comp[c][i] += dins[c][i];
+            }
+        }
+        dp = g.dp_in;
+    }
+    (total_loss / unroll as f64, dparams)
+}
+
+/// Train a corrector on pre-generated reference frames.
+pub fn train_corrector2d(
+    solver: &mut PisoSolver,
+    frames: &[VectorField],
+    cfg: &Corrector2dCfg,
+) -> (Cnn, Vec<f64>) {
+    let mut net = corrector_net(&solver.mesh, cfg.seed);
+    let mut opt = Adam::new(cfg.lr, net.nparams());
+    let mut rng = Rng::new(cfg.seed ^ 0x55);
+    let mut losses = Vec::new();
+    for &unroll in &cfg.curriculum {
+        for _ in 0..cfg.opt_steps_per_stage {
+            let start = rng.below(frames.len().saturating_sub(unroll + 1));
+            let (loss, dparams) = episode(
+                solver, &net, frames, start, unroll, cfg.paths, cfg.lambda_div,
+                cfg.output_scale,
+            );
+            let mut params = std::mem::take(&mut net.params);
+            opt.step(&mut params, &dparams);
+            net.params = params;
+            losses.push(loss);
+        }
+    }
+    (net, losses)
+}
+
+/// Vorticity ω = ∂v/∂x − ∂u/∂y of a 2D field.
+pub fn vorticity(mesh: &Mesh, u: &VectorField) -> Vec<f64> {
+    let gu = fvm::pressure_gradient(mesh, &u.comp[0]);
+    let gv = fvm::pressure_gradient(mesh, &u.comp[1]);
+    (0..mesh.ncells).map(|i| gv.comp[0][i] - gu.comp[1][i]).collect()
+}
+
+/// Evaluate No-Model vs NN-corrected rollouts against the reference frames:
+/// returns (frame index, mse_no_model, mse_nn, corr_no_model, corr_nn).
+pub fn evaluate_corrector(
+    solver: &mut PisoSolver,
+    net: Option<&Cnn>,
+    output_scale: f64,
+    frames: &[VectorField],
+    checkpoints: &[usize],
+) -> Vec<(usize, f64, f64)> {
+    let ncells = solver.mesh.ncells;
+    let mut state = State::zeros(&solver.mesh);
+    state.u = frames[0].clone();
+    let mut out = Vec::new();
+    let maxstep = *checkpoints.iter().max().unwrap_or(&0);
+    for step in 1..=maxstep.min(frames.len() - 1) {
+        let src = match net {
+            Some(n) => {
+                let (o, _) = n.forward(&net_input(&state.u));
+                let mut s = VectorField::zeros(ncells);
+                for c in 0..2 {
+                    s.comp[c] = o[c].iter().map(|v| output_scale * v).collect();
+                }
+                s
+            }
+            None => VectorField::zeros(ncells),
+        };
+        solver.step(&mut state, &src, None);
+        if checkpoints.contains(&step) {
+            let (mse, _) = mse_loss_grad(2, &state.u, &frames[step]);
+            let w_sim = vorticity(&solver.mesh, &state.u);
+            let w_ref = vorticity(&solver.mesh, &frames[step]);
+            let corr = util::correlation(&w_sim, &w_ref);
+            out.push((step, mse, corr));
+        }
+    }
+    out
+}

@@ -1,0 +1,19 @@
+//! Experiment drivers, one per paper table/figure group (DESIGN.md §4):
+//! E4 gradient-path ablation (Fig 6 / Table 1), E9 direct optimizations
+//! (Fig C.22/C.23), E5/E6 2D corrector training (Tables 2–4, Figs 7–10),
+//! E7 TCF SGS training (Figs 11–13, Table B.5), and the §5.4 runtime
+//! comparison. Each driver is callable from both the CLI and the benches.
+
+pub mod corrector2d;
+pub mod gradient_paths;
+pub mod lid_opt;
+pub mod tcf_sgs;
+
+pub use corrector2d::{
+    evaluate_corrector, make_reference_frames, train_corrector2d, vorticity, Corrector2dCfg,
+};
+pub use gradient_paths::{gradient_path_ablation, GradPathCfg, GradPathResult};
+pub use lid_opt::{optimize_cavity_params, CavityOptCfg, CavityOptResult};
+pub use tcf_sgs::{
+    eval_sgs, eval_smagorinsky, reference_statistics, train_tcf_sgs, TcfSgsCfg, TcfSgsResult,
+};

@@ -1,0 +1,372 @@
+//! E7 — learned SGS model for the 3D turbulent channel flow (paper §5.3):
+//! a CNN corrector is trained *purely from reference statistics* (eq. 13
+//! losses on mean + Reynolds-stress profiles, no paired frames), with
+//! warm-up steps before backpropagation, the eq. 11 divergence gradient
+//! modification, and forcing regularization (eq. 15). Baselines: no-SGS and
+//! the van-Driest-damped Smagorinsky model.
+//!
+//! Scaled-down per DESIGN.md §5/§7: a mini-channel at coarse resolution
+//! with the fine run of our own solver providing the reference statistics
+//! (the Hoyas–Jiménez role).
+
+use crate::adjoint::rollout::empty_record;
+use crate::adjoint::{backward_step, GradientPaths};
+use crate::mesh::{gen, Mesh, VectorField};
+use crate::nn::{Cnn, LayerCfg};
+use crate::piso::{PisoConfig, PisoSolver, State};
+use crate::train::{stats_loss_grad, Adam, Optimizer, StatsTarget};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TcfSgsCfg {
+    /// Coarse grid (the learned-SGS resolution).
+    pub coarse_n: [usize; 3],
+    /// Channel size (δ = ly/2).
+    pub l: [f64; 3],
+    pub nu: f64,
+    /// Body-force magnitude driving the flow (constant streamwise forcing;
+    /// the dynamic wall-shear forcing is applied on top).
+    pub forcing: f64,
+    pub dt: f64,
+    /// Warm-up (non-differentiable) step range and unroll length.
+    pub max_warmup: usize,
+    pub unroll: usize,
+    pub opt_steps: usize,
+    pub lr: f64,
+    /// λ_S forcing regularization (eq. 15) and λ_∇·u (eq. 11).
+    pub lambda_s: f64,
+    pub lambda_div: f64,
+    /// Raw-output scale (keeps early corrections small; clamp still applies).
+    pub output_scale: f64,
+    pub seed: u64,
+}
+
+impl Default for TcfSgsCfg {
+    fn default() -> Self {
+        TcfSgsCfg {
+            coarse_n: [12, 10, 6],
+            l: [4.0, 2.0, 2.0],
+            nu: 0.004,
+            forcing: 0.01,
+            dt: 0.08,
+            max_warmup: 30,
+            unroll: 4,
+            opt_steps: 150,
+            lr: 1.5e-3,
+            lambda_s: 0.1,
+            lambda_div: 1e-3,
+            output_scale: 0.01,
+            seed: 0x7CF,
+        }
+    }
+}
+
+pub struct TcfSgsResult {
+    pub net: Cnn,
+    pub train_losses: Vec<f64>,
+    pub target: StatsTarget,
+}
+
+/// SGS corrector network: velocity + wall-distance input (4 channels),
+/// 3 velocity-source outputs (paper §5.3 architecture, scaled down).
+pub fn sgs_net(mesh: &Mesh, seed: u64) -> Cnn {
+    Cnn::new(
+        mesh,
+        4,
+        vec![
+            LayerCfg { cout: 12, radius: 1, relu: true },
+            LayerCfg { cout: 12, radius: 1, relu: true },
+            LayerCfg { cout: 3, radius: 0, relu: false },
+        ],
+        seed,
+    )
+}
+
+/// Network input: instantaneous velocity + normalized wall distance 1−|y/δ|.
+pub fn sgs_input(mesh: &Mesh, u: &VectorField, delta: f64) -> Vec<Vec<f64>> {
+    let wall: Vec<f64> =
+        mesh.centers.iter().map(|c| 1.0 - ((c[1] - delta) / delta).abs()).collect();
+    vec![u.comp[0].clone(), u.comp[1].clone(), u.comp[2].clone(), wall]
+}
+
+/// Build the coarse channel solver.
+pub fn coarse_solver(cfg: &TcfSgsCfg) -> PisoSolver {
+    let mesh = gen::channel3d(cfg.coarse_n, cfg.l, 1.08);
+    PisoSolver::new(
+        mesh,
+        PisoConfig { dt: cfg.dt, n_correctors: 2, ..Default::default() },
+        cfg.nu,
+    )
+}
+
+/// Constant streamwise forcing field.
+pub fn forcing_field(mesh: &Mesh, f: f64) -> VectorField {
+    let mut s = VectorField::zeros(mesh.ncells);
+    s.comp[0].iter_mut().for_each(|v| *v = f);
+    s
+}
+
+/// Initial condition: parabolic-ish profile + divergence-free perturbations
+/// (the paper's Reichardt + perturbation initialization, simplified).
+pub fn perturbed_channel_init(mesh: &Mesh, ly: f64, amp: f64, seed: u64) -> VectorField {
+    let mut rng = Rng::new(seed);
+    let mut u = VectorField::zeros(mesh.ncells);
+    let tau = 2.0 * std::f64::consts::PI;
+    let (ax, az) = (rng.range(1.0, 2.0), rng.range(1.0, 2.0));
+    for (i, c) in mesh.centers.iter().enumerate() {
+        let eta = c[1] / ly;
+        let base = 4.0 * eta * (1.0 - eta);
+        // curl-based perturbation: u' = ∂ψ/∂y, v' = −∂ψ/∂x (div-free in 2D
+        // slices), plus a spanwise mode
+        let psi = (tau * ax * c[0]).sin() * (tau * c[1] / ly).sin() * (tau * az * c[2]).cos();
+        u.comp[0][i] = base + amp * psi * (tau / ly) * (tau * c[1] / ly).cos().signum();
+        u.comp[1][i] = amp * (tau * ax * c[0]).cos() * (tau * c[1] / ly).sin();
+        u.comp[2][i] = amp * (tau * az * c[2]).sin() * (tau * c[1] / ly).sin();
+    }
+    u
+}
+
+/// Accumulate reference statistics from a finer-resolution run of the same
+/// channel (the "high-res reference" role of §5.3), resampled to the coarse
+/// wall-normal layers by nearest-layer matching.
+pub fn reference_statistics(cfg: &TcfSgsCfg, fine_n: [usize; 3], steps: usize) -> StatsTarget {
+    let mesh = gen::channel3d(fine_n, cfg.l, 1.08);
+    let mut solver = PisoSolver::new(
+        mesh,
+        PisoConfig { dt: cfg.dt * 0.5, n_correctors: 2, ..Default::default() },
+        cfg.nu,
+    );
+    let mut state = State::zeros(&solver.mesh);
+    state.u = perturbed_channel_init(&solver.mesh, cfg.l[1], 0.4, cfg.seed);
+    let src = forcing_field(&solver.mesh, cfg.forcing);
+    // develop, then accumulate
+    solver.run(&mut state, &src, steps / 2);
+    let mut stats = crate::stats::ChannelStats::new(&solver.mesh, cfg.nu);
+    for _ in 0..steps / 2 {
+        solver.step(&mut state, &src, None);
+        stats.push(&solver.mesh, &state.u);
+    }
+    let (um, uu, vv, ww, uv) = stats.profiles();
+    // resample fine layers onto coarse layers (nearest y)
+    let coarse_mesh = gen::channel3d(cfg.coarse_n, cfg.l, 1.08);
+    let cb = &coarse_mesh.blocks[0];
+    let ny_c = cb.shape[1];
+    let fine_y = stats.y.clone();
+    let pick = |prof: &[f64], y: f64| -> f64 {
+        let mut best = 0;
+        let mut bd = f64::INFINITY;
+        for (j, fy) in fine_y.iter().enumerate() {
+            let d = (fy - y).abs();
+            if d < bd {
+                bd = d;
+                best = j;
+            }
+        }
+        prof[best]
+    };
+    let mut mean = [vec![0.0; ny_c], vec![0.0; ny_c], vec![0.0; ny_c]];
+    let mut stress = [vec![0.0; ny_c], vec![0.0; ny_c], vec![0.0; ny_c], vec![0.0; ny_c]];
+    for j in 0..ny_c {
+        let y = cb.centers[cb.lidx(0, j, 0)][1];
+        mean[0][j] = pick(&um, y);
+        stress[0][j] = pick(&uu, y);
+        stress[1][j] = pick(&vv, y);
+        stress[2][j] = pick(&ww, y);
+        stress[3][j] = pick(&uv, y);
+    }
+    StatsTarget {
+        mean,
+        stress,
+        w_mean: [1.0, 0.5, 0.5],
+        w_stress: [1.0, 1.0, 1.0, 1.0],
+    }
+}
+
+/// Train the SGS corrector from statistics only (no paired frames).
+pub fn train_tcf_sgs(cfg: &TcfSgsCfg, target: &StatsTarget) -> TcfSgsResult {
+    let mut solver = coarse_solver(cfg);
+    let ncells = solver.mesh.ncells;
+    let delta = cfg.l[1] / 2.0;
+    let mut net = sgs_net(&solver.mesh, cfg.seed);
+    let mut opt = Adam::new(cfg.lr, net.nparams());
+    let mut rng = Rng::new(cfg.seed ^ 0x99);
+    let src_base = forcing_field(&solver.mesh, cfg.forcing);
+
+    // starting pool: develop the un-modeled coarse flow
+    let mut pool_state = State::zeros(&solver.mesh);
+    pool_state.u = perturbed_channel_init(&solver.mesh, cfg.l[1], 0.4, cfg.seed ^ 1);
+    solver.run(&mut pool_state, &src_base, 30);
+
+    let mut losses = Vec::new();
+    for _ in 0..cfg.opt_steps {
+        // warm-up: non-differentiable rollout with the current corrector
+        let mut state = pool_state.clone();
+        let warm = rng.below(cfg.max_warmup + 1);
+        for _ in 0..warm {
+            let (o, _) = net.forward(&sgs_input(&solver.mesh, &state.u, delta));
+            let mut src = src_base.clone();
+            for c in 0..3 {
+                for i in 0..ncells {
+                    src.comp[c][i] += (cfg.output_scale * o[c][i]).clamp(-2.0, 2.0);
+                }
+            }
+            solver.step(&mut state, &src, None);
+        }
+        // differentiable unroll
+        let mut recs = Vec::new();
+        let mut inputs = Vec::new();
+        let mut tapes = Vec::new();
+        let mut sources = Vec::new();
+        let mut states = vec![state.clone()];
+        for _ in 0..cfg.unroll {
+            let input = sgs_input(&solver.mesh, &state.u, delta);
+            let (o, tape) = net.forward(&input);
+            let mut src = src_base.clone();
+            let mut s_theta = VectorField::zeros(ncells);
+            for c in 0..3 {
+                for i in 0..ncells {
+                    let v = (cfg.output_scale * o[c][i]).clamp(-2.0, 2.0);
+                    s_theta.comp[c][i] = v;
+                    src.comp[c][i] += v;
+                }
+            }
+            let mut rec = empty_record();
+            solver.step(&mut state, &src, Some(&mut rec));
+            recs.push(rec);
+            inputs.push(input);
+            tapes.push(tape);
+            sources.push(s_theta);
+            states.push(state.clone());
+        }
+        // per-frame statistics loss on every unrolled state (eq. 13's
+        // per-frame part) + forcing regularization (eq. 15)
+        let mut total = 0.0;
+        let mut dparams = vec![0.0; net.nparams()];
+        let mut du = VectorField::zeros(ncells);
+        let mut dp = vec![0.0; ncells];
+        for t in (0..cfg.unroll).rev() {
+            let (l, mut cot) = stats_loss_grad(&solver.mesh, &states[t + 1].u, target);
+            total += l;
+            cot.axpy(1.0, &du);
+            let g = backward_step(&solver, &recs[t], &cot, &dp, GradientPaths::NONE);
+            let mut ds = g.dsource.clone();
+            // + λ_S ∂‖S‖²/∂S = 2 λ_S S / (N · unroll)
+            let wreg = 2.0 * cfg.lambda_s / (ncells * cfg.unroll) as f64;
+            for c in 0..3 {
+                for i in 0..ncells {
+                    total += cfg.lambda_s * sources[t].comp[c][i].powi(2)
+                        / (ncells * cfg.unroll) as f64;
+                    ds.comp[c][i] += wreg * sources[t].comp[c][i];
+                }
+            }
+            let ds = if cfg.lambda_div > 0.0 {
+                crate::train::div_gradient_modification(
+                    &solver.mesh,
+                    &sources[t],
+                    &ds,
+                    cfg.lambda_div,
+                )
+            } else {
+                ds
+            };
+            // clamp backward: zero gradient where the clamp saturated
+            let mut dout = vec![vec![0.0; ncells]; 3];
+            for c in 0..3 {
+                for i in 0..ncells {
+                    let raw = sources[t].comp[c][i];
+                    dout[c][i] = if raw.abs() >= 2.0 {
+                        0.0
+                    } else {
+                        cfg.output_scale * ds.comp[c][i]
+                    };
+                }
+            }
+            let (dpar, dins) = net.backward(&inputs[t], &tapes[t], &dout);
+            for (a, b) in dparams.iter_mut().zip(&dpar) {
+                *a += b;
+            }
+            du = g.du_n;
+            for c in 0..3 {
+                for i in 0..ncells {
+                    du.comp[c][i] += dins[c][i];
+                }
+            }
+            dp = g.dp_in;
+        }
+        let mut params = std::mem::take(&mut net.params);
+        opt.step(&mut params, &dparams);
+        net.params = params;
+        losses.push(total / cfg.unroll as f64);
+        // advance the pool so episodes see fresh states
+        solver.step(&mut pool_state, &src_base, None);
+    }
+    TcfSgsResult { net, train_losses: losses, target: target.clone() }
+}
+
+/// Evaluate per-frame statistics loss over a rollout with a given model.
+/// `model`: None = no-SGS; Some((net, None)) = learned; None + smag handled
+/// by `eval_smagorinsky`.
+pub fn eval_sgs(
+    cfg: &TcfSgsCfg,
+    net: Option<&Cnn>,
+    target: &StatsTarget,
+    steps: usize,
+) -> Vec<f64> {
+    let mut solver = coarse_solver(cfg);
+    let ncells = solver.mesh.ncells;
+    let delta = cfg.l[1] / 2.0;
+    let mut state = State::zeros(&solver.mesh);
+    state.u = perturbed_channel_init(&solver.mesh, cfg.l[1], 0.4, cfg.seed ^ 7);
+    let src_base = forcing_field(&solver.mesh, cfg.forcing);
+    // develop without any model first so all variants start from the same
+    // (un-modeled, statistically wrong) state — the figure-13 protocol
+    solver.run(&mut state, &src_base, 30);
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let src = match net {
+            Some(n) => {
+                let (o, _) = n.forward(&sgs_input(&solver.mesh, &state.u, delta));
+                let mut s = src_base.clone();
+                for c in 0..3 {
+                    for i in 0..ncells {
+                        s.comp[c][i] += (cfg.output_scale * o[c][i]).clamp(-2.0, 2.0);
+                    }
+                }
+                s
+            }
+            None => src_base.clone(),
+        };
+        solver.step(&mut state, &src, None);
+        let (l, _) = stats_loss_grad(&solver.mesh, &state.u, target);
+        out.push(l);
+    }
+    out
+}
+
+/// Same rollout with the Smagorinsky baseline (eddy viscosity added to ν).
+pub fn eval_smagorinsky(cfg: &TcfSgsCfg, target: &StatsTarget, steps: usize, cs: f64) -> Vec<f64> {
+    let mut solver = coarse_solver(cfg);
+    let mut state = State::zeros(&solver.mesh);
+    state.u = perturbed_channel_init(&solver.mesh, cfg.l[1], 0.4, cfg.seed ^ 7);
+    let src = forcing_field(&solver.mesh, cfg.forcing);
+    solver.run(&mut state, &src, 30);
+    let dist = crate::nn::smagorinsky::channel_wall_distance(&solver.mesh, cfg.l[1]);
+    let mut out = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let nu_t = crate::nn::smagorinsky_nu_t(
+            &solver.mesh,
+            &state.u,
+            cs,
+            Some(&dist),
+            0.05,
+            cfg.nu,
+        );
+        for i in 0..solver.mesh.ncells {
+            solver.nu[i] = cfg.nu + nu_t[i];
+        }
+        solver.step(&mut state, &src, None);
+        let (l, _) = stats_loss_grad(&solver.mesh, &state.u, target);
+        out.push(l);
+    }
+    out
+}

@@ -1,0 +1,8 @@
+//! The experiment coordinator: reference data, experiment drivers for every
+//! table/figure in the paper's evaluation (see DESIGN.md §4), and the
+//! reporting layer shared by the CLI and the bench harness.
+
+pub mod experiments;
+pub mod references;
+
+pub use experiments::*;

@@ -1,0 +1,91 @@
+//! Embedded reference data: Ghia et al. (1982) lid-driven-cavity centerline
+//! profiles and the law-of-the-wall used to sanity-check channel statistics
+//! (the roles the spectral Hoyas–Jiménez data plays in the paper; see
+//! DESIGN.md §5 for the substitution rationale).
+
+/// Ghia Re=100, u on the vertical centerline: (y, u).
+pub const GHIA_RE100_U: [(f64, f64); 15] = [
+    (0.0547, -0.03717),
+    (0.0625, -0.04192),
+    (0.0703, -0.04775),
+    (0.1016, -0.06434),
+    (0.1719, -0.10150),
+    (0.2813, -0.15662),
+    (0.4531, -0.21090),
+    (0.5000, -0.20581),
+    (0.6172, -0.13641),
+    (0.7344, 0.00332),
+    (0.8516, 0.23151),
+    (0.9531, 0.68717),
+    (0.9609, 0.73722),
+    (0.9688, 0.78871),
+    (0.9766, 0.84123),
+];
+
+/// Ghia Re=100, v on the horizontal centerline: (x, v).
+pub const GHIA_RE100_V: [(f64, f64); 14] = [
+    (0.0625, 0.09233),
+    (0.0703, 0.10091),
+    (0.0781, 0.10890),
+    (0.0938, 0.12317),
+    (0.1563, 0.16077),
+    (0.2266, 0.17507),
+    (0.2344, 0.17527),
+    (0.5000, 0.05454),
+    (0.8047, -0.24533),
+    (0.8594, -0.22445),
+    (0.9063, -0.16914),
+    (0.9453, -0.10313),
+    (0.9531, -0.08864),
+    (0.9609, -0.07391),
+];
+
+/// Ghia Re=1000, u on the vertical centerline: (y, u).
+pub const GHIA_RE1000_U: [(f64, f64); 14] = [
+    (0.0547, -0.08186),
+    (0.0625, -0.09266),
+    (0.0703, -0.10338),
+    (0.1016, -0.14612),
+    (0.1719, -0.24299),
+    (0.2813, -0.32726),
+    (0.4531, -0.17119),
+    (0.5000, -0.11477),
+    (0.6172, 0.02135),
+    (0.7344, 0.16256),
+    (0.8516, 0.29093),
+    (0.9531, 0.55892),
+    (0.9609, 0.61756),
+    (0.9688, 0.68439),
+];
+
+/// Law of the wall: u⁺ = y⁺ (viscous sublayer) / log law with κ=0.41, B=5.2.
+pub fn law_of_the_wall(y_plus: f64) -> f64 {
+    if y_plus < 11.0 {
+        y_plus
+    } else {
+        (1.0 / 0.41) * y_plus.ln() + 5.2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn law_of_wall_continuity_region() {
+        // the two branches cross near y+ ≈ 11
+        let a = law_of_the_wall(10.9);
+        let b = law_of_the_wall(11.1);
+        assert!((a - b).abs() < 0.6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn ghia_tables_monotone_in_coordinate() {
+        for w in GHIA_RE100_U.windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+        for w in GHIA_RE1000_U.windows(2) {
+            assert!(w[1].0 > w[0].0);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! # PICT — a differentiable multi-block PISO solver
+//!
+//! Rust + JAX + Pallas reproduction of *"PICT — A Differentiable,
+//! GPU-Accelerated Multi-Block PISO Solver for Simulation-Coupled Learning
+//! Tasks in Fluid Dynamics"* (Franz et al., J. Comp. Phys. 2025).
+//!
+//! Layer 3 (this crate) owns the general solver: multi-block structured
+//! meshes, FVM discretization, PISO time stepping, the DtO/OtD hybrid
+//! adjoint engine, turbulence statistics, the CNN corrector substrate, and
+//! the experiment coordinator. Layers 1–2 (python/compile) author Pallas
+//! kernels and the JAX PISO graph, AOT-lowered to HLO text executed here via
+//! PJRT ([`runtime`]).
+//!
+//! See DESIGN.md for the system inventory and experiment index.
+
+pub mod adjoint;
+pub mod coordinator;
+pub mod fvm;
+pub mod linsolve;
+pub mod mesh;
+pub mod nn;
+pub mod piso;
+pub mod runtime;
+pub mod sparse;
+pub mod stats;
+pub mod train;
+pub mod util;

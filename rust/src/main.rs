@@ -1,0 +1,84 @@
+//! PICT CLI — the deployable entrypoint: runs validations, experiments, and
+//! artifact checks. `pict <command> [--options]`; see `pict help`.
+
+use pict::util::cli::Args;
+
+fn main() {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("gradpaths") => {
+            use pict::adjoint::GradientPaths;
+            use pict::coordinator::experiments::{gradient_path_ablation, GradPathCfg};
+            let n = args.usize_or("n", 10);
+            for paths in
+                [GradientPaths::FULL, GradientPaths::P, GradientPaths::ADV, GradientPaths::NONE]
+            {
+                let cfg = GradPathCfg {
+                    n_steps: n,
+                    lr: args.f64_or("lr", 0.04),
+                    opt_iters: args.usize_or("iters", 40),
+                    paths,
+                    ..Default::default()
+                };
+                let r = gradient_path_ablation(&cfg);
+                println!(
+                    "{:<6} loss {:.2e} -> {:.2e}, theta {:.4}, {:.2}s{}",
+                    r.label,
+                    r.losses[0],
+                    r.losses.last().unwrap(),
+                    r.final_theta,
+                    r.times.last().unwrap(),
+                    if r.diverged { " [DIVERGED]" } else { "" }
+                );
+            }
+        }
+        Some("artifacts") => {
+            let dir = args.get_or("dir", "artifacts");
+            match pict::runtime::ArtifactSet::load(&dir) {
+                Ok(set) => {
+                    println!("artifacts in {dir}:");
+                    for m in &set.metas {
+                        println!(
+                            "  {} ({}): {} inputs, {} outputs",
+                            m.entry,
+                            m.file,
+                            m.inputs.len(),
+                            m.outputs.len()
+                        );
+                    }
+                }
+                Err(e) => eprintln!("failed to load artifacts: {e}"),
+            }
+        }
+        Some("cavity") => {
+            use pict::coordinator::references::GHIA_RE100_U;
+            use pict::mesh::{field, gen, VectorField};
+            use pict::piso::{PisoConfig, PisoSolver, State};
+            let n = args.usize_or("n", 32);
+            let mesh = gen::cavity2d(n, 1.0, 1.0, args.flag("refined"));
+            let mut solver = PisoSolver::new(
+                mesh,
+                PisoConfig { dt: 0.02, ..Default::default() },
+                1.0 / args.f64_or("re", 100.0),
+            );
+            let mut state = State::zeros(&solver.mesh);
+            let src = VectorField::zeros(solver.mesh.ncells);
+            solver.run(&mut state, &src, args.usize_or("steps", 1200));
+            let mut worst = 0.0f64;
+            for (y, u_ref) in GHIA_RE100_U {
+                let u = field::sample_idw(&solver.mesh, &state.u.comp[0], [0.5, y, 0.5]);
+                worst = worst.max((u - u_ref).abs());
+            }
+            println!("cavity {n}x{n}: worst centerline error vs Ghia = {worst:.4}");
+        }
+        _ => {
+            println!("PICT — differentiable multi-block PISO solver (Rust + JAX + Pallas)");
+            println!("commands:");
+            println!("  gradpaths [--n 10] [--iters 40] [--lr 0.08]   gradient-path ablation (E4)");
+            println!("  cavity [--n 32] [--re 100] [--steps 1200]     lid-driven cavity vs Ghia");
+            println!("  artifacts [--dir artifacts]                   list AOT artifacts");
+            println!("examples: cargo run --release --example quickstart | train_sgs_tcf | ...");
+            println!("benches:  cargo bench  (one per paper table/figure — see DESIGN.md)");
+        }
+    }
+}

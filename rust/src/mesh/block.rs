@@ -1,0 +1,327 @@
+//! A single structured block: vertex coordinates, per-cell transformation
+//! metrics (Appendix A.3.2), and the boundary assigned to each of its faces.
+
+use super::boundary::FaceBc;
+
+/// 3×3 matrix type used for T (T\[j\]\[i\] = ∂ξ_j/∂x_i) and α (α\[j\]\[k\]).
+pub type Mat3 = [[f64; 3]; 3];
+
+#[derive(Clone, Debug)]
+pub struct Block {
+    /// Cells per axis; 2D blocks use shape\[2\] == 1.
+    pub shape: [usize; 3],
+    /// Global cell offset (assigned by `Mesh::new`).
+    pub offset: usize,
+    /// Vertex coordinates, (shape+1) per axis, x-fastest ordering.
+    pub verts: Vec<[f64; 3]>,
+    /// Cell-center coordinates.
+    pub centers: Vec<[f64; 3]>,
+    /// Per-cell Jacobian determinant J = det(∂x/∂ξ) (cell volume).
+    pub jac: Vec<f64>,
+    /// Per-cell transform `T[j][i] = ∂ξ_j/∂x_i`.
+    pub t: Vec<Mat3>,
+    /// Per-cell `α[j][k] = J · Σ_i T_ji T_ki`  (A.10).
+    pub alpha: Vec<Mat3>,
+    /// Boundary of each face (indexed by the FACE_* constants).
+    pub faces: [FaceBc; 6],
+    /// True if any cell has non-negligible off-diagonal α (non-orthogonal).
+    pub non_orthogonal: bool,
+}
+
+impl Block {
+    pub fn ncells(&self) -> usize {
+        self.shape[0] * self.shape[1] * self.shape[2]
+    }
+
+    /// Local linear index of cell (i, j, k), x-fastest.
+    #[inline]
+    pub fn lidx(&self, i: usize, j: usize, k: usize) -> usize {
+        i + self.shape[0] * (j + self.shape[1] * k)
+    }
+
+    /// Inverse of `lidx`.
+    #[inline]
+    pub fn coords(&self, l: usize) -> [usize; 3] {
+        let i = l % self.shape[0];
+        let j = (l / self.shape[0]) % self.shape[1];
+        let k = l / (self.shape[0] * self.shape[1]);
+        [i, j, k]
+    }
+
+    #[inline]
+    fn vidx(&self, i: usize, j: usize, k: usize) -> usize {
+        let nvx = self.shape[0] + 1;
+        let nvy = self.shape[1] + 1;
+        i + nvx * (j + nvy * k)
+    }
+
+    /// Number of face cells on `face` (product of the two tangential extents).
+    pub fn face_ncells(&self, face: usize) -> usize {
+        let ax = super::face_axis(face);
+        let mut n = 1;
+        for a in 0..3 {
+            if a != ax {
+                n *= self.shape[a];
+            }
+        }
+        n
+    }
+
+    /// Linear face-cell index of the cell (i,j,k) on face `face`: tangential
+    /// axes in increasing order, lower axis fastest.
+    #[inline]
+    pub fn face_lidx(&self, face: usize, c: [usize; 3]) -> usize {
+        let ax = super::face_axis(face);
+        let tang: Vec<usize> = (0..3).filter(|a| *a != ax).collect();
+        c[tang[0]] + self.shape[tang[0]] * c[tang[1]]
+    }
+
+    /// Build a block from tensor-product 1D coordinate arrays (rectilinear,
+    /// hence orthogonal). `zs` of length 2 gives a 2D block of unit depth.
+    pub fn from_coords1d(dim: usize, xs: &[f64], ys: &[f64], zs: &[f64]) -> Block {
+        let shape = [xs.len() - 1, ys.len() - 1, zs.len() - 1];
+        let mut verts = Vec::with_capacity((shape[0] + 1) * (shape[1] + 1) * (shape[2] + 1));
+        for z in zs {
+            for y in ys {
+                for x in xs {
+                    verts.push([*x, *y, *z]);
+                }
+            }
+        }
+        Block::from_vertices(dim, shape, verts)
+    }
+
+    /// Build a block from explicit vertex positions (supports non-orthogonal
+    /// / distorted grids). `verts` are x-fastest over (shape+1) per axis.
+    pub fn from_vertices(dim: usize, shape: [usize; 3], verts: Vec<[f64; 3]>) -> Block {
+        assert_eq!(
+            verts.len(),
+            (shape[0] + 1) * (shape[1] + 1) * (shape[2] + 1),
+            "vertex count mismatch"
+        );
+        let ncells = shape[0] * shape[1] * shape[2];
+        let mut b = Block {
+            shape,
+            offset: 0,
+            verts,
+            centers: vec![[0.0; 3]; ncells],
+            jac: vec![0.0; ncells],
+            t: vec![[[0.0; 3]; 3]; ncells],
+            alpha: vec![[[0.0; 3]; 3]; ncells],
+            faces: Default::default(),
+            non_orthogonal: false,
+        };
+        b.compute_metrics(dim);
+        b
+    }
+
+    /// Compute centers, J, T, α per cell from the corner vertices. For each
+    /// cell, ∂x/∂ξ_a is the mean difference of the corner positions across
+    /// axis a (exact for (bi/tri)linear cells at the centroid).
+    fn compute_metrics(&mut self, dim: usize) {
+        let shape = self.shape;
+        let mut max_offdiag: f64 = 0.0;
+        for k in 0..shape[2] {
+            for j in 0..shape[1] {
+                for i in 0..shape[0] {
+                    let l = self.lidx(i, j, k);
+                    // gather the 8 corners (4 in 2D with k extent 1 handled
+                    // uniformly since shape[2]=1 gives z-thickness from zs)
+                    let c = |di: usize, dj: usize, dk: usize| {
+                        self.verts[self.vidx(i + di, j + dj, k + dk)]
+                    };
+                    let corners = [
+                        c(0, 0, 0),
+                        c(1, 0, 0),
+                        c(0, 1, 0),
+                        c(1, 1, 0),
+                        c(0, 0, 1),
+                        c(1, 0, 1),
+                        c(0, 1, 1),
+                        c(1, 1, 1),
+                    ];
+                    let mut center = [0.0; 3];
+                    for p in &corners {
+                        for a in 0..3 {
+                            center[a] += p[a] / 8.0;
+                        }
+                    }
+                    self.centers[l] = center;
+                    // dx/dξ columns: average of corner differences per axis
+                    let mut dxdxi = [[0.0f64; 3]; 3]; // dxdxi[a][i]: ∂x_i/∂ξ_a
+                    for i3 in 0..3 {
+                        // ξ_0 (x-logical): corners with di=1 minus di=0
+                        dxdxi[0][i3] = (corners[1][i3] + corners[3][i3] + corners[5][i3]
+                            + corners[7][i3]
+                            - corners[0][i3]
+                            - corners[2][i3]
+                            - corners[4][i3]
+                            - corners[6][i3])
+                            / 4.0;
+                        dxdxi[1][i3] = (corners[2][i3] + corners[3][i3] + corners[6][i3]
+                            + corners[7][i3]
+                            - corners[0][i3]
+                            - corners[1][i3]
+                            - corners[4][i3]
+                            - corners[5][i3])
+                            / 4.0;
+                        dxdxi[2][i3] = (corners[4][i3] + corners[5][i3] + corners[6][i3]
+                            + corners[7][i3]
+                            - corners[0][i3]
+                            - corners[1][i3]
+                            - corners[2][i3]
+                            - corners[3][i3])
+                            / 4.0;
+                    }
+                    // J = det(∂x/∂ξ)  (dxdxi rows are ∂x/∂ξ_a, i.e. the
+                    // transpose of the conventional Jacobian — same det)
+                    let det = det3(&dxdxi);
+                    assert!(det > 0.0, "negative/zero cell volume at cell {l}");
+                    self.jac[l] = det;
+                    // T = (∂x/∂ξ)⁻¹ : T[j][i] = ∂ξ_j/∂x_i
+                    let inv = inv3(&dxdxi, det);
+                    self.t[l] = inv;
+                    // α_jk = J Σ_i T_ji T_ki
+                    let mut alpha = [[0.0; 3]; 3];
+                    for jj in 0..3 {
+                        for kk in 0..3 {
+                            let mut s = 0.0;
+                            for ii in 0..3 {
+                                s += inv[jj][ii] * inv[kk][ii];
+                            }
+                            alpha[jj][kk] = det * s;
+                        }
+                    }
+                    self.alpha[l] = alpha;
+                    for jj in 0..dim {
+                        for kk in 0..dim {
+                            if jj != kk {
+                                max_offdiag = max_offdiag
+                                    .max(alpha[jj][kk].abs() / alpha[jj][jj].abs().max(1e-300));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.non_orthogonal = max_offdiag > 1e-10;
+    }
+}
+
+fn det3(m: &[[f64; 3]; 3]) -> f64 {
+    m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+        - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+        + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+}
+
+/// Inverse of m given det, where m rows are ∂x/∂ξ_a. Returns T with
+/// T[j][i] = ∂ξ_j/∂x_i, i.e. (mᵀ)⁻¹ transposed appropriately:
+/// since m[a][i] = ∂x_i/∂ξ_a, the matrix M with M[i][a] = m[a][i] satisfies
+/// M · T̃ = I where T̃[a][i]... we directly compute T = M⁻¹ giving
+/// T[j][i] = ∂ξ_j/∂x_i.
+fn inv3(m: &[[f64; 3]; 3], det: f64) -> [[f64; 3]; 3] {
+    // M[i][a] = m[a][i]; T = M^{-1} => T[a][i] = cof(M)[i][a] / det
+    let mm = |i: usize, a: usize| m[a][i];
+    let cof = |i: usize, a: usize| {
+        let (i1, i2) = ((i + 1) % 3, (i + 2) % 3);
+        let (a1, a2) = ((a + 1) % 3, (a + 2) % 3);
+        mm(i1, a1) * mm(i2, a2) - mm(i1, a2) * mm(i2, a1)
+    };
+    let mut t = [[0.0; 3]; 3];
+    for a in 0..3 {
+        for i in 0..3 {
+            // adj(M)[a][i] = cof(M)[i][a]
+            t[a][i] = cof(i, a) / det;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_block_metrics() {
+        // 4×2 cells over [0,2]×[0,1]: Δx=0.5, Δy=0.5
+        let xs: Vec<f64> = (0..=4).map(|i| i as f64 * 0.5).collect();
+        let ys: Vec<f64> = (0..=2).map(|i| i as f64 * 0.5).collect();
+        let b = Block::from_coords1d(2, &xs, &ys, &[0.0, 1.0]);
+        assert_eq!(b.ncells(), 8);
+        for l in 0..b.ncells() {
+            assert!((b.jac[l] - 0.25).abs() < 1e-12);
+            assert!((b.t[l][0][0] - 2.0).abs() < 1e-12); // ∂ξ/∂x = 1/Δx
+            assert!((b.t[l][1][1] - 2.0).abs() < 1e-12);
+            assert!(b.t[l][0][1].abs() < 1e-12);
+            // α_00 = J * T00² = 0.25*4 = 1
+            assert!((b.alpha[l][0][0] - 1.0).abs() < 1e-12);
+        }
+        assert!(!b.non_orthogonal);
+    }
+
+    #[test]
+    fn graded_block_jacobian_sums_to_volume() {
+        let xs = [0.0, 0.1, 0.3, 0.6, 1.0];
+        let ys = [0.0, 0.5, 1.0];
+        let b = Block::from_coords1d(2, &xs, &ys, &[0.0, 1.0]);
+        let vol: f64 = b.jac.iter().sum();
+        assert!((vol - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distorted_block_is_flagged_non_orthogonal() {
+        // shear the unit square grid
+        let n = 4;
+        let mut verts = Vec::new();
+        for j in 0..=n {
+            for i in 0..=n {
+                let x = i as f64 / n as f64;
+                let y = j as f64 / n as f64;
+                verts.push([x + 0.3 * y, y, 0.0]);
+            }
+        }
+        // add z layer
+        let mut v3 = verts.clone();
+        for v in v3.iter_mut() {
+            v[2] = 1.0;
+        }
+        verts.extend(v3);
+        let b = Block::from_vertices(2, [n, n, 1], verts);
+        assert!(b.non_orthogonal);
+        // volume of sheared square is unchanged
+        assert!((b.jac.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_is_inverse_of_dxdxi_3d() {
+        let xs = [0.0, 0.25, 0.75, 1.0];
+        let ys = [0.0, 0.4, 1.0];
+        let zs = [0.0, 0.5, 1.0];
+        let b = Block::from_coords1d(3, &xs, &ys, &zs);
+        // orthogonal: T diag = 1/Δ per axis of each cell
+        let l = b.lidx(1, 0, 1);
+        assert!((b.t[l][0][0] - 1.0 / 0.5).abs() < 1e-12);
+        assert!((b.t[l][1][1] - 1.0 / 0.4).abs() < 1e-12);
+        assert!((b.t[l][2][2] - 1.0 / 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn face_lidx_covers_all_face_cells() {
+        let b = Block::from_coords1d(
+            3,
+            &[0.0, 1.0, 2.0, 3.0],
+            &[0.0, 1.0, 2.0],
+            &[0.0, 1.0, 2.0],
+        );
+        // face on y axis: tangential axes x (3 cells) and z (2 cells)
+        assert_eq!(b.face_ncells(super::super::FACE_YP), 6);
+        let mut seen = vec![false; 6];
+        for k in 0..2 {
+            for i in 0..3 {
+                let f = b.face_lidx(super::super::FACE_YP, [i, 1, k]);
+                seen[f] = true;
+            }
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+}

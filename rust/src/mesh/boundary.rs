@@ -1,0 +1,73 @@
+//! Boundary conditions (paper Appendix A.4).
+//!
+//! Each block face carries one `FaceBc`. Dirichlet values live in
+//! `Mesh::bc_values` so multiple faces can share a set and so the advective
+//! outflow update (A.24) can rewrite them between PISO steps. The pressure
+//! condition at Dirichlet-velocity faces is the implicit 0-Neumann of the
+//! paper; velocity Neumann faces are zero-gradient.
+
+/// Boundary assigned to one face of a block.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum FaceBc {
+    /// Conformal connection to `(block, face)` with identity orientation
+    /// (logical axes aligned, matching tangential resolution). A block may
+    /// connect to itself on the opposite face — that is a periodic boundary.
+    Connection { block: usize, face: usize },
+    /// Prescribed velocity on the face; `values` indexes `Mesh::bc_values`.
+    Dirichlet { values: usize },
+    /// Zero-gradient velocity (and implicit zero-Neumann pressure).
+    #[default]
+    Neumann,
+}
+
+/// A set of per-face-cell Dirichlet velocities (+ optional outflow model).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BcValues {
+    /// One velocity per face cell (face-cell indexing per `Block::face_lidx`).
+    pub vel: Vec<[f64; 3]>,
+    /// If set, the face is a non-reflecting advective outflow: before each
+    /// PISO step the values are advected out with characteristic velocity
+    /// `u_m` (A.24) and then rescaled for global mass balance.
+    pub advective_outflow: Option<[f64; 3]>,
+}
+
+impl BcValues {
+    /// Constant velocity over `n` face cells (e.g. moving lid, uniform inflow).
+    pub fn constant(n: usize, vel: [f64; 3]) -> BcValues {
+        BcValues { vel: vec![vel; n], advective_outflow: None }
+    }
+
+    /// No-slip wall.
+    pub fn no_slip(n: usize) -> BcValues {
+        Self::constant(n, [0.0; 3])
+    }
+
+    /// Per-cell profile (e.g. parabolic or Gaussian inflow).
+    pub fn profile(vel: Vec<[f64; 3]>) -> BcValues {
+        BcValues { vel, advective_outflow: None }
+    }
+
+    /// Advective outflow initialised to `vel` with characteristic `u_m`.
+    pub fn outflow(n: usize, vel: [f64; 3], um: [f64; 3]) -> BcValues {
+        BcValues { vel: vec![vel; n], advective_outflow: Some(um) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        let w = BcValues::no_slip(4);
+        assert_eq!(w.vel.len(), 4);
+        assert!(w.vel.iter().all(|v| *v == [0.0; 3]));
+        let o = BcValues::outflow(2, [1.0, 0.0, 0.0], [1.0, 0.0, 0.0]);
+        assert!(o.advective_outflow.is_some());
+    }
+
+    #[test]
+    fn default_is_neumann() {
+        assert_eq!(FaceBc::default(), FaceBc::Neumann);
+    }
+}

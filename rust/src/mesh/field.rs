@@ -1,0 +1,210 @@
+//! Global fields over a multi-block mesh, plus the sampling / interpolation
+//! utilities used for validation profiles and for the coordinate-based
+//! downsampling of high-resolution references (paper §5.1).
+
+use super::Mesh;
+
+/// Scalar field: one f64 per global cell.
+pub type ScalarField = Vec<f64>;
+
+/// Vector field stored component-major: `comp[c][cell]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VectorField {
+    pub comp: [Vec<f64>; 3],
+}
+
+impl VectorField {
+    pub fn zeros(ncells: usize) -> VectorField {
+        VectorField { comp: [vec![0.0; ncells], vec![0.0; ncells], vec![0.0; ncells]] }
+    }
+
+    pub fn ncells(&self) -> usize {
+        self.comp[0].len()
+    }
+
+    #[inline]
+    pub fn get(&self, cell: usize) -> [f64; 3] {
+        [self.comp[0][cell], self.comp[1][cell], self.comp[2][cell]]
+    }
+
+    #[inline]
+    pub fn set(&mut self, cell: usize, v: [f64; 3]) {
+        for c in 0..3 {
+            self.comp[c][cell] = v[c];
+        }
+    }
+
+    pub fn axpy(&mut self, alpha: f64, other: &VectorField) {
+        for c in 0..3 {
+            for (a, b) in self.comp[c].iter_mut().zip(&other.comp[c]) {
+                *a += alpha * b;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f64) {
+        for c in 0..3 {
+            self.comp[c].iter_mut().for_each(|v| *v *= alpha);
+        }
+    }
+
+    /// Max |u| per component over all cells.
+    pub fn max_abs(&self) -> [f64; 3] {
+        let mut m = [0.0f64; 3];
+        for c in 0..3 {
+            for v in &self.comp[c] {
+                m[c] = m[c].max(v.abs());
+            }
+        }
+        m
+    }
+
+    /// Flatten to `[comp0..., comp1..., comp2...]` (adjoint/tape interface).
+    pub fn flatten(&self, dim: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(dim * self.ncells());
+        for c in 0..dim {
+            out.extend_from_slice(&self.comp[c]);
+        }
+        out
+    }
+
+    pub fn from_flat(dim: usize, ncells: usize, flat: &[f64]) -> VectorField {
+        let mut f = VectorField::zeros(ncells);
+        for c in 0..dim {
+            f.comp[c].copy_from_slice(&flat[c * ncells..(c + 1) * ncells]);
+        }
+        f
+    }
+}
+
+/// Nearest-cell sample of a scalar field at physical point `p`.
+pub fn sample_nearest(mesh: &Mesh, field: &[f64], p: [f64; 3]) -> f64 {
+    field[nearest_cell(mesh, p)]
+}
+
+/// Global id of the cell whose center is nearest to `p`.
+pub fn nearest_cell(mesh: &Mesh, p: [f64; 3]) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for b in &mesh.blocks {
+        for (l, c) in b.centers.iter().enumerate() {
+            let d = (c[0] - p[0]).powi(2) + (c[1] - p[1]).powi(2) + (c[2] - p[2]).powi(2);
+            if d < best_d {
+                best_d = d;
+                best = b.offset + l;
+            }
+        }
+    }
+    best
+}
+
+/// Inverse-distance-weighted interpolation (k=4 nearest cell centers) of a
+/// scalar field at `p` — the coordinate-based resampling used to downsample
+/// high-resolution reference data onto coarse grids.
+pub fn sample_idw(mesh: &Mesh, field: &[f64], p: [f64; 3]) -> f64 {
+    let mut best: [(f64, usize); 4] = [(f64::INFINITY, 0); 4];
+    for b in &mesh.blocks {
+        for (l, c) in b.centers.iter().enumerate() {
+            let d = (c[0] - p[0]).powi(2) + (c[1] - p[1]).powi(2) + (c[2] - p[2]).powi(2);
+            if d < best[3].0 {
+                best[3] = (d, b.offset + l);
+                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            }
+        }
+    }
+    if best[0].0 < 1e-24 {
+        return field[best[0].1];
+    }
+    let mut wsum = 0.0;
+    let mut acc = 0.0;
+    for (d, idx) in best {
+        if d.is_finite() {
+            let w = 1.0 / d;
+            wsum += w;
+            acc += w * field[idx];
+        }
+    }
+    acc / wsum
+}
+
+/// Resample `src_field` (on `src`) onto every cell center of `dst` — used to
+/// build coarse-grid training references from fine simulations.
+pub fn resample(src: &Mesh, src_field: &[f64], dst: &Mesh) -> Vec<f64> {
+    let mut out = vec![0.0; dst.ncells];
+    for b in &dst.blocks {
+        for (l, c) in b.centers.iter().enumerate() {
+            out[b.offset + l] = sample_idw(src, src_field, *c);
+        }
+    }
+    out
+}
+
+/// Extract a profile of `field` along a line: samples at `npts` points from
+/// `a` to `b`, returning (arc positions in `[0,1]`, values).
+pub fn line_profile(
+    mesh: &Mesh,
+    field: &[f64],
+    a: [f64; 3],
+    b: [f64; 3],
+    npts: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let mut ts = Vec::with_capacity(npts);
+    let mut vs = Vec::with_capacity(npts);
+    for i in 0..npts {
+        let t = (i as f64 + 0.5) / npts as f64;
+        let p = [
+            a[0] + t * (b[0] - a[0]),
+            a[1] + t * (b[1] - a[1]),
+            a[2] + t * (b[2] - a[2]),
+        ];
+        ts.push(t);
+        vs.push(sample_idw(mesh, field, p));
+    }
+    (ts, vs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gen;
+    use super::*;
+
+    #[test]
+    fn vector_field_roundtrip_flatten() {
+        let mut f = VectorField::zeros(4);
+        f.set(1, [1.0, 2.0, 3.0]);
+        f.set(3, [-1.0, 0.5, 0.0]);
+        let flat = f.flatten(3);
+        let g = VectorField::from_flat(3, 4, &flat);
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn nearest_sample_picks_right_cell() {
+        let m = gen::periodic_box2d(4, 4, 1.0, 1.0);
+        let mut field = vec![0.0; m.ncells];
+        // cell centers at 0.125 + i*0.25
+        let target = m.gid(0, 2, 1, 0);
+        field[target] = 7.0;
+        assert_eq!(sample_nearest(&m, &field, [0.63, 0.37, 0.5]), 7.0);
+    }
+
+    #[test]
+    fn idw_is_exact_on_cell_centers() {
+        let m = gen::periodic_box2d(5, 5, 1.0, 1.0);
+        let field: Vec<f64> = (0..m.ncells).map(|i| i as f64).collect();
+        let c = m.blocks[0].centers[7];
+        assert!((sample_idw(&m, &field, c) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resample_of_linear_field_is_accurate() {
+        let fine = gen::periodic_box2d(32, 32, 1.0, 1.0);
+        let coarse = gen::periodic_box2d(8, 8, 1.0, 1.0);
+        let f: Vec<f64> = fine.blocks[0].centers.iter().map(|c| 2.0 * c[0] + c[1]).collect();
+        let r = resample(&fine, &f, &coarse);
+        for (l, c) in coarse.blocks[0].centers.iter().enumerate() {
+            let expect = 2.0 * c[0] + c[1];
+            assert!((r[l] - expect).abs() < 0.05, "{} vs {}", r[l], expect);
+        }
+    }
+}

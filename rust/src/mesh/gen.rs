@@ -1,0 +1,559 @@
+//! Mesh generators for every scenario in the paper: periodic boxes (gradient
+//! validation, §4.2), plane channels (Poiseuille B.1, TCF B.6), lid-driven
+//! cavities (B.2), the 3×3-blocks-with-hole vortex-street grid (B.4), the
+//! 3-block backward-facing step (B.5), and rotationally distorted grids for
+//! the non-orthogonal path (B.1/B.2).
+
+use super::block::Block;
+use super::boundary::{BcValues, FaceBc};
+use super::{Mesh, FACE_XN, FACE_XP, FACE_YN, FACE_YP, FACE_ZN, FACE_ZP};
+
+/// Uniform 1D coordinates: n cells over [0, l].
+pub fn uniform_coords(n: usize, lo: f64, l: f64) -> Vec<f64> {
+    (0..=n).map(|i| lo + l * i as f64 / n as f64).collect()
+}
+
+/// Symmetric two-sided geometric grading over [lo, lo+l]: spacing shrinks by
+/// `ratio` per cell toward both ends (ratio > 1 refines toward the walls).
+pub fn graded_coords_both(n: usize, lo: f64, l: f64, ratio: f64) -> Vec<f64> {
+    assert!(n >= 2);
+    let half = n / 2;
+    // spacings from wall to center: d, d*r, d*r^2, ...
+    let mut sp = Vec::with_capacity(n);
+    for i in 0..half {
+        sp.push(ratio.powi(i as i32));
+    }
+    let mut spacings: Vec<f64> = sp.clone();
+    if n % 2 == 1 {
+        spacings.push(ratio.powi(half as i32));
+    }
+    spacings.extend(sp.iter().rev());
+    let total: f64 = spacings.iter().sum();
+    let mut xs = Vec::with_capacity(n + 1);
+    let mut acc = 0.0;
+    xs.push(lo);
+    for s in &spacings {
+        acc += s / total * l;
+        xs.push(lo + acc);
+    }
+    *xs.last_mut().unwrap() = lo + l; // avoid fp drift
+    xs
+}
+
+/// One-sided geometric grading: refinement toward `lo` end if `toward_lo`.
+pub fn graded_coords_one(n: usize, lo: f64, l: f64, ratio: f64, toward_lo: bool) -> Vec<f64> {
+    let mut spacings: Vec<f64> = (0..n).map(|i| ratio.powi(i as i32)).collect();
+    if !toward_lo {
+        spacings.reverse();
+    }
+    let total: f64 = spacings.iter().sum();
+    let mut xs = vec![lo];
+    let mut acc = 0.0;
+    for s in &spacings {
+        acc += s / total * l;
+        xs.push(lo + acc);
+    }
+    *xs.last_mut().unwrap() = lo + l;
+    xs
+}
+
+fn periodic_self(block: usize) -> impl Fn(usize) -> FaceBc {
+    move |face: usize| FaceBc::Connection { block, face: super::opposite(face) }
+}
+
+/// Fully periodic 2D box (the §4.2 gradient-validation domain is 18×16).
+pub fn periodic_box2d(nx: usize, ny: usize, lx: f64, ly: f64) -> Mesh {
+    let mut b = Block::from_coords1d(
+        2,
+        &uniform_coords(nx, 0.0, lx),
+        &uniform_coords(ny, 0.0, ly),
+        &[0.0, 1.0],
+    );
+    let p = periodic_self(0);
+    b.faces = [p(FACE_XN), p(FACE_XP), p(FACE_YN), p(FACE_YP), FaceBc::Neumann, FaceBc::Neumann];
+    Mesh::new(2, vec![b], vec![])
+}
+
+/// Fully periodic 3D box.
+pub fn periodic_box3d(n: [usize; 3], l: [f64; 3]) -> Mesh {
+    let mut b = Block::from_coords1d(
+        3,
+        &uniform_coords(n[0], 0.0, l[0]),
+        &uniform_coords(n[1], 0.0, l[1]),
+        &uniform_coords(n[2], 0.0, l[2]),
+    );
+    let p = periodic_self(0);
+    b.faces = [p(0), p(1), p(2), p(3), p(4), p(5)];
+    Mesh::new(3, vec![b], vec![])
+}
+
+/// 2D plane channel: periodic in x, no-slip walls at y=0 and y=ly
+/// (Poiseuille, B.1). `wall_ratio > 1` grades the mesh toward the walls.
+pub fn channel2d(nx: usize, ny: usize, lx: f64, ly: f64, wall_ratio: f64, refined: bool) -> Mesh {
+    let ys = if refined {
+        graded_coords_both(ny, 0.0, ly, wall_ratio)
+    } else {
+        uniform_coords(ny, 0.0, ly)
+    };
+    let mut b = Block::from_coords1d(2, &uniform_coords(nx, 0.0, lx), &ys, &[0.0, 1.0]);
+    let p = periodic_self(0);
+    let wall = BcValues::no_slip(b.face_ncells(FACE_YN));
+    b.faces = [
+        p(FACE_XN),
+        p(FACE_XP),
+        FaceBc::Dirichlet { values: 0 },
+        FaceBc::Dirichlet { values: 1 },
+        FaceBc::Neumann,
+        FaceBc::Neumann,
+    ];
+    Mesh::new(2, vec![b], vec![wall.clone(), wall])
+}
+
+/// Two-block version of `channel2d` split along x (tests block connections).
+pub fn two_block_channel2d(nx_half: usize, ny: usize, _unused: usize) -> Mesh {
+    let ys = uniform_coords(ny, 0.0, 1.0);
+    let mut b0 = Block::from_coords1d(2, &uniform_coords(nx_half, 0.0, 1.0), &ys, &[0.0, 1.0]);
+    let mut b1 = Block::from_coords1d(2, &uniform_coords(nx_half, 1.0, 1.0), &ys, &[0.0, 1.0]);
+    let wall_n = b0.face_ncells(FACE_YN);
+    b0.faces = [
+        FaceBc::Connection { block: 1, face: FACE_XP }, // periodic wrap via b1
+        FaceBc::Connection { block: 1, face: FACE_XN },
+        FaceBc::Dirichlet { values: 0 },
+        FaceBc::Dirichlet { values: 1 },
+        FaceBc::Neumann,
+        FaceBc::Neumann,
+    ];
+    b1.faces = [
+        FaceBc::Connection { block: 0, face: FACE_XP },
+        FaceBc::Connection { block: 0, face: FACE_XN },
+        FaceBc::Dirichlet { values: 2 },
+        FaceBc::Dirichlet { values: 3 },
+        FaceBc::Neumann,
+        FaceBc::Neumann,
+    ];
+    let w = BcValues::no_slip(wall_n);
+    Mesh::new(2, vec![b0, b1], vec![w.clone(), w.clone(), w.clone(), w])
+}
+
+/// 2D lid-driven cavity: closed box, lid at y=ly moving with `lid_vel` in +x.
+pub fn cavity2d(n: usize, l: f64, lid_vel: f64, refined: bool) -> Mesh {
+    let coords = if refined {
+        graded_coords_both(n, 0.0, l, 1.15)
+    } else {
+        uniform_coords(n, 0.0, l)
+    };
+    let mut b = Block::from_coords1d(2, &coords, &coords, &[0.0, 1.0]);
+    let nface = n;
+    b.faces = [
+        FaceBc::Dirichlet { values: 0 },
+        FaceBc::Dirichlet { values: 1 },
+        FaceBc::Dirichlet { values: 2 },
+        FaceBc::Dirichlet { values: 3 }, // lid
+        FaceBc::Neumann,
+        FaceBc::Neumann,
+    ];
+    let wall = BcValues::no_slip(nface);
+    let lid = BcValues::constant(nface, [lid_vel, 0.0, 0.0]);
+    Mesh::new(2, vec![b], vec![wall.clone(), wall.clone(), wall, lid])
+}
+
+/// 3D lid-driven cavity (lid at y=+l moving in +x; z closed no-slip).
+pub fn cavity3d(n: usize, l: f64, lid_vel: f64, refined: bool) -> Mesh {
+    let coords = if refined {
+        graded_coords_both(n, 0.0, l, 1.15)
+    } else {
+        uniform_coords(n, 0.0, l)
+    };
+    let mut b = Block::from_coords1d(3, &coords, &coords, &coords);
+    let nface = n * n;
+    b.faces = [
+        FaceBc::Dirichlet { values: 0 },
+        FaceBc::Dirichlet { values: 1 },
+        FaceBc::Dirichlet { values: 2 },
+        FaceBc::Dirichlet { values: 3 }, // lid
+        FaceBc::Dirichlet { values: 4 },
+        FaceBc::Dirichlet { values: 5 },
+    ];
+    let wall = BcValues::no_slip(nface);
+    let lid = BcValues::constant(nface, [lid_vel, 0.0, 0.0]);
+    Mesh::new(
+        3,
+        vec![b],
+        vec![wall.clone(), wall.clone(), wall.clone(), lid, wall.clone(), wall],
+    )
+}
+
+/// 3D plane channel for TCF (B.6): periodic x and z, no-slip walls ±y,
+/// exponential wall refinement with the given base (paper uses 1.095).
+pub fn channel3d(n: [usize; 3], l: [f64; 3], refine_base: f64) -> Mesh {
+    let xs = uniform_coords(n[0], 0.0, l[0]);
+    let ys = if refine_base > 1.0 {
+        graded_coords_both(n[1], 0.0, l[1], refine_base)
+    } else {
+        uniform_coords(n[1], 0.0, l[1])
+    };
+    let zs = uniform_coords(n[2], 0.0, l[2]);
+    let mut b = Block::from_coords1d(3, &xs, &ys, &zs);
+    let p = periodic_self(0);
+    let nface = n[0] * n[2];
+    b.faces = [
+        p(FACE_XN),
+        p(FACE_XP),
+        FaceBc::Dirichlet { values: 0 },
+        FaceBc::Dirichlet { values: 1 },
+        p(FACE_ZN),
+        p(FACE_ZP),
+    ];
+    let wall = BcValues::no_slip(nface);
+    Mesh::new(3, vec![b], vec![wall.clone(), wall])
+}
+
+/// Rotationally distorted closed 2D box (B.1/B.2 non-orthogonal validation):
+/// vertices are rotated around the domain center by an angle that decays
+/// with radius, producing a smooth non-orthogonal grid.
+pub fn distorted_cavity2d(n: usize, l: f64, lid_vel: f64, max_angle: f64) -> Mesh {
+    let coords = uniform_coords(n, 0.0, l);
+    let cx = l / 2.0;
+    let sigma = l / 3.0;
+    let mut verts = Vec::new();
+    for z in [0.0, 1.0] {
+        for y in &coords {
+            for x in &coords {
+                let (dx, dy) = (x - cx, y - cx);
+                let r2 = dx * dx + dy * dy;
+                let theta = max_angle * (-r2 / (sigma * sigma)).exp();
+                let (s, c) = theta.sin_cos();
+                verts.push([cx + c * dx - s * dy, cx + s * dx + c * dy, z]);
+            }
+        }
+    }
+    let mut b = Block::from_vertices(2, [n, n, 1], verts);
+    b.faces = [
+        FaceBc::Dirichlet { values: 0 },
+        FaceBc::Dirichlet { values: 1 },
+        FaceBc::Dirichlet { values: 2 },
+        FaceBc::Dirichlet { values: 3 },
+        FaceBc::Neumann,
+        FaceBc::Neumann,
+    ];
+    let wall = BcValues::no_slip(n);
+    let lid = BcValues::constant(n, [lid_vel, 0.0, 0.0]);
+    Mesh::new(2, vec![b], vec![wall.clone(), wall.clone(), wall, lid])
+}
+
+/// Parameters for the 2D vortex-street grid (B.4).
+pub struct VortexStreetCfg {
+    /// Domain length and height (paper: 16 × 8 m).
+    pub lx: f64,
+    pub ly: f64,
+    /// Obstacle leading-edge x and width (paper: 3, 1.5).
+    pub obs_x: f64,
+    pub obs_w: f64,
+    /// Obstacle height y_s, vertically centered.
+    pub obs_h: f64,
+    /// Cells per x-band (upstream / obstacle / downstream) and
+    /// y-band (below / obstacle / above).
+    pub nx: [usize; 3],
+    pub ny: [usize; 3],
+    /// Inflow peak velocity and Gaussian width.
+    pub u_in: f64,
+    pub sigma: f64,
+}
+
+impl Default for VortexStreetCfg {
+    fn default() -> Self {
+        VortexStreetCfg {
+            lx: 16.0,
+            ly: 8.0,
+            obs_x: 3.0,
+            obs_w: 1.5,
+            obs_h: 1.0,
+            nx: [12, 6, 30],
+            ny: [14, 6, 14],
+            u_in: 1.0,
+            sigma: 0.4,
+        }
+    }
+}
+
+/// 3×3 multi-block grid with the center block removed (the square obstacle).
+/// Block layout (bi = col + 3*row internally, hole skipped):
+/// ```text
+///   row 2 (top):    B5 B6 B7
+///   row 1 (mid):    B3 ## B4      (## = obstacle)
+///   row 0 (bottom): B0 B1 B2
+/// ```
+/// Inlet: Gaussian profile at x=0; outlet: advective outflow at x=lx;
+/// top/bottom and obstacle faces: no-slip walls.
+pub fn vortex_street(cfg: &VortexStreetCfg) -> Mesh {
+    let xb = [0.0, cfg.obs_x, cfg.obs_x + cfg.obs_w, cfg.lx];
+    let y0 = (cfg.ly - cfg.obs_h) / 2.0;
+    let y1 = (cfg.ly + cfg.obs_h) / 2.0;
+    let yb = [0.0, y0, y1, cfg.ly];
+    // coordinates per band; mild grading toward the obstacle in outer bands
+    let xs: Vec<Vec<f64>> = vec![
+        graded_coords_one(cfg.nx[0], xb[0], xb[1] - xb[0], 1.06, false),
+        uniform_coords(cfg.nx[1], xb[1], xb[2] - xb[1]),
+        graded_coords_one(cfg.nx[2], xb[2], xb[3] - xb[2], 1.04, true),
+    ];
+    let ys: Vec<Vec<f64>> = vec![
+        graded_coords_one(cfg.ny[0], yb[0], yb[1] - yb[0], 1.05, false),
+        uniform_coords(cfg.ny[1], yb[1], yb[2] - yb[1]),
+        graded_coords_one(cfg.ny[2], yb[2], yb[3] - yb[2], 1.05, true),
+    ];
+    // map (col,row) -> block index (hole at (1,1))
+    let id = |col: usize, row: usize| -> Option<usize> {
+        match (col, row) {
+            (1, 1) => None,
+            (c, 0) => Some(c),              // 0,1,2
+            (0, 1) => Some(3),
+            (2, 1) => Some(4),
+            (c, 2) => Some(5 + c),          // 5,6,7
+            _ => unreachable!(),
+        }
+    };
+    let mut blocks = Vec::new();
+    let mut bc_values: Vec<BcValues> = Vec::new();
+    let mut coords_of = Vec::new(); // (col,row) of each block
+    for row in 0..3 {
+        for col in 0..3 {
+            if id(col, row).is_none() {
+                continue;
+            }
+            blocks.push(Block::from_coords1d(2, &xs[col], &ys[row], &[0.0, 1.0]));
+            coords_of.push((col, row));
+        }
+    }
+    // assign faces
+    for (bi, (col, row)) in coords_of.clone().into_iter().enumerate() {
+        let b = &blocks[bi];
+        let mut faces: [FaceBc; 6] = Default::default();
+        // -x
+        faces[FACE_XN] = if col == 0 {
+            // inlet: Gaussian profile u(y) centered at domain mid-height
+            let mut vel = Vec::new();
+            for j in 0..b.shape[1] {
+                let yc = 0.5 * (ys[row][j] + ys[row][j + 1]) - cfg.ly / 2.0;
+                let u = cfg.u_in
+                    * (1.0 / (2.0 * std::f64::consts::PI * cfg.sigma * cfg.sigma).sqrt())
+                    * (-yc * yc / (2.0 * cfg.sigma * cfg.sigma)).exp();
+                vel.push([u, 0.0, 0.0]);
+            }
+            bc_values.push(BcValues::profile(vel));
+            FaceBc::Dirichlet { values: bc_values.len() - 1 }
+        } else if let Some(nb) = id(col - 1, row) {
+            FaceBc::Connection { block: nb, face: FACE_XP }
+        } else {
+            // obstacle right wall (col=2, row=1 looking left at hole)
+            bc_values.push(BcValues::no_slip(b.shape[1]));
+            FaceBc::Dirichlet { values: bc_values.len() - 1 }
+        };
+        // +x
+        faces[FACE_XP] = if col == 2 {
+            bc_values.push(BcValues::outflow(b.shape[1], [cfg.u_in * 0.4, 0.0, 0.0], [cfg.u_in * 0.4, 0.0, 0.0]));
+            FaceBc::Dirichlet { values: bc_values.len() - 1 }
+        } else if let Some(nb) = id(col + 1, row) {
+            FaceBc::Connection { block: nb, face: FACE_XN }
+        } else {
+            bc_values.push(BcValues::no_slip(b.shape[1]));
+            FaceBc::Dirichlet { values: bc_values.len() - 1 }
+        };
+        // -y
+        faces[FACE_YN] = if row == 0 {
+            bc_values.push(BcValues::no_slip(b.shape[0]));
+            FaceBc::Dirichlet { values: bc_values.len() - 1 }
+        } else if let Some(nb) = id(col, row - 1) {
+            FaceBc::Connection { block: nb, face: FACE_YP }
+        } else {
+            bc_values.push(BcValues::no_slip(b.shape[0]));
+            FaceBc::Dirichlet { values: bc_values.len() - 1 }
+        };
+        // +y
+        faces[FACE_YP] = if row == 2 {
+            bc_values.push(BcValues::no_slip(b.shape[0]));
+            FaceBc::Dirichlet { values: bc_values.len() - 1 }
+        } else if let Some(nb) = id(col, row + 1) {
+            FaceBc::Connection { block: nb, face: FACE_YN }
+        } else {
+            bc_values.push(BcValues::no_slip(b.shape[0]));
+            FaceBc::Dirichlet { values: bc_values.len() - 1 }
+        };
+        blocks[bi].faces = faces;
+    }
+    Mesh::new(2, blocks, bc_values)
+}
+
+/// Parameters for the 2D backward-facing step (B.5).
+pub struct BfsCfg {
+    /// Gap between step and top wall (paper: h = 1).
+    pub h: f64,
+    /// Step height s (expansion ratio ER = (h+s)/h).
+    pub s: f64,
+    /// Inlet length (paper: 5h) and downstream length (paper: 35h).
+    pub l_in: f64,
+    pub l_down: f64,
+    /// Cells: inlet x, downstream x, upper y (gap), lower y (step).
+    pub nx_in: usize,
+    pub nx_down: usize,
+    pub ny_up: usize,
+    pub ny_low: usize,
+    /// Bulk velocity of the parabolic inlet profile.
+    pub u_bulk: f64,
+}
+
+impl Default for BfsCfg {
+    fn default() -> Self {
+        BfsCfg {
+            h: 1.0,
+            s: 0.875,
+            l_in: 5.0,
+            l_down: 35.0,
+            nx_in: 10,
+            nx_down: 64,
+            ny_up: 12,
+            ny_low: 10,
+            u_bulk: 1.0,
+        }
+    }
+}
+
+/// 3-block BFS mesh:
+/// B0 = inlet channel (above the step), B1 = downstream upper, B2 = downstream lower.
+/// Inlet: parabolic Dirichlet; outlet: advective outflow; all other faces no-slip.
+pub fn bfs(cfg: &BfsCfg) -> Mesh {
+    let y_step = cfg.s;
+    let xs_in = graded_coords_one(cfg.nx_in, -cfg.l_in, cfg.l_in, 1.08, false);
+    let xs_down = graded_coords_one(cfg.nx_down, 0.0, cfg.l_down, 1.035, true);
+    let ys_up = graded_coords_both(cfg.ny_up, y_step, cfg.h, 1.08);
+    let ys_low = graded_coords_both(cfg.ny_low, 0.0, cfg.s, 1.08);
+
+    let mut b0 = Block::from_coords1d(2, &xs_in, &ys_up, &[0.0, 1.0]);
+    let mut b1 = Block::from_coords1d(2, &xs_down, &ys_up, &[0.0, 1.0]);
+    let mut b2 = Block::from_coords1d(2, &xs_down, &ys_low, &[0.0, 1.0]);
+
+    // inlet parabolic profile U = 6 U_b (y'/h)(1 - y'/h), y' measured from step top
+    let mut inlet = Vec::new();
+    for j in 0..cfg.ny_up {
+        let yc = 0.5 * (ys_up[j] + ys_up[j + 1]) - y_step;
+        let eta = yc / cfg.h;
+        inlet.push([6.0 * cfg.u_bulk * eta * (1.0 - eta), 0.0, 0.0]);
+    }
+    let mut bc_values = vec![
+        BcValues::profile(inlet),                  // 0 inlet
+        BcValues::no_slip(cfg.nx_in),              // 1 b0 bottom (step top)
+        BcValues::no_slip(cfg.nx_in),              // 2 b0 top
+        BcValues::no_slip(cfg.nx_down),            // 3 b1 top
+        BcValues::no_slip(cfg.nx_down),            // 4 b2 bottom
+        BcValues::no_slip(cfg.ny_low),             // 5 b2 step wall (-x)
+    ];
+    let out_vel = [cfg.u_bulk, 0.0, 0.0];
+    bc_values.push(BcValues::outflow(cfg.ny_up, out_vel, out_vel)); // 6 b1 outlet
+    bc_values.push(BcValues::outflow(cfg.ny_low, out_vel, out_vel)); // 7 b2 outlet
+
+    b0.faces = [
+        FaceBc::Dirichlet { values: 0 },
+        FaceBc::Connection { block: 1, face: FACE_XN },
+        FaceBc::Dirichlet { values: 1 },
+        FaceBc::Dirichlet { values: 2 },
+        FaceBc::Neumann,
+        FaceBc::Neumann,
+    ];
+    b1.faces = [
+        FaceBc::Connection { block: 0, face: FACE_XP },
+        FaceBc::Dirichlet { values: 6 },
+        FaceBc::Connection { block: 2, face: FACE_YP },
+        FaceBc::Dirichlet { values: 3 },
+        FaceBc::Neumann,
+        FaceBc::Neumann,
+    ];
+    b2.faces = [
+        FaceBc::Dirichlet { values: 5 },
+        FaceBc::Dirichlet { values: 7 },
+        FaceBc::Dirichlet { values: 4 },
+        FaceBc::Connection { block: 1, face: FACE_YN },
+        FaceBc::Neumann,
+        FaceBc::Neumann,
+    ];
+    Mesh::new(2, vec![b0, b1, b2], bc_values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graded_coords_cover_interval() {
+        let xs = graded_coords_both(9, 0.0, 2.0, 1.2);
+        assert_eq!(xs.len(), 10);
+        assert_eq!(xs[0], 0.0);
+        assert_eq!(xs[9], 2.0);
+        // spacing near wall smaller than center
+        let d0 = xs[1] - xs[0];
+        let dc = xs[5] - xs[4];
+        assert!(d0 < dc);
+        // monotone
+        for w in xs.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn graded_one_sided_direction() {
+        let a = graded_coords_one(8, 0.0, 1.0, 1.3, true);
+        assert!(a[1] - a[0] < a[8] - a[7]);
+        let b = graded_coords_one(8, 0.0, 1.0, 1.3, false);
+        assert!(b[1] - b[0] > b[8] - b[7]);
+    }
+
+    #[test]
+    fn vortex_street_mesh_is_consistent() {
+        let m = vortex_street(&VortexStreetCfg {
+            nx: [4, 3, 6],
+            ny: [4, 3, 4],
+            ..Default::default()
+        });
+        assert_eq!(m.blocks.len(), 8);
+        // every cell's faces resolve without panic; volume > 0
+        assert!(m.total_volume() > 0.0);
+        // hole: total volume = domain minus obstacle
+        let cfg = VortexStreetCfg::default();
+        let expect = cfg.lx * cfg.ly - cfg.obs_w * cfg.obs_h;
+        assert!((m.total_volume() - expect).abs() < 1e-9, "{}", m.total_volume());
+    }
+
+    #[test]
+    fn bfs_mesh_volume() {
+        let cfg = BfsCfg::default();
+        let m = bfs(&cfg);
+        let expect = cfg.l_in * cfg.h + cfg.l_down * (cfg.h + cfg.s);
+        assert!((m.total_volume() - expect).abs() < 1e-9);
+        assert_eq!(m.blocks.len(), 3);
+    }
+
+    #[test]
+    fn bfs_connection_symmetry() {
+        let m = bfs(&BfsCfg { nx_in: 4, nx_down: 8, ny_up: 6, ny_low: 4, ..Default::default() });
+        // b1 bottom row connects to b2 top row
+        let up = m.gid(1, 3, 0, 0);
+        let lo = m.gid(2, 3, 3, 0);
+        assert_eq!(m.topo.at(up, FACE_YN), super::super::NeighRef::Cell(lo as u32));
+        assert_eq!(m.topo.at(lo, FACE_YP), super::super::NeighRef::Cell(up as u32));
+    }
+
+    #[test]
+    fn distorted_cavity_is_non_orthogonal_but_valid() {
+        let m = distorted_cavity2d(8, 1.0, 1.0, 0.25);
+        assert!(m.blocks[0].non_orthogonal);
+        assert!((m.total_volume() - 1.0).abs() < 0.05);
+        for j in &m.blocks[0].jac {
+            assert!(*j > 0.0);
+        }
+    }
+
+    #[test]
+    fn cavity3d_shape() {
+        let m = cavity3d(6, 1.0, 1.0, true);
+        assert_eq!(m.ncells, 216);
+        assert_eq!(m.bc_values.len(), 6);
+    }
+}

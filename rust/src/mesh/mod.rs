@@ -1,0 +1,167 @@
+//! Multi-block structured mesh substrate (paper §2.2, Appendix A.3.2).
+//!
+//! The domain is split into blocks; each block is a regular grid of
+//! quadrilateral (2D) / hexahedral (3D) cells whose vertices may be graded
+//! and distorted. Precomputed per-cell transformation metrics `T`, `J`, `α`
+//! relate computational space ξ to physical space x. Each block face carries
+//! exactly one boundary: a conformal connection to another block face
+//! (matching resolution, identity orientation), a prescribed Dirichlet
+//! velocity (optionally updated as a non-reflecting advective outflow,
+//! A.24), or zero-gradient Neumann.
+
+pub mod block;
+pub mod boundary;
+pub mod field;
+pub mod gen;
+pub mod topology;
+
+pub use block::Block;
+pub use boundary::{BcValues, FaceBc};
+pub use field::{ScalarField, VectorField};
+pub use topology::{NeighRef, Topology};
+
+/// Face identifiers: 2*axis + side (side 0 = negative/low, 1 = positive/high).
+pub const FACE_XN: usize = 0;
+pub const FACE_XP: usize = 1;
+pub const FACE_YN: usize = 2;
+pub const FACE_YP: usize = 3;
+pub const FACE_ZN: usize = 4;
+pub const FACE_ZP: usize = 5;
+
+#[inline]
+pub fn face_axis(face: usize) -> usize {
+    face / 2
+}
+
+#[inline]
+pub fn face_side(face: usize) -> usize {
+    face % 2
+}
+
+/// Opposite face on the same axis.
+#[inline]
+pub fn opposite(face: usize) -> usize {
+    face ^ 1
+}
+
+/// Sign N_f of the logical face direction: +1 for high faces, −1 for low.
+#[inline]
+pub fn face_sign(face: usize) -> f64 {
+    if face % 2 == 1 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// A multi-block mesh with global cell numbering across blocks.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    pub dim: usize,
+    pub blocks: Vec<Block>,
+    /// Dirichlet boundary value sets, indexed by `FaceBc::Dirichlet.values`.
+    pub bc_values: Vec<BcValues>,
+    pub ncells: usize,
+    pub topo: Topology,
+    /// Denormalized per-global-cell metrics (assembly-friendly views of the
+    /// per-block data): Jacobian, transform T, α, and cell centers.
+    pub jac: Vec<f64>,
+    pub t: Vec<block::Mat3>,
+    pub alpha: Vec<block::Mat3>,
+    pub centers: Vec<[f64; 3]>,
+    /// True if any block is non-orthogonal (enables deferred corrections).
+    pub non_orthogonal: bool,
+}
+
+impl Mesh {
+    /// Assemble a mesh from blocks (which must already carry their face BCs)
+    /// and Dirichlet value sets; computes global offsets and the topology.
+    pub fn new(dim: usize, mut blocks: Vec<Block>, bc_values: Vec<BcValues>) -> Mesh {
+        let mut offset = 0;
+        for b in blocks.iter_mut() {
+            b.offset = offset;
+            offset += b.ncells();
+        }
+        let topo = Topology::build(dim, &blocks);
+        let mut jac = Vec::with_capacity(offset);
+        let mut t = Vec::with_capacity(offset);
+        let mut alpha = Vec::with_capacity(offset);
+        let mut centers = Vec::with_capacity(offset);
+        let mut non_orthogonal = false;
+        for b in &blocks {
+            jac.extend_from_slice(&b.jac);
+            t.extend_from_slice(&b.t);
+            alpha.extend_from_slice(&b.alpha);
+            centers.extend_from_slice(&b.centers);
+            non_orthogonal |= b.non_orthogonal;
+        }
+        Mesh { dim, blocks, bc_values, ncells: offset, topo, jac, t, alpha, centers, non_orthogonal }
+    }
+
+    /// Locate the (block, local linear index) of a global cell id.
+    pub fn locate(&self, gid: usize) -> (usize, usize) {
+        for (bi, b) in self.blocks.iter().enumerate() {
+            if gid >= b.offset && gid < b.offset + b.ncells() {
+                return (bi, gid - b.offset);
+            }
+        }
+        panic!("cell id {gid} out of range");
+    }
+
+    /// Total physical volume (sum of J over all cells).
+    pub fn total_volume(&self) -> f64 {
+        self.blocks.iter().map(|b| b.jac.iter().sum::<f64>()).sum()
+    }
+
+    /// Smallest cell extent in each physical direction (for CFL limits):
+    /// estimated as 1/max(|T_ji|) per axis.
+    pub fn min_spacing(&self) -> f64 {
+        let mut max_t: f64 = 0.0;
+        for b in &self.blocks {
+            for t in &b.t {
+                for row in t.iter().take(self.dim) {
+                    for v in row.iter().take(self.dim) {
+                        max_t = max_t.max(v.abs());
+                    }
+                }
+            }
+        }
+        1.0 / max_t.max(1e-300)
+    }
+
+    /// Global cell id for block `bi`, local coords (i, j, k).
+    #[inline]
+    pub fn gid(&self, bi: usize, i: usize, j: usize, k: usize) -> usize {
+        let b = &self.blocks[bi];
+        b.offset + b.lidx(i, j, k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn face_helpers() {
+        assert_eq!(face_axis(FACE_YP), 1);
+        assert_eq!(face_side(FACE_YP), 1);
+        assert_eq!(opposite(FACE_XN), FACE_XP);
+        assert_eq!(face_sign(FACE_ZN), -1.0);
+        assert_eq!(face_sign(FACE_ZP), 1.0);
+    }
+
+    #[test]
+    fn mesh_offsets_and_locate() {
+        let m = gen::channel2d(8, 4, 2.0, 1.0, 1.0, false);
+        assert_eq!(m.ncells, 32);
+        let (bi, li) = m.locate(10);
+        assert_eq!(bi, 0);
+        assert_eq!(li, 10);
+    }
+
+    #[test]
+    fn total_volume_of_unit_box() {
+        let m = gen::periodic_box2d(16, 8, 2.0, 1.0);
+        assert!((m.total_volume() - 2.0).abs() < 1e-12);
+    }
+}

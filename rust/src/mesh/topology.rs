@@ -1,0 +1,162 @@
+//! Global cell connectivity: for every cell and face direction, either
+//! the neighboring global cell id (same block or across a conformal block
+//! connection, including periodic self-connections) or a boundary reference.
+//! Precomputed once per mesh; the FVM assembly and all gradient operations
+//! are written against this table.
+
+use super::block::Block;
+use super::{face_axis, face_side, opposite};
+
+/// What lies across a given face of a cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NeighRef {
+    /// Interior or block-connected neighbor (global cell id).
+    Cell(u32),
+    /// Dirichlet boundary: (bc_values index, face-cell index on that face).
+    Dirichlet { values: u32, face_cell: u32 },
+    /// Zero-gradient boundary.
+    Neumann,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Topology {
+    /// `neigh[cell][face]` for face in 0..6.
+    pub neigh: Vec<[NeighRef; 6]>,
+}
+
+impl Topology {
+    pub fn build(dim: usize, blocks: &[Block]) -> Topology {
+        let ncells: usize = blocks.iter().map(|b| b.ncells()).sum();
+        let mut neigh = vec![[NeighRef::Neumann; 6]; ncells];
+
+        for (bi, b) in blocks.iter().enumerate() {
+            for k in 0..b.shape[2] {
+                for j in 0..b.shape[1] {
+                    for i in 0..b.shape[0] {
+                        let gid = b.offset + b.lidx(i, j, k);
+                        let c = [i, j, k];
+                        for face in 0..2 * dim {
+                            let ax = face_axis(face);
+                            let side = face_side(face);
+                            let interior = if side == 0 { c[ax] > 0 } else { c[ax] + 1 < b.shape[ax] };
+                            if interior {
+                                let mut cc = c;
+                                cc[ax] = if side == 0 { c[ax] - 1 } else { c[ax] + 1 };
+                                neigh[gid][face] =
+                                    NeighRef::Cell((b.offset + b.lidx(cc[0], cc[1], cc[2])) as u32);
+                            } else {
+                                neigh[gid][face] = resolve_boundary(blocks, bi, face, c);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Topology { neigh }
+    }
+
+    /// Neighbor reference of `cell` across `face`.
+    #[inline]
+    pub fn at(&self, cell: usize, face: usize) -> NeighRef {
+        self.neigh[cell][face]
+    }
+
+    /// Diagonal neighbor: step across `face_a` then `face_b`. Returns the
+    /// global id only if both steps stay on cells (used by the non-orthogonal
+    /// deferred correction, which skips boundary-adjacent diagonals as the
+    /// paper does "for clarity").
+    pub fn diag(&self, cell: usize, face_a: usize, face_b: usize) -> Option<u32> {
+        match self.neigh[cell][face_a] {
+            NeighRef::Cell(n1) => match self.neigh[n1 as usize][face_b] {
+                NeighRef::Cell(n2) => Some(n2),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+}
+
+/// Resolve what lies across `face` of boundary cell `c` in block `bi`.
+fn resolve_boundary(blocks: &[Block], bi: usize, face: usize, c: [usize; 3]) -> NeighRef {
+    let b = &blocks[bi];
+    match &b.faces[face] {
+        super::FaceBc::Connection { block, face: other_face } => {
+            let ob = &blocks[*block];
+            let oax = face_axis(*other_face);
+            let ax = face_axis(face);
+            assert_eq!(oax, ax, "connections must join faces on the same axis");
+            assert_eq!(*other_face, opposite(face) , "identity-orientation connection joins opposite faces");
+            // matching tangential resolution required
+            for a in 0..3 {
+                if a != ax {
+                    assert_eq!(
+                        b.shape[a], ob.shape[a],
+                        "conformal connection requires matching resolution on axis {a}"
+                    );
+                }
+            }
+            let mut cc = c;
+            // entering the other block from its `other_face` side
+            cc[ax] = if face_side(*other_face) == 0 { 0 } else { ob.shape[ax] - 1 };
+            NeighRef::Cell((ob.offset + ob.lidx(cc[0], cc[1], cc[2])) as u32)
+        }
+        super::FaceBc::Dirichlet { values } => NeighRef::Dirichlet {
+            values: *values as u32,
+            face_cell: b.face_lidx(face, c) as u32,
+        },
+        super::FaceBc::Neumann => NeighRef::Neumann,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::gen;
+    use super::*;
+
+    #[test]
+    fn periodic_box_wraps() {
+        let m = gen::periodic_box2d(4, 3, 1.0, 1.0);
+        // cell (0,0): -x neighbor is (3,0)
+        let gid = m.gid(0, 0, 0, 0);
+        let wrap = m.gid(0, 3, 0, 0);
+        assert_eq!(m.topo.at(gid, super::super::FACE_XN), NeighRef::Cell(wrap as u32));
+        // +y of (1,2) wraps to (1,0)
+        let gid2 = m.gid(0, 1, 2, 0);
+        let wrap2 = m.gid(0, 1, 0, 0);
+        assert_eq!(m.topo.at(gid2, super::super::FACE_YP), NeighRef::Cell(wrap2 as u32));
+    }
+
+    #[test]
+    fn channel_walls_are_dirichlet() {
+        let m = gen::channel2d(6, 4, 2.0, 1.0, 1.0, false);
+        let bottom = m.gid(0, 2, 0, 0);
+        match m.topo.at(bottom, super::super::FACE_YN) {
+            NeighRef::Dirichlet { .. } => {}
+            other => panic!("expected Dirichlet wall, got {other:?}"),
+        }
+        // periodic in x
+        let left = m.gid(0, 0, 1, 0);
+        assert_eq!(
+            m.topo.at(left, super::super::FACE_XN),
+            NeighRef::Cell(m.gid(0, 5, 1, 0) as u32)
+        );
+    }
+
+    #[test]
+    fn two_block_connection_is_symmetric() {
+        let m = gen::two_block_channel2d(4, 4, 3);
+        // block 0 right edge connects to block 1 left edge
+        let a = m.gid(0, 3, 1, 0);
+        let bidx = m.gid(1, 0, 1, 0);
+        assert_eq!(m.topo.at(a, super::super::FACE_XP), NeighRef::Cell(bidx as u32));
+        assert_eq!(m.topo.at(bidx, super::super::FACE_XN), NeighRef::Cell(a as u32));
+    }
+
+    #[test]
+    fn diag_neighbor_interior() {
+        let m = gen::periodic_box2d(5, 5, 1.0, 1.0);
+        let c = m.gid(0, 2, 2, 0);
+        let d = m.topo.diag(c, super::super::FACE_XP, super::super::FACE_YP).unwrap();
+        assert_eq!(d as usize, m.gid(0, 3, 3, 0));
+    }
+}

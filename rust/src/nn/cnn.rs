@@ -1,0 +1,259 @@
+//! A small CNN built from multi-block conv layers + ReLU, with a manual
+//! forward tape and backward pass — the corrector architecture of paper §5
+//! (7-layer net for the 2D cases, 8-layer 3³-kernel net for the TCF SGS).
+
+use super::conv::{ConvTable, MultiBlockConv};
+use crate::mesh::Mesh;
+use crate::util::rng::Rng;
+
+/// Configuration of one conv layer.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerCfg {
+    pub cout: usize,
+    pub radius: usize,
+    pub relu: bool,
+}
+
+/// The CNN: layer configs, shared conv tables per radius, flat parameters.
+pub struct Cnn {
+    pub cin: usize,
+    pub layers: Vec<LayerCfg>,
+    pub convs: Vec<MultiBlockConv>,
+    /// Table index per layer (tables deduplicated by radius).
+    pub table_of: Vec<usize>,
+    pub tables: Vec<ConvTable>,
+    pub params: Vec<f64>,
+    /// Parameter offset of each layer in `params`.
+    pub offsets: Vec<usize>,
+}
+
+/// Forward activations, kept for the backward pass.
+pub struct CnnTape {
+    /// Pre-activation outputs per layer.
+    pub pre: Vec<Vec<Vec<f64>>>,
+    /// Post-activation outputs per layer (aliases pre when no ReLU).
+    pub post: Vec<Vec<Vec<f64>>>,
+}
+
+impl Cnn {
+    /// Build with He-initialized weights (deterministic via `seed`).
+    pub fn new(mesh: &Mesh, cin: usize, layers: Vec<LayerCfg>, seed: u64) -> Cnn {
+        let mut tables = Vec::new();
+        let mut table_of = Vec::new();
+        let mut convs = Vec::new();
+        let mut offsets = Vec::new();
+        let mut nparams = 0;
+        let mut prev_c = cin;
+        for l in &layers {
+            let ti = match tables.iter().position(|t: &ConvTable| t.radius == l.radius) {
+                Some(i) => i,
+                None => {
+                    tables.push(ConvTable::build(mesh, l.radius));
+                    tables.len() - 1
+                }
+            };
+            table_of.push(ti);
+            let conv = MultiBlockConv { cin: prev_c, cout: l.cout, taps: tables[ti].taps };
+            offsets.push(nparams);
+            nparams += conv.nweights();
+            convs.push(conv);
+            prev_c = l.cout;
+        }
+        let mut rng = Rng::new(seed);
+        let mut params = vec![0.0; nparams];
+        for (li, conv) in convs.iter().enumerate() {
+            let fan_in = (conv.cin * conv.taps) as f64;
+            let std = (2.0 / fan_in).sqrt();
+            let w_end = offsets[li] + conv.cout * conv.cin * conv.taps;
+            for p in params[offsets[li]..w_end].iter_mut() {
+                *p = std * rng.normal();
+            }
+            // biases stay zero
+        }
+        Cnn { cin, layers, convs, table_of, tables, params, offsets }
+    }
+
+    pub fn nparams(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Forward pass; returns the output channels and the tape.
+    pub fn forward(&self, input: &[Vec<f64>]) -> (Vec<Vec<f64>>, CnnTape) {
+        let ncells = input[0].len();
+        let mut cur: Vec<Vec<f64>> = input.to_vec();
+        let mut pre = Vec::with_capacity(self.layers.len());
+        let mut post = Vec::with_capacity(self.layers.len());
+        for (li, conv) in self.convs.iter().enumerate() {
+            let mut out = vec![vec![0.0; ncells]; conv.cout];
+            conv.forward(
+                &self.tables[self.table_of[li]],
+                &self.params[self.offsets[li]..],
+                &cur,
+                &mut out,
+            );
+            pre.push(out.clone());
+            if self.layers[li].relu {
+                for ch in out.iter_mut() {
+                    for v in ch.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+            post.push(out.clone());
+            cur = out;
+        }
+        (cur, CnnTape { pre, post })
+    }
+
+    /// Backward pass: given ∂L/∂output, return (∂L/∂params, ∂L/∂input).
+    pub fn backward(
+        &self,
+        input: &[Vec<f64>],
+        tape: &CnnTape,
+        doutput: &[Vec<f64>],
+    ) -> (Vec<f64>, Vec<Vec<f64>>) {
+        let ncells = input[0].len();
+        let mut dparams = vec![0.0; self.params.len()];
+        let mut dout: Vec<Vec<f64>> = doutput.to_vec();
+        for li in (0..self.convs.len()).rev() {
+            let conv = &self.convs[li];
+            // ReLU backward on the pre-activations
+            if self.layers[li].relu {
+                for (ch, pre_ch) in dout.iter_mut().zip(&tape.pre[li]) {
+                    for (d, p) in ch.iter_mut().zip(pre_ch) {
+                        if *p <= 0.0 {
+                            *d = 0.0;
+                        }
+                    }
+                }
+            }
+            let layer_in: &[Vec<f64>] = if li == 0 { input } else { &tape.post[li - 1] };
+            let mut dinput = vec![vec![0.0; ncells]; conv.cin];
+            let w_slice = &self.params[self.offsets[li]..];
+            conv.backward(
+                &self.tables[self.table_of[li]],
+                w_slice,
+                layer_in,
+                &dout,
+                &mut dparams[self.offsets[li]..],
+                &mut dinput,
+            );
+            dout = dinput;
+        }
+        (dparams, dout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::gen;
+
+    fn tiny_net(mesh: &Mesh) -> Cnn {
+        Cnn::new(
+            mesh,
+            2,
+            vec![
+                LayerCfg { cout: 4, radius: 1, relu: true },
+                LayerCfg { cout: 2, radius: 1, relu: false },
+            ],
+            7,
+        )
+    }
+
+    #[test]
+    fn forward_shapes_and_determinism() {
+        let mesh = gen::periodic_box2d(6, 6, 1.0, 1.0);
+        let net = tiny_net(&mesh);
+        let input: Vec<Vec<f64>> =
+            (0..2).map(|c| (0..mesh.ncells).map(|i| (i + c) as f64 * 0.01).collect()).collect();
+        let (out1, _) = net.forward(&input);
+        let (out2, _) = net.forward(&input);
+        assert_eq!(out1.len(), 2);
+        assert_eq!(out1[0].len(), mesh.ncells);
+        assert_eq!(out1, out2);
+        // same seed → same params
+        let net2 = tiny_net(&mesh);
+        assert_eq!(net.params, net2.params);
+    }
+
+    #[test]
+    fn backward_matches_fd() {
+        let mesh = gen::periodic_box2d(5, 5, 1.0, 1.0);
+        let net = tiny_net(&mesh);
+        let mut rng = Rng::new(11);
+        let input: Vec<Vec<f64>> = (0..2).map(|_| rng.normal_vec(mesh.ncells)).collect();
+        let cot: Vec<Vec<f64>> = (0..2).map(|_| rng.normal_vec(mesh.ncells)).collect();
+        let loss = |net: &Cnn, inp: &[Vec<f64>]| -> f64 {
+            let (out, _) = net.forward(inp);
+            out.iter()
+                .zip(&cot)
+                .map(|(o, c)| o.iter().zip(c).map(|(a, b)| a * b).sum::<f64>())
+                .sum()
+        };
+        let (_, tape) = net.forward(&input);
+        let (dp, din) = net.backward(&input, &tape, &cot);
+        let eps = 1e-6;
+        // probe a few weights across both layers
+        let mut net_mut = Cnn::new(&mesh, 2, net.layers.clone(), 7);
+        for probe in 0..8 {
+            let k = (probe * 131) % net.nparams();
+            net_mut.params.copy_from_slice(&net.params);
+            net_mut.params[k] += eps;
+            let lp = loss(&net_mut, &input);
+            net_mut.params[k] -= 2.0 * eps;
+            let lm = loss(&net_mut, &input);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dp[k]).abs() < 2e-6 * (1.0 + fd.abs()),
+                "param {k}: fd {fd} vs {}",
+                dp[k]
+            );
+        }
+        // input gradient
+        for probe in 0..4 {
+            let ci = probe % 2;
+            let cell = (probe * 5) % mesh.ncells;
+            let mut ip = input.clone();
+            ip[ci][cell] += eps;
+            let mut im = input.clone();
+            im[ci][cell] -= eps;
+            let fd = (loss(&net, &ip) - loss(&net, &im)) / (2.0 * eps);
+            assert!(
+                (fd - din[ci][cell]).abs() < 2e-6 * (1.0 + fd.abs()),
+                "input[{ci}][{cell}]: fd {fd} vs {}",
+                din[ci][cell]
+            );
+        }
+    }
+
+    #[test]
+    fn relu_kills_negative_gradients() {
+        let mesh = gen::periodic_box2d(4, 4, 1.0, 1.0);
+        let mut net = Cnn::new(
+            &mesh,
+            1,
+            vec![LayerCfg { cout: 1, radius: 0, relu: true }],
+            3,
+        );
+        // radius 0: 1 tap; set w = 1, b = 0
+        net.params[0] = 1.0;
+        net.params[1] = 0.0;
+        let input = vec![(0..mesh.ncells)
+            .map(|i| if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect::<Vec<f64>>()];
+        let (out, tape) = net.forward(&input);
+        assert!(out[0].iter().all(|v| *v >= 0.0));
+        let cot = vec![vec![1.0; mesh.ncells]];
+        let (_, din) = net.backward(&input, &tape, &cot);
+        for (i, d) in din[0].iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(*d, 1.0);
+            } else {
+                assert_eq!(*d, 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,252 @@
+//! Multi-block convolution (paper §2.2, A.6): the neighborhood of each cell
+//! is resolved through the mesh topology, so the convolution window crosses
+//! block connections (including periodic wraps) seamlessly — the paper's
+//! "custom padding with values or features of connected blocks". Physical
+//! boundaries are zero-padded.
+//!
+//! The neighborhood table is precomputed once per (mesh, radius) and shared
+//! by all conv layers; entries of `u32::MAX` mark out-of-domain taps.
+
+use crate::mesh::{Mesh, NeighRef};
+
+pub const OUT_OF_DOMAIN: u32 = u32::MAX;
+
+/// Precomputed Chebyshev-ball neighborhood per cell.
+pub struct ConvTable {
+    pub radius: usize,
+    pub dim: usize,
+    /// taps per cell: (2r+1)^dim entries, x-fastest offset ordering.
+    pub taps: usize,
+    pub idx: Vec<u32>,
+}
+
+impl ConvTable {
+    /// Walk the topology from `cell` by `offset` (per-axis steps), returning
+    /// the reached cell or None if a physical boundary blocks the walk.
+    fn walk(mesh: &Mesh, cell: usize, offset: [isize; 3]) -> Option<usize> {
+        let mut cur = cell;
+        for ax in 0..mesh.dim {
+            let steps = offset[ax];
+            let face = if steps < 0 { 2 * ax } else { 2 * ax + 1 };
+            for _ in 0..steps.unsigned_abs() {
+                match mesh.topo.at(cur, face) {
+                    NeighRef::Cell(n) => cur = n as usize,
+                    _ => return None,
+                }
+            }
+        }
+        Some(cur)
+    }
+
+    pub fn build(mesh: &Mesh, radius: usize) -> ConvTable {
+        let dim = mesh.dim;
+        let w = 2 * radius + 1;
+        let taps = w.pow(dim as u32);
+        let mut idx = vec![OUT_OF_DOMAIN; mesh.ncells * taps];
+        for cell in 0..mesh.ncells {
+            let mut t = 0;
+            let kz_range: Vec<isize> = if dim == 3 {
+                (-(radius as isize)..=radius as isize).collect()
+            } else {
+                vec![0]
+            };
+            for kz in &kz_range {
+                for ky in -(radius as isize)..=radius as isize {
+                    for kx in -(radius as isize)..=radius as isize {
+                        if let Some(n) = Self::walk(mesh, cell, [kx, ky, *kz]) {
+                            idx[cell * taps + t] = n as u32;
+                        }
+                        t += 1;
+                    }
+                }
+            }
+        }
+        ConvTable { radius, dim, taps, idx }
+    }
+}
+
+/// One multi-block convolution layer: `cout × cin × taps` weights + bias.
+pub struct MultiBlockConv {
+    pub cin: usize,
+    pub cout: usize,
+    pub taps: usize,
+}
+
+impl MultiBlockConv {
+    pub fn nweights(&self) -> usize {
+        self.cout * self.cin * self.taps + self.cout
+    }
+
+    /// Forward: `out[co] = bias[co] + Σ_ci Σ_t w[co][ci][t] · in[ci][tap t]`.
+    /// `input`/`output` are channel-major `[channels][ncells]`.
+    pub fn forward(
+        &self,
+        table: &ConvTable,
+        params: &[f64],
+        input: &[Vec<f64>],
+        output: &mut [Vec<f64>],
+    ) {
+        let ncells = input[0].len();
+        let taps = self.taps;
+        let wsz = self.cin * taps;
+        let bias_off = self.cout * wsz;
+        for co in 0..self.cout {
+            let b = params[bias_off + co];
+            let wrow = &params[co * wsz..(co + 1) * wsz];
+            let out = &mut output[co];
+            for cell in 0..ncells {
+                let tap_base = cell * taps;
+                let mut acc = b;
+                for ci in 0..self.cin {
+                    let w = &wrow[ci * taps..(ci + 1) * taps];
+                    let inp = &input[ci];
+                    for t in 0..taps {
+                        let n = table.idx[tap_base + t];
+                        if n != OUT_OF_DOMAIN {
+                            acc += w[t] * inp[n as usize];
+                        }
+                    }
+                }
+                out[cell] = acc;
+            }
+        }
+    }
+
+    /// Backward: accumulate `dparams` and `dinput` from `doutput`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward(
+        &self,
+        table: &ConvTable,
+        params: &[f64],
+        input: &[Vec<f64>],
+        doutput: &[Vec<f64>],
+        dparams: &mut [f64],
+        dinput: &mut [Vec<f64>],
+    ) {
+        let ncells = input[0].len();
+        let taps = self.taps;
+        let wsz = self.cin * taps;
+        let bias_off = self.cout * wsz;
+        for co in 0..self.cout {
+            let wrow = &params[co * wsz..(co + 1) * wsz];
+            let dout = &doutput[co];
+            for cell in 0..ncells {
+                let d = dout[cell];
+                if d == 0.0 {
+                    continue;
+                }
+                dparams[bias_off + co] += d;
+                let tap_base = cell * taps;
+                for ci in 0..self.cin {
+                    let w = &wrow[ci * taps..(ci + 1) * taps];
+                    let dwr = &mut dparams[co * wsz + ci * taps..co * wsz + (ci + 1) * taps];
+                    let inp = &input[ci];
+                    let dinp = &mut dinput[ci];
+                    for t in 0..taps {
+                        let n = table.idx[tap_base + t];
+                        if n != OUT_OF_DOMAIN {
+                            let n = n as usize;
+                            dwr[t] += d * inp[n];
+                            dinp[n] += d * w[t];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn table_periodic_wrap() {
+        let mesh = gen::periodic_box2d(4, 4, 1.0, 1.0);
+        let t = ConvTable::build(&mesh, 1);
+        assert_eq!(t.taps, 9);
+        // cell (0,0): tap (-1,-1) wraps to (3,3)
+        let cell = mesh.gid(0, 0, 0, 0);
+        let wrap = mesh.gid(0, 3, 3, 0);
+        assert_eq!(t.idx[cell * 9], wrap as u32);
+        // no out-of-domain taps on a periodic box
+        assert!(t.idx.iter().all(|v| *v != OUT_OF_DOMAIN));
+    }
+
+    #[test]
+    fn table_zero_pads_at_walls() {
+        let mesh = gen::cavity2d(4, 1.0, 1.0, false);
+        let t = ConvTable::build(&mesh, 1);
+        let corner = mesh.gid(0, 0, 0, 0);
+        // tap (-1,-1) is out of domain
+        assert_eq!(t.idx[corner * 9], OUT_OF_DOMAIN);
+        // tap (+1,+1) is in
+        assert_eq!(t.idx[corner * 9 + 8], mesh.gid(0, 1, 1, 0) as u32);
+    }
+
+    #[test]
+    fn conv_crosses_block_connection_seamlessly() {
+        // identity-like kernel picking the +x neighbor must cross the block
+        // boundary of the two-block channel exactly like a single block
+        let m2 = gen::two_block_channel2d(4, 4, 0);
+        let t = ConvTable::build(&m2, 1);
+        let conv = MultiBlockConv { cin: 1, cout: 1, taps: 9 };
+        let mut params = vec![0.0; conv.nweights()];
+        params[5] = 1.0; // tap (+1, 0)
+        let input = vec![(0..m2.ncells).map(|i| i as f64).collect::<Vec<f64>>()];
+        let mut out = vec![vec![0.0; m2.ncells]];
+        conv.forward(&t, &params, &input, &mut out);
+        // cell at block-0 right edge picks block-1 left cell
+        let edge = m2.gid(0, 3, 1, 0);
+        let other = m2.gid(1, 0, 1, 0);
+        assert_eq!(out[0][edge], other as f64);
+    }
+
+    #[test]
+    fn conv_backward_matches_fd() {
+        let mesh = gen::periodic_box2d(5, 4, 1.0, 1.0);
+        let table = ConvTable::build(&mesh, 1);
+        let conv = MultiBlockConv { cin: 2, cout: 2, taps: 9 };
+        let mut rng = Rng::new(3);
+        let params = rng.normal_vec(conv.nweights());
+        let input: Vec<Vec<f64>> = (0..2).map(|_| rng.normal_vec(mesh.ncells)).collect();
+        let cot: Vec<Vec<f64>> = (0..2).map(|_| rng.normal_vec(mesh.ncells)).collect();
+        let loss = |p: &[f64], inp: &[Vec<f64>]| -> f64 {
+            let mut out = vec![vec![0.0; mesh.ncells]; 2];
+            conv.forward(&table, p, inp, &mut out);
+            out.iter()
+                .zip(&cot)
+                .map(|(o, c)| o.iter().zip(c).map(|(a, b)| a * b).sum::<f64>())
+                .sum()
+        };
+        let mut dparams = vec![0.0; conv.nweights()];
+        let mut dinput = vec![vec![0.0; mesh.ncells]; 2];
+        conv.backward(&table, &params, &input, &cot, &mut dparams, &mut dinput);
+        let eps = 1e-6;
+        for probe in 0..6 {
+            let k = (probe * 37) % conv.nweights();
+            let mut pp = params.clone();
+            pp[k] += eps;
+            let mut pm = params.clone();
+            pm[k] -= eps;
+            let fd = (loss(&pp, &input) - loss(&pm, &input)) / (2.0 * eps);
+            assert!((fd - dparams[k]).abs() < 1e-7 * (1.0 + fd.abs()), "w[{k}]: {fd} vs {}", dparams[k]);
+        }
+        for probe in 0..4 {
+            let ci = probe % 2;
+            let cell = (probe * 7) % mesh.ncells;
+            let mut ip = input.clone();
+            ip[ci][cell] += eps;
+            let mut im = input.clone();
+            im[ci][cell] -= eps;
+            let fd = (loss(&params, &ip) - loss(&params, &im)) / (2.0 * eps);
+            assert!(
+                (fd - dinput[ci][cell]).abs() < 1e-7 * (1.0 + fd.abs()),
+                "in[{ci}][{cell}]: {fd} vs {}",
+                dinput[ci][cell]
+            );
+        }
+    }
+}

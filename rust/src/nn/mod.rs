@@ -1,0 +1,12 @@
+//! Neural-network substrate for the learned correctors (paper §3, §5):
+//! multi-block convolutions that pad across block connections (§2.2/A.6),
+//! a small CNN with hand-written forward/backward, and the Smagorinsky SGS
+//! baseline with van-Driest wall damping (§5.3).
+
+pub mod cnn;
+pub mod conv;
+pub mod smagorinsky;
+
+pub use cnn::{Cnn, CnnTape, LayerCfg};
+pub use conv::{ConvTable, MultiBlockConv};
+pub use smagorinsky::smagorinsky_nu_t;

@@ -1,0 +1,9 @@
+//! The PISO time stepper (paper §2.1, Appendix A.2): implicit-Euler
+//! predictor solve `C u* = u^n/Δt − ∇p^n + S` followed by (typically two)
+//! pressure correctors `∇²(A⁻¹p) = ∇·h`, `u ← h − A⁻¹∇p`, with optional
+//! non-orthogonal deferred-correction iterations and the non-reflecting
+//! advective outflow update (A.24) between steps.
+
+pub mod stepper;
+
+pub use stepper::{PisoConfig, PisoSolver, State, StepRecord, StepStats};

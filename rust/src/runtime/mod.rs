@@ -1,0 +1,241 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the PJRT CPU client, and
+//! executes them from the Rust hot path. Python is never on the request
+//! path — the compiled executables are self-contained.
+//!
+//! HLO *text* is the interchange format (jax ≥ 0.5 emits 64-bit-id protos
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one artifact argument.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Manifest entry for one compiled program.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub entry: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+fn parse_specs(j: &Json) -> Result<Vec<TensorSpec>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("specs must be an array"))?;
+    arr.iter()
+        .map(|e| {
+            Ok(TensorSpec {
+                name: e
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("spec missing name"))?
+                    .to_string(),
+                shape: e
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("spec missing shape"))?
+                    .iter()
+                    .map(|d| d.as_f64().unwrap_or(0.0) as usize)
+                    .collect(),
+                dtype: e
+                    .get("dtype")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("f32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with f64 inputs (each a flat row-major buffer matching the
+    /// manifest spec). Returns flat f64 buffers per output.
+    pub fn run_f64(&self, inputs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "expected {} inputs, got {}",
+            self.meta.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, spec) in inputs.iter().zip(&self.meta.inputs) {
+            anyhow::ensure!(
+                buf.len() == spec.numel(),
+                "input {} expects {} elements, got {}",
+                spec.name,
+                spec.numel(),
+                buf.len()
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|d| *d as i64).collect();
+            let lit = match spec.dtype.as_str() {
+                "f64" => xla::Literal::vec1(buf).reshape(&dims)?,
+                "f32" => {
+                    let v32: Vec<f32> = buf.iter().map(|x| *x as f32).collect();
+                    xla::Literal::vec1(&v32).reshape(&dims)?
+                }
+                other => anyhow::bail!("unsupported dtype {other}"),
+            };
+            literals.push(lit);
+        }
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let tuple = result.decompose_tuple()?;
+        let mut outs = Vec::with_capacity(tuple.len());
+        for (lit, spec) in tuple.into_iter().zip(&self.meta.outputs) {
+            let buf: Vec<f64> = match spec.dtype.as_str() {
+                "f64" => lit.to_vec::<f64>()?,
+                "f32" => lit.to_vec::<f32>()?.into_iter().map(|x| x as f64).collect(),
+                other => anyhow::bail!("unsupported dtype {other}"),
+            };
+            outs.push(buf);
+        }
+        Ok(outs)
+    }
+}
+
+/// The set of artifacts listed in `artifacts/manifest.json`, compiled
+/// lazily on first use and cached.
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    pub metas: Vec<ArtifactMeta>,
+    client: xla::PjRtClient,
+    compiled: BTreeMap<String, Executable>,
+}
+
+impl ArtifactSet {
+    /// Load the manifest and create the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactSet> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let metas = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|e| {
+                Ok(ArtifactMeta {
+                    entry: e
+                        .get("entry")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("artifact missing entry"))?
+                        .to_string(),
+                    file: e
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("artifact missing file"))?
+                        .to_string(),
+                    inputs: parse_specs(e.get("inputs").ok_or_else(|| anyhow!("no inputs"))?)?,
+                    outputs: parse_specs(
+                        e.get("outputs").ok_or_else(|| anyhow!("no outputs"))?,
+                    )?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactSet { dir, metas, client, compiled: BTreeMap::new() })
+    }
+
+    pub fn entries(&self) -> Vec<String> {
+        self.metas.iter().map(|m| m.entry.clone()).collect()
+    }
+
+    /// Compile (once) and return the executable for `entry`.
+    pub fn get(&mut self, entry: &str) -> Result<&Executable> {
+        if !self.compiled.contains_key(entry) {
+            let meta = self
+                .metas
+                .iter()
+                .find(|m| m.entry == entry)
+                .ok_or_else(|| anyhow!("unknown artifact entry `{entry}`"))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.compiled.insert(entry.to_string(), Executable { meta, exe });
+        }
+        Ok(self.compiled.get(entry).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if d.join("manifest.json").exists() {
+            Some(d)
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_loads_and_lists_entries() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let set = ArtifactSet::load(dir).unwrap();
+        let entries = set.entries();
+        assert!(entries.iter().any(|e| e == "piso_step2d"), "{entries:?}");
+        assert!(entries.iter().any(|e| e == "stencil_matvec2d"));
+        assert!(entries.iter().any(|e| e == "cnn_corrector2d"));
+    }
+
+    #[test]
+    fn stencil_artifact_executes_identity() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut set = ArtifactSet::load(dir).unwrap();
+        let exe = set.get("stencil_matvec2d").unwrap();
+        let (ny, nx) = (16usize, 18usize);
+        // identity stencil: cc = 1, rest 0; padded x
+        let mut x_pad = vec![0.0f64; (ny + 2) * (nx + 2)];
+        for j in 0..ny + 2 {
+            for i in 0..nx + 2 {
+                x_pad[j * (nx + 2) + i] = (j * 100 + i) as f64;
+            }
+        }
+        let cc = vec![1.0; ny * nx];
+        let z = vec![0.0; ny * nx];
+        let out = exe
+            .run_f64(&[x_pad.clone(), cc, z.clone(), z.clone(), z.clone(), z])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        for j in 0..ny {
+            for i in 0..nx {
+                let want = x_pad[(j + 1) * (nx + 2) + (i + 1)];
+                assert_eq!(out[0][j * nx + i], want);
+            }
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Sparse matrix substrate: CSR storage with a fixed symbolic structure that
+//! is assembled once per mesh and refilled numerically every PISO step (the
+//! paper's cuSparse matrices play the same role). Also provides the
+//! transpose-apply needed by the OtD linear-solve adjoints.
+
+pub mod csr;
+
+pub use csr::Csr;

@@ -1,0 +1,199 @@
+//! Turbulent-energy-budget terms (paper §2.5, figure 12): production,
+//! dissipation, turbulent transport, viscous diffusion, and the
+//! velocity–pressure-gradient term, accumulated online per wall-normal
+//! layer against a frozen mean profile (two-pass: means first, then
+//! budgets — the standard a-posteriori evaluation).
+
+use crate::fvm;
+use crate::mesh::{Mesh, VectorField};
+
+/// Per-layer budget terms for the streamwise normal stress (i=j=0) unless
+/// noted; `k_*` entries are for the turbulent kinetic energy (half-trace).
+#[derive(Clone, Debug)]
+pub struct Budgets {
+    pub y: Vec<f64>,
+    pub production: Vec<f64>,
+    pub dissipation: Vec<f64>,
+    pub transport: Vec<f64>,
+    pub visc_diffusion: Vec<f64>,
+    pub pressure_term: Vec<f64>,
+    frames: usize,
+    /// accumulated ⟨u'u'v'⟩ per layer (for transport, differenced at the end)
+    acc_uuv: Vec<f64>,
+    /// accumulated ⟨u'u'⟩ per layer (for viscous diffusion)
+    acc_uu: Vec<f64>,
+    nu: f64,
+}
+
+impl Budgets {
+    pub fn new(mesh: &Mesh, nu: f64) -> Budgets {
+        let b = &mesh.blocks[0];
+        let ny = b.shape[1];
+        let y = (0..ny).map(|j| b.centers[b.lidx(0, j, 0)][1]).collect();
+        Budgets {
+            y,
+            production: vec![0.0; ny],
+            dissipation: vec![0.0; ny],
+            transport: vec![0.0; ny],
+            visc_diffusion: vec![0.0; ny],
+            pressure_term: vec![0.0; ny],
+            frames: 0,
+            acc_uuv: vec![0.0; ny],
+            acc_uu: vec![0.0; ny],
+            nu,
+        }
+    }
+
+    /// Accumulate one frame against the frozen mean profile `u_mean(y)`
+    /// (streamwise component per layer) and its wall-normal derivative.
+    pub fn push(&mut self, mesh: &Mesh, u: &VectorField, p: &[f64], u_mean: &[f64]) {
+        let b = &mesh.blocks[0];
+        let (nx, ny, nz) = (b.shape[0], b.shape[1], b.shape[2]);
+        let nh = (nx * nz) as f64;
+        self.frames += 1;
+        // dŪ/dy per layer (central differences on the profile)
+        let dumean: Vec<f64> = (0..ny)
+            .map(|j| {
+                let jm = j.saturating_sub(1);
+                let jp = (j + 1).min(ny - 1);
+                (u_mean[jp] - u_mean[jm]) / (self.y[jp] - self.y[jm]).max(1e-300)
+            })
+            .collect();
+        // fluctuation fields
+        let mut uf = u.clone();
+        for k in 0..nz {
+            for j in 0..ny {
+                for i in 0..nx {
+                    let cell = b.offset + b.lidx(i, j, k);
+                    uf.comp[0][cell] -= u_mean[j];
+                }
+            }
+        }
+        // gradients of the fluctuating components and pressure
+        let gu: Vec<VectorField> =
+            (0..3).map(|c| fvm::pressure_gradient(mesh, &uf.comp[c])).collect();
+        let gp = fvm::pressure_gradient(mesh, p);
+        let inv_n = 1.0 / self.frames as f64;
+        for j in 0..ny {
+            let mut prod = 0.0;
+            let mut diss = 0.0;
+            let mut uuv = 0.0;
+            let mut uu = 0.0;
+            let mut press = 0.0;
+            for k in 0..nz {
+                for i in 0..nx {
+                    let cell = b.offset + b.lidx(i, j, k);
+                    let up = uf.comp[0][cell];
+                    let vp = uf.comp[1][cell];
+                    // P_00 = −2 ⟨u'v'⟩ dŪ/dy
+                    prod += -2.0 * up * vp * dumean[j] / nh;
+                    // ε_00 = 2ν ⟨(∂u'/∂x_k)²⟩
+                    let mut g2 = 0.0;
+                    for kk in 0..mesh.dim {
+                        g2 += gu[0].comp[kk][cell] * gu[0].comp[kk][cell];
+                    }
+                    diss += 2.0 * self.nu * g2 / nh;
+                    // transport: −∂⟨u'u'v'⟩/∂y, accumulated then differenced
+                    uuv += up * up * vp / nh;
+                    uu += up * up / nh;
+                    // Π_00 = −2 ⟨u' ∂p/∂x⟩
+                    press += -2.0 * up * gp.comp[0][cell] / nh;
+                }
+            }
+            // running averages
+            self.production[j] += (prod - self.production[j]) * inv_n;
+            self.dissipation[j] += (diss - self.dissipation[j]) * inv_n;
+            self.pressure_term[j] += (press - self.pressure_term[j]) * inv_n;
+            self.acc_uuv[j] += (uuv - self.acc_uuv[j]) * inv_n;
+            self.acc_uu[j] += (uu - self.acc_uu[j]) * inv_n;
+        }
+        // final differenced terms
+        let ny1 = ny;
+        for j in 0..ny1 {
+            let jm = j.saturating_sub(1);
+            let jp = (j + 1).min(ny1 - 1);
+            let dy = (self.y[jp] - self.y[jm]).max(1e-300);
+            self.transport[j] = -(self.acc_uuv[jp] - self.acc_uuv[jm]) / dy;
+            // ν d²⟨u'u'⟩/dy² via second difference of the profile
+            if j > 0 && j + 1 < ny1 {
+                let d1 = (self.acc_uu[j + 1] - self.acc_uu[j])
+                    / (self.y[j + 1] - self.y[j]).max(1e-300);
+                let d0 =
+                    (self.acc_uu[j] - self.acc_uu[j - 1]) / (self.y[j] - self.y[j - 1]).max(1e-300);
+                self.visc_diffusion[j] =
+                    self.nu * (d1 - d0) / (0.5 * (self.y[j + 1] - self.y[j - 1])).max(1e-300);
+            }
+        }
+    }
+}
+
+/// Convenience: run means + budgets over a recorded set of frames.
+pub fn energy_budgets(
+    mesh: &Mesh,
+    frames: &[(VectorField, Vec<f64>)],
+    nu: f64,
+) -> Budgets {
+    // pass 1: mean streamwise profile
+    let b = &mesh.blocks[0];
+    let ny = b.shape[1];
+    let mut mean = vec![0.0; ny];
+    for (u, _) in frames {
+        let prof = super::profiles::channel_profiles(mesh, u);
+        for j in 0..ny {
+            mean[j] += prof.mean[0][j] / frames.len() as f64;
+        }
+    }
+    // pass 2: budgets
+    let mut budgets = Budgets::new(mesh, nu);
+    for (u, p) in frames {
+        budgets.push(mesh, u, p, &mean);
+    }
+    budgets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::gen;
+    use crate::util::rng::Rng;
+
+    /// Production of a synthetic field with known ⟨u'v'⟩ and shear matches
+    /// −2⟨u'v'⟩ dŪ/dy.
+    #[test]
+    fn production_of_synthetic_shear() {
+        let mesh = gen::channel3d([24, 6, 24], [2.0, 2.0, 1.0], 1.0);
+        let mut rng = Rng::new(7);
+        let shear = 1.5;
+        let mut frames = Vec::new();
+        for _ in 0..8 {
+            let mut u = VectorField::zeros(mesh.ncells);
+            for (cell, c) in mesh.centers.iter().enumerate() {
+                let a = rng.normal();
+                u.comp[0][cell] = shear * c[1] + 0.3 * a; // u' = 0.3a
+                u.comp[1][cell] = 0.2 * a + 0.1 * rng.normal(); // corr(u',v') > 0
+            }
+            frames.push((u, vec![0.0; mesh.ncells]));
+        }
+        let budgets = energy_budgets(&mesh, &frames, 0.01);
+        // ⟨u'v'⟩ = 0.3·0.2 = 0.06 ⇒ P_00 ≈ −2·0.06·1.5 = −0.18
+        for j in 1..5 {
+            assert!(
+                (budgets.production[j] + 0.18).abs() < 0.05,
+                "P[{j}] = {}",
+                budgets.production[j]
+            );
+        }
+    }
+
+    /// Dissipation is non-negative and zero for a uniform field.
+    #[test]
+    fn dissipation_sign_and_zero_case() {
+        let mesh = gen::channel3d([8, 4, 8], [1.0, 2.0, 1.0], 1.0);
+        let u = VectorField::zeros(mesh.ncells);
+        let frames = vec![(u, vec![0.0; mesh.ncells])];
+        let budgets = energy_budgets(&mesh, &frames, 0.01);
+        for j in 0..4 {
+            assert!(budgets.dissipation[j].abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Differentiable turbulence statistics (paper §2.5): online arbitrary-order
+//! central (co)moments after Pébay et al., wall-normal profile averaging
+//! over homogeneous directions, and the turbulent-energy-budget terms
+//! (production, dissipation, turbulent transport, viscous diffusion,
+//! velocity–pressure-gradient).
+
+pub mod budgets;
+pub mod moments;
+pub mod profiles;
+
+pub use budgets::{energy_budgets, Budgets};
+pub use moments::{CoMoments, OnlineMoments};
+pub use profiles::{channel_profiles, ChannelStats, WallProfiles};

@@ -1,0 +1,199 @@
+//! Numerically stable online central moments (Pébay/Terriberry/Welford
+//! update formulas, paper ref. \[55\]): accumulate mean and p-th order central
+//! moments of streaming samples without storing the sequence, plus pairwise
+//! co-moments (covariances) for the Reynolds-stress tensor.
+
+/// Online accumulator of mean and central moments up to order 4 for one
+/// scalar stream.
+#[derive(Clone, Debug, Default)]
+pub struct OnlineMoments {
+    pub n: u64,
+    pub mean: f64,
+    /// Σ (x−mean)² … Σ (x−mean)⁴ (M2..M4 in Pébay's notation).
+    pub m2: f64,
+    pub m3: f64,
+    pub m4: f64,
+}
+
+impl OnlineMoments {
+    pub fn push(&mut self, x: f64) {
+        let n1 = self.n as f64;
+        self.n += 1;
+        let n = self.n as f64;
+        let delta = x - self.mean;
+        let delta_n = delta / n;
+        let delta_n2 = delta_n * delta_n;
+        let term1 = delta * delta_n * n1;
+        self.mean += delta_n;
+        self.m4 += term1 * delta_n2 * (n * n - 3.0 * n + 3.0) + 6.0 * delta_n2 * self.m2
+            - 4.0 * delta_n * self.m3;
+        self.m3 += term1 * delta_n * (n - 2.0) - 3.0 * delta_n * self.m2;
+        self.m2 += term1;
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn skewness(&self) -> f64 {
+        let v = self.variance();
+        if v <= 0.0 {
+            0.0
+        } else {
+            (self.m3 / self.n as f64) / v.powf(1.5)
+        }
+    }
+
+    pub fn kurtosis(&self) -> f64 {
+        let v = self.variance();
+        if v <= 0.0 {
+            0.0
+        } else {
+            (self.m4 / self.n as f64) / (v * v)
+        }
+    }
+
+    /// Merge two accumulators (parallel/pairwise combination).
+    pub fn merge(&self, other: &OnlineMoments) -> OnlineMoments {
+        if other.n == 0 {
+            return self.clone();
+        }
+        if self.n == 0 {
+            return other.clone();
+        }
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let n = na + nb;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * nb / n;
+        let m2 = self.m2 + other.m2 + delta * delta * na * nb / n;
+        let m3 = self.m3
+            + other.m3
+            + delta.powi(3) * na * nb * (na - nb) / (n * n)
+            + 3.0 * delta * (na * other.m2 - nb * self.m2) / n;
+        let m4 = self.m4
+            + other.m4
+            + delta.powi(4) * na * nb * (na * na - na * nb + nb * nb) / n.powi(3)
+            + 6.0 * delta * delta * (na * na * other.m2 + nb * nb * self.m2) / (n * n)
+            + 4.0 * delta * (na * other.m3 - nb * self.m3) / n;
+        OnlineMoments { n: self.n + other.n, mean, m2, m3, m4 }
+    }
+}
+
+/// Online co-moment (covariance) accumulator for a pair of streams.
+#[derive(Clone, Debug, Default)]
+pub struct CoMoments {
+    pub n: u64,
+    pub mean_x: f64,
+    pub mean_y: f64,
+    /// Σ (x−mean_x)(y−mean_y).
+    pub c2: f64,
+}
+
+impl CoMoments {
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.n += 1;
+        let n = self.n as f64;
+        let dx = x - self.mean_x;
+        self.mean_x += dx / n;
+        self.mean_y += (y - self.mean_y) / n;
+        // uses updated mean_y (Welford cross form)
+        self.c2 += dx * (y - self.mean_y);
+    }
+
+    pub fn covariance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.c2 / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn batch_moments(xs: &[f64]) -> (f64, f64, f64, f64) {
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let mut m2 = 0.0;
+        let mut m3 = 0.0;
+        let mut m4 = 0.0;
+        for x in xs {
+            let d = x - mean;
+            m2 += d * d;
+            m3 += d * d * d;
+            m4 += d * d * d * d;
+        }
+        (mean, m2 / n, (m3 / n) / (m2 / n).powf(1.5), (m4 / n) / (m2 / n).powi(2))
+    }
+
+    #[test]
+    fn online_matches_batch() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<f64> = (0..5000).map(|_| rng.normal() * 2.0 + 1.0).collect();
+        let mut om = OnlineMoments::default();
+        for x in &xs {
+            om.push(*x);
+        }
+        let (mean, var, skew, kurt) = batch_moments(&xs);
+        assert!((om.mean - mean).abs() < 1e-10);
+        assert!((om.variance() - var).abs() < 1e-9);
+        assert!((om.skewness() - skew).abs() < 1e-9);
+        assert!((om.kurtosis() - kurt).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut rng = Rng::new(2);
+        let xs: Vec<f64> = (0..2000).map(|_| rng.uniform() * 3.0).collect();
+        let mut a = OnlineMoments::default();
+        let mut b = OnlineMoments::default();
+        let mut all = OnlineMoments::default();
+        for (i, x) in xs.iter().enumerate() {
+            if i % 2 == 0 {
+                a.push(*x)
+            } else {
+                b.push(*x)
+            }
+            all.push(*x);
+        }
+        let merged = a.merge(&b);
+        assert_eq!(merged.n, all.n);
+        assert!((merged.mean - all.mean).abs() < 1e-10);
+        assert!((merged.m2 - all.m2).abs() < 1e-7);
+        assert!((merged.m3 - all.m3).abs() < 1e-6);
+        assert!((merged.m4 - all.m4).abs() < 1e-5);
+    }
+
+    #[test]
+    fn covariance_matches_batch() {
+        let mut rng = Rng::new(3);
+        let xs: Vec<f64> = (0..3000).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.7 * x + 0.3 * rng.normal()).collect();
+        let mut cm = CoMoments::default();
+        for (x, y) in xs.iter().zip(&ys) {
+            cm.push(*x, *y);
+        }
+        let mx = xs.iter().sum::<f64>() / 3000.0;
+        let my = ys.iter().sum::<f64>() / 3000.0;
+        let cov: f64 =
+            xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum::<f64>() / 3000.0;
+        assert!((cm.covariance() - cov).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gaussian_kurtosis_near_three() {
+        let mut rng = Rng::new(4);
+        let mut om = OnlineMoments::default();
+        for _ in 0..200_000 {
+            om.push(rng.normal());
+        }
+        assert!((om.kurtosis() - 3.0).abs() < 0.1, "{}", om.kurtosis());
+    }
+}

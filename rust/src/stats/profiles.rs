@@ -1,0 +1,196 @@
+//! Wall-normal channel-flow statistics: per-frame profiles (differentiable
+//! inputs to the statistics losses, §3.2) and long-run accumulation over
+//! time + homogeneous directions (figures 4/11).
+
+use super::moments::{CoMoments, OnlineMoments};
+use crate::mesh::{Mesh, VectorField};
+
+/// Instantaneous profiles of one frame: mean velocity and second-order
+/// (co)moments per wall-normal layer, averaged over homogeneous directions.
+#[derive(Clone, Debug)]
+pub struct WallProfiles {
+    /// Wall-normal coordinate of each layer (cell centers).
+    pub y: Vec<f64>,
+    /// Mean velocity per layer: `mean[i][j_layer]`, i in 0..3.
+    pub mean: [Vec<f64>; 3],
+    /// Reynolds stresses u_i'u_j' per layer for pairs
+    /// (0,0), (1,1), (2,2), (0,1) in that order.
+    pub stress: [Vec<f64>; 4],
+}
+
+pub const STRESS_PAIRS: [(usize, usize); 4] = [(0, 0), (1, 1), (2, 2), (0, 1)];
+
+/// Compute instantaneous wall-normal profiles on a single-block channel mesh
+/// (wall-normal = axis 1, homogeneous = axes 0 and 2).
+pub fn channel_profiles(mesh: &Mesh, u: &VectorField) -> WallProfiles {
+    assert_eq!(mesh.blocks.len(), 1, "channel statistics expect a single block");
+    let b = &mesh.blocks[0];
+    let (nx, ny, nz) = (b.shape[0], b.shape[1], b.shape[2]);
+    let nh = (nx * nz) as f64;
+    let mut y = vec![0.0; ny];
+    let mut mean: [Vec<f64>; 3] = [vec![0.0; ny], vec![0.0; ny], vec![0.0; ny]];
+    let mut second: [Vec<f64>; 4] = [vec![0.0; ny], vec![0.0; ny], vec![0.0; ny], vec![0.0; ny]];
+    for j in 0..ny {
+        y[j] = b.centers[b.lidx(0, j, 0)][1];
+        for k in 0..nz {
+            for i in 0..nx {
+                let cell = b.offset + b.lidx(i, j, k);
+                let uv = u.get(cell);
+                for c in 0..3 {
+                    mean[c][j] += uv[c] / nh;
+                }
+                for (s, (a, bb)) in STRESS_PAIRS.iter().enumerate() {
+                    second[s][j] += uv[*a] * uv[*bb] / nh;
+                }
+            }
+        }
+    }
+    // central moments: ⟨u_a u_b⟩ − ⟨u_a⟩⟨u_b⟩
+    let mut stress = second;
+    for j in 0..ny {
+        for (s, (a, bb)) in STRESS_PAIRS.iter().enumerate() {
+            stress[s][j] -= mean[*a][j] * mean[*bb][j];
+        }
+    }
+    WallProfiles { y, mean, stress }
+}
+
+/// Long-run accumulator over frames: per-layer online moments over all
+/// (x, z, t) samples.
+pub struct ChannelStats {
+    pub y: Vec<f64>,
+    pub u: Vec<OnlineMoments>,
+    pub v: Vec<OnlineMoments>,
+    pub w: Vec<OnlineMoments>,
+    pub uv: Vec<CoMoments>,
+    /// Running mean of the wall-shear velocity u_τ = √(ν |∂ū/∂y|_wall).
+    pub u_tau_acc: OnlineMoments,
+    nu: f64,
+}
+
+impl ChannelStats {
+    pub fn new(mesh: &Mesh, nu: f64) -> ChannelStats {
+        let b = &mesh.blocks[0];
+        let ny = b.shape[1];
+        let y = (0..ny).map(|j| b.centers[b.lidx(0, j, 0)][1]).collect();
+        ChannelStats {
+            y,
+            u: vec![OnlineMoments::default(); ny],
+            v: vec![OnlineMoments::default(); ny],
+            w: vec![OnlineMoments::default(); ny],
+            uv: vec![CoMoments::default(); ny],
+            u_tau_acc: OnlineMoments::default(),
+            nu,
+        }
+    }
+
+    /// Push one frame.
+    pub fn push(&mut self, mesh: &Mesh, u: &VectorField) {
+        let b = &mesh.blocks[0];
+        let (nx, ny, nz) = (b.shape[0], b.shape[1], b.shape[2]);
+        for j in 0..ny {
+            for k in 0..nz {
+                for i in 0..nx {
+                    let cell = b.offset + b.lidx(i, j, k);
+                    let uv = u.get(cell);
+                    self.u[j].push(uv[0]);
+                    self.v[j].push(uv[1]);
+                    self.w[j].push(uv[2]);
+                    self.uv[j].push(uv[0], uv[1]);
+                }
+            }
+        }
+        // u_τ from both walls: one-sided dū/dy at first/last layer
+        let prof = channel_profiles(mesh, u);
+        let y0 = prof.y[0];
+        let y1 = prof.y[ny - 1];
+        let ly = y1 + y0; // walls at 0 and y1+y0 (symmetric grading)
+        let dudy_lo = prof.mean[0][0] / y0;
+        let dudy_hi = prof.mean[0][ny - 1] / (ly - y1);
+        let u_tau = (self.nu * 0.5 * (dudy_lo.abs() + dudy_hi.abs())).sqrt();
+        self.u_tau_acc.push(u_tau);
+    }
+
+    pub fn u_tau(&self) -> f64 {
+        self.u_tau_acc.mean
+    }
+
+    /// Mean profiles and stresses: (ū, ⟨u'u'⟩, ⟨v'v'⟩, ⟨w'w'⟩, ⟨u'v'⟩).
+    #[allow(clippy::type_complexity)]
+    pub fn profiles(&self) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        let ny = self.y.len();
+        let mut um = vec![0.0; ny];
+        let mut uu = vec![0.0; ny];
+        let mut vv = vec![0.0; ny];
+        let mut ww = vec![0.0; ny];
+        let mut uv = vec![0.0; ny];
+        for j in 0..ny {
+            um[j] = self.u[j].mean;
+            uu[j] = self.u[j].variance();
+            vv[j] = self.v[j].variance();
+            ww[j] = self.w[j].variance();
+            uv[j] = self.uv[j].covariance();
+        }
+        (um, uu, vv, ww, uv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn profiles_of_uniform_shear() {
+        let mesh = gen::channel3d([6, 8, 4], [2.0, 2.0, 1.0], 1.0);
+        let mut u = VectorField::zeros(mesh.ncells);
+        for (cell, c) in mesh.centers.iter().enumerate() {
+            u.comp[0][cell] = 3.0 * c[1]; // pure shear, no fluctuations
+        }
+        let p = channel_profiles(&mesh, &u);
+        for j in 0..8 {
+            assert!((p.mean[0][j] - 3.0 * p.y[j]).abs() < 1e-12);
+            for s in 0..4 {
+                assert!(p.stress[s][j].abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn stresses_capture_fluctuations() {
+        let mesh = gen::channel3d([16, 4, 16], [2.0, 2.0, 1.0], 1.0);
+        let mut rng = Rng::new(5);
+        let mut u = VectorField::zeros(mesh.ncells);
+        for cell in 0..mesh.ncells {
+            u.comp[0][cell] = 1.0 + 0.5 * rng.normal();
+            u.comp[1][cell] = 0.2 * rng.normal();
+        }
+        let p = channel_profiles(&mesh, &u);
+        for j in 0..4 {
+            assert!((p.stress[0][j] - 0.25).abs() < 0.06, "u'u' {}", p.stress[0][j]);
+            assert!((p.stress[1][j] - 0.04).abs() < 0.02, "v'v' {}", p.stress[1][j]);
+            assert!(p.stress[3][j].abs() < 0.05, "u'v' {}", p.stress[3][j]);
+        }
+    }
+
+    #[test]
+    fn accumulator_converges_over_frames() {
+        let mesh = gen::channel3d([8, 4, 8], [1.0, 2.0, 1.0], 1.0);
+        let mut stats = ChannelStats::new(&mesh, 0.01);
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let mut u = VectorField::zeros(mesh.ncells);
+            for cell in 0..mesh.ncells {
+                u.comp[0][cell] = 2.0 + 0.3 * rng.normal();
+            }
+            stats.push(&mesh, &u);
+        }
+        let (um, uu, _, _, _) = stats.profiles();
+        for j in 0..4 {
+            assert!((um[j] - 2.0).abs() < 0.02);
+            assert!((uu[j] - 0.09).abs() < 0.01);
+        }
+        assert!(stats.u_tau() > 0.0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Differentiable losses: velocity MSE (2D corrector training, §5.1–5.2),
+//! turbulence-statistics losses (eq. 12/13, the TCF SGS training signal),
+//! and the divergence gradient modification (eq. 11) that projects the
+//! learning signal onto divergence-free corrections.
+
+use crate::fvm;
+use crate::linsolve::{cg, Jacobi, SolveOpts};
+use crate::mesh::{Mesh, VectorField};
+use crate::stats::profiles::{channel_profiles, STRESS_PAIRS};
+
+/// Velocity MSE against a reference: `L = (1/(dim·N)) Σ |u − û|²`; returns
+/// the loss and ∂L/∂u.
+pub fn mse_loss_grad(dim: usize, u: &VectorField, u_ref: &VectorField) -> (f64, VectorField) {
+    let n = u.ncells();
+    let norm = 1.0 / (dim * n) as f64;
+    let mut loss = 0.0;
+    let mut grad = VectorField::zeros(n);
+    for c in 0..dim {
+        for cell in 0..n {
+            let d = u.comp[c][cell] - u_ref.comp[c][cell];
+            loss += d * d * norm;
+            grad.comp[c][cell] = 2.0 * d * norm;
+        }
+    }
+    (loss, grad)
+}
+
+/// Reference statistics for the channel losses: wall-normal profiles of the
+/// mean velocity and the four stress pairs of `STRESS_PAIRS`.
+#[derive(Clone, Debug)]
+pub struct StatsTarget {
+    pub mean: [Vec<f64>; 3],
+    pub stress: [Vec<f64>; 4],
+    /// λ weights for the mean terms (per component) and stress terms.
+    pub w_mean: [f64; 3],
+    pub w_stress: [f64; 4],
+}
+
+/// Per-frame statistics loss (the per-frame part of eq. 13): mean and
+/// second-order profile mismatches, with the exact gradient w.r.t. the
+/// instantaneous velocity field.
+pub fn stats_loss_grad(mesh: &Mesh, u: &VectorField, target: &StatsTarget) -> (f64, VectorField) {
+    let prof = channel_profiles(mesh, u);
+    let b = &mesh.blocks[0];
+    let (nx, ny, nz) = (b.shape[0], b.shape[1], b.shape[2]);
+    let nh = (nx * nz) as f64;
+    let y_norm = 1.0 / ny as f64;
+    let mut loss = 0.0;
+    let mut grad = VectorField::zeros(mesh.ncells);
+    // mean terms: L = (1/Y) Σ_y w_i (ū_i(y) − target)²
+    let mut dmean = [vec![0.0; ny], vec![0.0; ny], vec![0.0; ny]];
+    for c in 0..mesh.dim {
+        if target.w_mean[c] == 0.0 {
+            continue;
+        }
+        for j in 0..ny {
+            let d = prof.mean[c][j] - target.mean[c][j];
+            loss += target.w_mean[c] * d * d * y_norm;
+            dmean[c][j] += 2.0 * target.w_mean[c] * d * y_norm;
+        }
+    }
+    // stress terms: s_ab(y) = ⟨u_a u_b⟩ − ū_a ū_b
+    let mut dstress = [vec![0.0; ny], vec![0.0; ny], vec![0.0; ny], vec![0.0; ny]];
+    for (s, _) in STRESS_PAIRS.iter().enumerate() {
+        if target.w_stress[s] == 0.0 {
+            continue;
+        }
+        for j in 0..ny {
+            let d = prof.stress[s][j] - target.stress[s][j];
+            loss += target.w_stress[s] * d * d * y_norm;
+            dstress[s][j] = 2.0 * target.w_stress[s] * d * y_norm;
+        }
+    }
+    // chain to cells: ∂ū_c(y)/∂u_c[cell] = 1/nh;
+    // ∂s_ab(y)/∂u_a[cell] = (u_b[cell] − ū_b(y))/nh (+ symmetric)
+    for j in 0..ny {
+        for k in 0..nz {
+            for i in 0..nx {
+                let cell = b.offset + b.lidx(i, j, k);
+                let uv = u.get(cell);
+                for c in 0..mesh.dim {
+                    grad.comp[c][cell] += dmean[c][j] / nh;
+                }
+                for (s, (a, bb)) in STRESS_PAIRS.iter().enumerate() {
+                    let ds = dstress[s][j];
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    grad.comp[*a][cell] += ds * (uv[*bb] - prof.mean[*bb][j]) / nh;
+                    grad.comp[*bb][cell] += ds * (uv[*a] - prof.mean[*a][j]) / nh;
+                }
+            }
+        }
+    }
+    (loss, grad)
+}
+
+/// Divergence gradient modification (eq. 11): solve an auxiliary pressure
+/// system `∇²p_θ = ∇·u_θ` for the network output `u_θ` (here the corrector
+/// source S_θ) and add `λ ∇p_θ` to the incoming gradient, steering the
+/// optimization toward divergence-free outputs with a *globally* correct
+/// signal. Returns the modified gradient.
+pub fn div_gradient_modification(
+    mesh: &Mesh,
+    s_theta: &VectorField,
+    dl_ds: &VectorField,
+    lambda: f64,
+) -> VectorField {
+    // unit-coefficient Laplacian (A⁻¹ ≡ 1): M p = −∇·S
+    let mut m = fvm::pressure_structure(mesh);
+    let ones = vec![1.0; mesh.ncells];
+    fvm::assemble_pressure(mesh, &ones, &mut m);
+    // divergence of the corrector output; Dirichlet boundary fluxes do not
+    // involve S, so pass an explicit zero override
+    let n_bc: usize = mesh
+        .bc_values
+        .iter()
+        .map(|b| b.vel.len())
+        .sum::<usize>()
+        .max(1);
+    let zeros = vec![[0.0; 3]; n_bc * 8];
+    let div = fvm::divergence_h(mesh, s_theta, Some(&zeros));
+    let rhs: Vec<f64> = div.iter().map(|v| -v).collect();
+    let mut p = vec![0.0; mesh.ncells];
+    let precond = Jacobi::new(&m);
+    cg(&m, &rhs, &mut p, &precond, true, SolveOpts { tol: 1e-8, max_iter: 4000, transpose: false });
+    let gp = fvm::pressure_gradient(mesh, &p);
+    let mut out = dl_ds.clone();
+    out.axpy(lambda, &gp);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mse_grad_matches_fd() {
+        let mut rng = Rng::new(1);
+        let n = 24;
+        let mut u = VectorField::zeros(n);
+        let mut r = VectorField::zeros(n);
+        for c in 0..2 {
+            u.comp[c] = rng.normal_vec(n);
+            r.comp[c] = rng.normal_vec(n);
+        }
+        let (_, g) = mse_loss_grad(2, &u, &r);
+        let eps = 1e-6;
+        for probe in 0..4 {
+            let c = probe % 2;
+            let cell = (probe * 7) % n;
+            let mut up = u.clone();
+            up.comp[c][cell] += eps;
+            let mut um = u.clone();
+            um.comp[c][cell] -= eps;
+            let fd = (mse_loss_grad(2, &up, &r).0 - mse_loss_grad(2, &um, &r).0) / (2.0 * eps);
+            assert!((fd - g.comp[c][cell]).abs() < 1e-8, "{fd} vs {}", g.comp[c][cell]);
+        }
+    }
+
+    #[test]
+    fn stats_loss_zero_at_target() {
+        let mesh = gen::channel3d([6, 8, 4], [1.0, 2.0, 1.0], 1.0);
+        let mut rng = Rng::new(2);
+        let mut u = VectorField::zeros(mesh.ncells);
+        for c in 0..3 {
+            u.comp[c] = rng.normal_vec(mesh.ncells);
+        }
+        let prof = channel_profiles(&mesh, &u);
+        let target = StatsTarget {
+            mean: prof.mean.clone(),
+            stress: prof.stress.clone(),
+            w_mean: [1.0, 0.5, 0.5],
+            w_stress: [1.0, 1.0, 1.0, 1.0],
+        };
+        let (loss, grad) = stats_loss_grad(&mesh, &u, &target);
+        assert!(loss < 1e-20);
+        assert!(grad.comp[0].iter().all(|v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn stats_grad_matches_fd() {
+        let mesh = gen::channel3d([4, 6, 4], [1.0, 2.0, 1.0], 1.0);
+        let mut rng = Rng::new(3);
+        let mut u = VectorField::zeros(mesh.ncells);
+        for c in 0..3 {
+            u.comp[c] = rng.normal_vec(mesh.ncells);
+        }
+        let ny = 6;
+        let target = StatsTarget {
+            mean: [vec![1.0; ny], vec![0.0; ny], vec![0.0; ny]],
+            stress: [vec![0.1; ny], vec![0.05; ny], vec![0.05; ny], vec![-0.01; ny]],
+            w_mean: [1.0, 0.5, 0.5],
+            w_stress: [1.0, 1.0, 1.0, 1.0],
+        };
+        let (_, g) = stats_loss_grad(&mesh, &u, &target);
+        let eps = 1e-6;
+        for probe in 0..6 {
+            let c = probe % 3;
+            let cell = (probe * 13) % mesh.ncells;
+            let mut up = u.clone();
+            up.comp[c][cell] += eps;
+            let mut um = u.clone();
+            um.comp[c][cell] -= eps;
+            let fd = (stats_loss_grad(&mesh, &up, &target).0
+                - stats_loss_grad(&mesh, &um, &target).0)
+                / (2.0 * eps);
+            assert!(
+                (fd - g.comp[c][cell]).abs() < 1e-7 * (1.0 + fd.abs()),
+                "[{c}][{cell}]: {fd} vs {}",
+                g.comp[c][cell]
+            );
+        }
+    }
+
+    /// The modification leaves divergence-free outputs untouched and pushes
+    /// divergent outputs toward lower divergence.
+    #[test]
+    fn div_modification_targets_divergent_part() {
+        let mesh = gen::periodic_box2d(16, 16, 1.0, 1.0);
+        let tau = 2.0 * std::f64::consts::PI;
+        // divergence-free field (curl form)
+        let mut s_free = VectorField::zeros(mesh.ncells);
+        for (i, c) in mesh.centers.iter().enumerate() {
+            s_free.comp[0][i] = (tau * c[1]).cos();
+            s_free.comp[1][i] = (tau * c[0]).sin() * 0.0;
+        }
+        let dl = VectorField::zeros(mesh.ncells);
+        let g_free = div_gradient_modification(&mesh, &s_free, &dl, 1.0);
+        let gn: f64 = g_free.comp[0].iter().chain(&g_free.comp[1]).map(|v| v * v).sum();
+        assert!(gn < 1e-10, "div-free output should get ~zero modification: {gn}");
+        // divergent field: gradient points along the irrotational part
+        let mut s_div = VectorField::zeros(mesh.ncells);
+        for (i, c) in mesh.centers.iter().enumerate() {
+            s_div.comp[0][i] = (tau * c[0]).sin();
+        }
+        let g_div = div_gradient_modification(&mesh, &s_div, &dl, 1.0);
+        // descent step S − η g reduces ‖∇·S‖
+        let mut s_new = s_div.clone();
+        s_new.axpy(-0.5, &g_div);
+        let d0: f64 =
+            fvm::divergence_h(&mesh, &s_div, None).iter().map(|v| v * v).sum::<f64>();
+        let d1: f64 =
+            fvm::divergence_h(&mesh, &s_new, None).iter().map(|v| v * v).sum::<f64>();
+        assert!(d1 < d0, "divergence should decrease: {d0} -> {d1}");
+    }
+}

@@ -1,0 +1,10 @@
+//! Training substrate (paper §3): optimizers over flat parameter vectors,
+//! MSE and turbulence-statistics losses with analytic gradients, weight
+//! decay (eq. 10), and the physically-informed divergence gradient
+//! modification (eq. 11).
+
+pub mod loss;
+pub mod optim;
+
+pub use loss::{div_gradient_modification, mse_loss_grad, stats_loss_grad, StatsTarget};
+pub use optim::{Adam, Optimizer, Sgd};

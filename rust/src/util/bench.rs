@@ -1,0 +1,135 @@
+//! Criterion-style micro/macro benchmark harness (criterion is not vendored).
+//! Runs warmup + measured iterations, reports mean / stddev / min, and writes
+//! a JSON report under `reports/` so EXPERIMENTS.md tables can be regenerated.
+
+use super::json::Json;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("iters", Json::Num(self.iters as f64)),
+            ("mean_s", Json::Num(self.mean_s)),
+            ("std_s", Json::Num(self.std_s)),
+            ("min_s", Json::Num(self.min_s)),
+            ("max_s", Json::Num(self.max_s)),
+        ])
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 1, iters: 5 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters }
+    }
+
+    /// Time `f` over the configured iterations and print a criterion-like line.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: mean,
+            std_s: var.sqrt(),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_s: samples.iter().cloned().fold(0.0, f64::max),
+        };
+        println!(
+            "bench {:<44} mean {:>10.4} ms  (± {:>8.4} ms, min {:>10.4} ms, n={})",
+            res.name,
+            res.mean_s * 1e3,
+            res.std_s * 1e3,
+            res.min_s * 1e3,
+            res.iters
+        );
+        res
+    }
+}
+
+/// Write a collection of results (plus free-form extra fields) to
+/// `reports/<file>.json`, creating the directory if needed.
+pub fn write_report(file: &str, results: &[BenchResult], extra: Vec<(&str, Json)>) {
+    let mut fields = vec![(
+        "benches",
+        Json::Arr(results.iter().map(|r| r.to_json()).collect()),
+    )];
+    fields.extend(extra);
+    let j = Json::obj(fields);
+    let _ = std::fs::create_dir_all("reports");
+    let path = format!("reports/{file}.json");
+    if std::fs::write(&path, j.to_string_pretty()).is_ok() {
+        println!("report written to {path}");
+    }
+}
+
+/// Print a markdown-ish table row-aligned for paper-vs-measured comparisons.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        let mut s = String::from("| ");
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            s.push_str(&format!("{:<width$} | ", c, width = widths[i]));
+        }
+        s
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    println!(
+        "|{}|",
+        widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let b = Bench::new(0, 3);
+        let r = b.run("noop", || 1 + 1);
+        assert_eq!(r.iters, 3);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+    }
+}

@@ -1,0 +1,90 @@
+//! Tiny clap-like CLI argument parser: `--key value`, `--flag`, and free
+//! positional arguments, with typed getters and defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including `argv[0]`).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut args = Args::default();
+        let mut it = iter.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        args
+    }
+
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = parse(&["run", "--steps", "100", "--verbose", "--re=550", "extra"]);
+        assert_eq!(a.positional, vec!["run", "extra"]);
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.f64_or("re", 0.0), 550.0);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.get_or("engine", "native"), "native");
+        assert!(!a.flag("x"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--fast"]);
+        assert!(a.flag("fast"));
+    }
+}

@@ -1,0 +1,80 @@
+//! Small self-contained substrates: PRNG, JSON writer, CLI parsing, timing,
+//! and a property-testing mini-framework. These exist because the build is
+//! fully offline and the usual crates (rand, serde_json, clap, criterion,
+//! proptest) are not vendored; each is a focused reimplementation of the
+//! subset PICT needs.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+/// Relative L2 error between two slices: `||a-b|| / max(||b||, eps)`.
+pub fn rel_l2(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - y) * (x - y);
+        den += y * y;
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Mean squared error between two slices.
+pub fn mse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        s += (x - y) * (x - y);
+    }
+    s / a.len() as f64
+}
+
+/// Pearson correlation coefficient of two slices.
+pub fn correlation(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    cov / (va.sqrt() * vb.sqrt()).max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_l2_zero_for_identical() {
+        let a = [1.0, 2.0, 3.0];
+        assert!(rel_l2(&a, &a) < 1e-15);
+    }
+
+    #[test]
+    fn correlation_of_self_is_one() {
+        let a = [0.3, -1.0, 2.5, 4.0];
+        assert!((correlation(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlation_of_negated_is_minus_one() {
+        let a = [0.3, -1.0, 2.5, 4.0];
+        let b: Vec<f64> = a.iter().map(|x| -x).collect();
+        assert!((correlation(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_simple() {
+        assert!((mse(&[1.0, 2.0], &[0.0, 0.0]) - 2.5).abs() < 1e-15);
+    }
+}

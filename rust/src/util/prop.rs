@@ -1,0 +1,76 @@
+//! Property-testing mini-framework (proptest is not vendored offline).
+//! Generates random cases from a seeded [`Rng`](super::rng::Rng), runs the
+//! property, and on failure reports the case index + seed so the exact case
+//! reproduces deterministically.
+
+use super::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 32, seed: 0xC0FFEE }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Prop { cases, seed }
+    }
+
+    /// Run `property(rng, case_index)`; panic with a reproducible message on
+    /// the first failing case (property returns Err(description)).
+    pub fn check<F>(&self, name: &str, mut property: F)
+    where
+        F: FnMut(&mut Rng, usize) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            // fresh, addressable stream per case
+            let mut rng = Rng::new(self.seed.wrapping_add(case as u64 * 0x9E37));
+            if let Err(msg) = property(&mut rng, case) {
+                panic!(
+                    "property `{name}` failed on case {case} (seed {:#x}): {msg}",
+                    self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Helper: random dimensions in [lo, hi] (inclusive).
+pub fn dims_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Prop::new(10, 1).check("always_ok", |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed on case")]
+    fn failing_property_panics_with_case() {
+        Prop::new(5, 2).check("always_bad", |_, _| Err("nope".into()));
+    }
+
+    #[test]
+    fn dims_in_respects_bounds() {
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let d = dims_in(&mut rng, 3, 9);
+            assert!((3..=9).contains(&d));
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Wall-clock timing helpers and a lightweight scoped profiler used by the
+//! §Perf pass. The profiler accumulates named section totals so we can report
+//! e.g. the fraction of a PISO step spent in linear solves (the paper quotes
+//! 70–90 %).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Measure wall-clock seconds of a closure.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+thread_local! {
+    static PROFILE: RefCell<BTreeMap<String, (u64, f64)>> = RefCell::new(BTreeMap::new());
+    static PROFILE_ON: RefCell<bool> = const { RefCell::new(false) };
+}
+
+/// Enable/disable the thread-local profiler.
+pub fn set_profiling(on: bool) {
+    PROFILE_ON.with(|p| *p.borrow_mut() = on);
+}
+
+/// Reset accumulated sections.
+pub fn reset_profile() {
+    PROFILE.with(|p| p.borrow_mut().clear());
+}
+
+/// Accumulate `secs` under `name` (no-op unless profiling is enabled).
+pub fn record(name: &str, secs: f64) {
+    if !PROFILE_ON.with(|p| *p.borrow()) {
+        return;
+    }
+    PROFILE.with(|p| {
+        let mut m = p.borrow_mut();
+        let e = m.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += secs;
+    });
+}
+
+/// Profile a closure under `name`.
+pub fn scoped<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    if !PROFILE_ON.with(|p| *p.borrow()) {
+        return f();
+    }
+    let t0 = Instant::now();
+    let out = f();
+    record(name, t0.elapsed().as_secs_f64());
+    out
+}
+
+/// Snapshot of `(name, calls, total_secs)` sorted by total time descending.
+pub fn profile_report() -> Vec<(String, u64, f64)> {
+    let mut rows: Vec<(String, u64, f64)> =
+        PROFILE.with(|p| p.borrow().iter().map(|(k, v)| (k.clone(), v.0, v.1)).collect());
+    rows.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+    rows
+}
+
+/// Render the profile as an aligned text table.
+pub fn profile_table() -> String {
+    let rows = profile_report();
+    let total: f64 = rows.iter().map(|r| r.2).sum();
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<28} {:>10} {:>12} {:>7}\n",
+        "section", "calls", "total [s]", "%"
+    ));
+    for (name, calls, secs) in &rows {
+        s.push_str(&format!(
+            "{:<28} {:>10} {:>12.4} {:>6.1}%\n",
+            name,
+            calls,
+            secs,
+            100.0 * secs / total.max(1e-12)
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiler_accumulates() {
+        set_profiling(true);
+        reset_profile();
+        for _ in 0..3 {
+            scoped("work", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        }
+        let rows = profile_report();
+        set_profiling(false);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].1, 3);
+        assert!(rows[0].2 >= 0.003);
+    }
+
+    #[test]
+    fn disabled_profiler_is_silent() {
+        set_profiling(false);
+        reset_profile();
+        scoped("hidden", || ());
+        assert!(profile_report().is_empty());
+    }
+}

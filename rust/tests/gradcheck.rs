@@ -1,0 +1,328 @@
+//! Gradient validation (paper §4.2): the analytic adjoint of the full PISO
+//! step — including both OtD backward linear solves — is compared against
+//! central finite differences of the forward solver, the Rust analog of
+//! PyTorch's gradcheck. Also checks the rollout chain rule over multiple
+//! steps and the lid-velocity / viscosity gradients used by the direct
+//! optimization experiments (Appendix C).
+
+use pict::adjoint::{backward_step, rollout_backward, GradientPaths, RolloutTape};
+use pict::mesh::{gen, Mesh, VectorField};
+use pict::piso::{PisoConfig, PisoSolver, State, StepRecord};
+use pict::util::rng::Rng;
+
+fn tight_cfg(dt: f64) -> PisoConfig {
+    let mut cfg = PisoConfig { dt, ..Default::default() };
+    cfg.adv_opts.tol = 1e-13;
+    cfg.p_opts.tol = 1e-13;
+    cfg.adv_opts.max_iter = 5000;
+    cfg.p_opts.max_iter = 20000;
+    cfg
+}
+
+fn empty_record() -> StepRecord {
+    StepRecord {
+        dt: 0.0,
+        u_n: VectorField::zeros(0),
+        p_in: vec![],
+        source: VectorField::zeros(0),
+        c_vals: vec![],
+        a_inv: vec![],
+        pmat_vals: vec![],
+        rhs_base: VectorField::zeros(0),
+        grad_p_in: VectorField::zeros(0),
+        u_star: VectorField::zeros(0),
+        correctors: vec![],
+    }
+}
+
+fn random_state(mesh: &Mesh, seed: u64, amp: f64) -> State {
+    let mut rng = Rng::new(seed);
+    let mut state = State::zeros(mesh);
+    for (i, c) in mesh.centers.iter().enumerate() {
+        state.u.comp[0][i] =
+            amp * ((6.28 * c[1]).cos() + 0.3 * rng.normal() * 0.1 + 0.2 * (12.5 * c[0]).sin());
+        state.u.comp[1][i] = amp * ((6.28 * c[0]).sin() * 0.5 + 0.1 * (9.4 * c[1]).cos());
+    }
+    state
+}
+
+/// Scalar loss with fixed random weights: L = Σ w·u + Σ wp·p.
+struct Loss {
+    wu: VectorField,
+    wp: Vec<f64>,
+}
+
+impl Loss {
+    fn new(mesh: &Mesh, seed: u64) -> Loss {
+        let mut rng = Rng::new(seed);
+        let mut wu = VectorField::zeros(mesh.ncells);
+        for c in 0..mesh.dim {
+            wu.comp[c] = rng.normal_vec(mesh.ncells);
+        }
+        Loss { wu, wp: rng.normal_vec(mesh.ncells) }
+    }
+
+    fn eval(&self, state: &State, dim: usize) -> f64 {
+        let mut l = 0.0;
+        for c in 0..dim {
+            l += self.wu.comp[c].iter().zip(&state.u.comp[c]).map(|(w, u)| w * u).sum::<f64>();
+        }
+        l += self.wp.iter().zip(&state.p).map(|(w, p)| w * p).sum::<f64>();
+        l
+    }
+}
+
+/// One forward step from a given initial state, returning the loss.
+fn forward_loss(
+    mesh: &Mesh,
+    cfg: &PisoConfig,
+    nu: f64,
+    u0: &VectorField,
+    p0: &[f64],
+    src: &VectorField,
+    loss: &Loss,
+) -> f64 {
+    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+    let mut state = State::zeros(mesh);
+    state.u = u0.clone();
+    state.p = p0.to_vec();
+    solver.step(&mut state, src, None);
+    loss.eval(&state, mesh.dim)
+}
+
+/// Full-path gradcheck of a single PISO step w.r.t. u⁰, p⁰, S, and ν on a
+/// periodic box (the paper's §4.2 setting).
+#[test]
+fn single_step_full_gradcheck_periodic() {
+    let mesh = gen::periodic_box2d(6, 5, 1.0, 1.0);
+    let cfg = tight_cfg(0.05);
+    let nu = 0.03;
+    let state0 = random_state(&mesh, 1, 0.5);
+    let src = {
+        let mut s = VectorField::zeros(mesh.ncells);
+        let mut rng = Rng::new(5);
+        for c in 0..2 {
+            s.comp[c] = rng.normal_vec(mesh.ncells).iter().map(|v| 0.1 * v).collect();
+        }
+        s
+    };
+    let loss = Loss::new(&mesh, 9);
+
+    // analytic gradients
+    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+    let mut state = state0.clone();
+    let mut rec = empty_record();
+    solver.step(&mut state, &src, Some(&mut rec));
+    let grads = backward_step(&solver, &rec, &loss.wu, &loss.wp, GradientPaths::FULL);
+
+    let eps = 1e-5;
+    let mut rng = Rng::new(77);
+    // u0: probe a handful of random (comp, cell) entries
+    for _ in 0..6 {
+        let comp = rng.below(2);
+        let cell = rng.below(mesh.ncells);
+        let mut up = state0.u.clone();
+        up.comp[comp][cell] += eps;
+        let mut um = state0.u.clone();
+        um.comp[comp][cell] -= eps;
+        let lp = forward_loss(&mesh, &cfg, nu, &up, &state0.p, &src, &loss);
+        let lm = forward_loss(&mesh, &cfg, nu, &um, &state0.p, &src, &loss);
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = grads.du_n.comp[comp][cell];
+        assert!(
+            (fd - an).abs() < 2e-4 * (1.0 + fd.abs()),
+            "du[{comp}][{cell}]: fd {fd} vs adjoint {an}"
+        );
+    }
+    // p0
+    for _ in 0..4 {
+        let cell = rng.below(mesh.ncells);
+        let mut pp = state0.p.clone();
+        pp[cell] += eps;
+        let mut pm = state0.p.clone();
+        pm[cell] -= eps;
+        let lp = forward_loss(&mesh, &cfg, nu, &state0.u, &pp, &src, &loss);
+        let lm = forward_loss(&mesh, &cfg, nu, &state0.u, &pm, &src, &loss);
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = grads.dp_in[cell];
+        assert!(
+            (fd - an).abs() < 2e-4 * (1.0 + fd.abs()),
+            "dp[{cell}]: fd {fd} vs adjoint {an}"
+        );
+    }
+    // source
+    for _ in 0..4 {
+        let comp = rng.below(2);
+        let cell = rng.below(mesh.ncells);
+        let mut sp = src.clone();
+        sp.comp[comp][cell] += eps;
+        let mut sm = src.clone();
+        sm.comp[comp][cell] -= eps;
+        let lp = forward_loss(&mesh, &cfg, nu, &state0.u, &state0.p, &sp, &loss);
+        let lm = forward_loss(&mesh, &cfg, nu, &state0.u, &state0.p, &sm, &loss);
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = grads.dsource.comp[comp][cell];
+        assert!(
+            (fd - an).abs() < 2e-4 * (1.0 + fd.abs()),
+            "dS[{comp}][{cell}]: fd {fd} vs adjoint {an}"
+        );
+    }
+    // viscosity (uniform scalar)
+    {
+        let lp = forward_loss(&mesh, &cfg, nu + eps, &state0.u, &state0.p, &src, &loss);
+        let lm = forward_loss(&mesh, &cfg, nu - eps, &state0.u, &state0.p, &src, &loss);
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (fd - grads.dnu).abs() < 5e-4 * (1.0 + fd.abs()),
+            "dnu: fd {fd} vs adjoint {}",
+            grads.dnu
+        );
+    }
+}
+
+/// Gradcheck on a wall-bounded (cavity) mesh, including the lid-velocity
+/// gradient (Appendix C.1 optimizes exactly this quantity).
+#[test]
+fn single_step_gradcheck_cavity_with_lid_gradient() {
+    let mesh = gen::cavity2d(6, 1.0, 1.0, false);
+    let cfg = tight_cfg(0.05);
+    let nu = 0.02;
+    let state0 = random_state(&mesh, 2, 0.2);
+    let src = VectorField::zeros(mesh.ncells);
+    let loss = Loss::new(&mesh, 4);
+
+    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+    let mut state = state0.clone();
+    let mut rec = empty_record();
+    solver.step(&mut state, &src, Some(&mut rec));
+    let grads = backward_step(&solver, &rec, &loss.wu, &loss.wp, GradientPaths::FULL);
+
+    let eps = 1e-5;
+    let mut rng = Rng::new(31);
+    for _ in 0..5 {
+        let comp = rng.below(2);
+        let cell = rng.below(mesh.ncells);
+        let mut up = state0.u.clone();
+        up.comp[comp][cell] += eps;
+        let mut um = state0.u.clone();
+        um.comp[comp][cell] -= eps;
+        let lp = forward_loss(&mesh, &cfg, nu, &up, &state0.p, &src, &loss);
+        let lm = forward_loss(&mesh, &cfg, nu, &um, &state0.p, &src, &loss);
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = grads.du_n.comp[comp][cell];
+        assert!(
+            (fd - an).abs() < 3e-4 * (1.0 + fd.abs()),
+            "du[{comp}][{cell}]: fd {fd} vs adjoint {an}"
+        );
+    }
+    // lid velocity: bc set 3 (top face), x-component of every face cell
+    {
+        let fd = {
+            let run = |lid: f64| {
+                let mut mesh2 = mesh.clone();
+                for v in mesh2.bc_values[3].vel.iter_mut() {
+                    v[0] = lid;
+                }
+                let mut solver = PisoSolver::new(mesh2.clone(), cfg.clone(), nu);
+                let mut st = State::zeros(&mesh2);
+                st.u = state0.u.clone();
+                st.p = state0.p.clone();
+                solver.step(&mut st, &src, None);
+                loss.eval(&st, 2)
+            };
+            (run(1.0 + eps) - run(1.0 - eps)) / (2.0 * eps)
+        };
+        let an: f64 = grads.dbc[3].iter().map(|g| g[0]).sum();
+        assert!(
+            (fd - an).abs() < 3e-4 * (1.0 + fd.abs()),
+            "d(lid): fd {fd} vs adjoint {an}"
+        );
+    }
+}
+
+/// Rollout chain rule: 3-step rollout gradient w.r.t. a scalar scaling of
+/// the initial velocity matches finite differences (the §4.2 setup).
+#[test]
+fn rollout_gradcheck_initial_scale() {
+    let mesh = gen::periodic_box2d(8, 6, 1.0, 1.0);
+    let cfg = tight_cfg(0.04);
+    let nu = 0.02;
+    let base = random_state(&mesh, 3, 0.6);
+    let ncells = mesh.ncells;
+    let loss = Loss::new(&mesh, 8);
+
+    let run = |scale: f64| -> f64 {
+        let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+        let mut state = base.clone();
+        state.u.scale(scale);
+        let src = VectorField::zeros(ncells);
+        solver.run(&mut state, &src, 3);
+        loss.eval(&state, 2)
+    };
+
+    // analytic: d/dscale = ⟨du0, u_base⟩ at scale=1
+    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+    let mut state = base.clone();
+    let tape = RolloutTape::record(&mut solver, &mut state, 3, |_, _| VectorField::zeros(ncells));
+    let g = rollout_backward(&solver, &tape, GradientPaths::FULL, |step, _| {
+        if step == 2 {
+            (loss.wu.clone(), loss.wp.clone())
+        } else {
+            (VectorField::zeros(ncells), vec![0.0; ncells])
+        }
+    });
+    let an: f64 = (0..2)
+        .map(|c| g.du0.comp[c].iter().zip(&base.u.comp[c]).map(|(a, b)| a * b).sum::<f64>())
+        .sum();
+
+    let eps = 1e-5;
+    let fd = (run(1.0 + eps) - run(1.0 - eps)) / (2.0 * eps);
+    assert!(
+        (fd - an).abs() < 5e-4 * (1.0 + fd.abs()),
+        "rollout: fd {fd} vs adjoint {an}"
+    );
+}
+
+/// The approximate paths are genuinely different from the full gradient but
+/// correlate strongly with it for a short rollout (§4.3's premise).
+#[test]
+fn approximate_paths_correlate_with_full() {
+    let mesh = gen::periodic_box2d(8, 8, 1.0, 1.0);
+    let cfg = tight_cfg(0.03);
+    let base = random_state(&mesh, 6, 0.8);
+    let ncells = mesh.ncells;
+    // velocity-only loss: the pressure cotangent flows exclusively through
+    // the pressure solve, so including it would make the Adv-vs-full
+    // comparison trivially different (the paper's §4.2 task is a velocity
+    // loss as well)
+    let mut loss = Loss::new(&mesh, 13);
+    loss.wp.iter_mut().for_each(|w| *w = 0.0);
+
+    let grad_for = |paths: GradientPaths| -> VectorField {
+        let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), 0.02);
+        let mut state = base.clone();
+        let tape =
+            RolloutTape::record(&mut solver, &mut state, 1, |_, _| VectorField::zeros(ncells));
+        let g = rollout_backward(&solver, &tape, paths, |_, _| {
+            (loss.wu.clone(), loss.wp.clone())
+        });
+        g.du0
+    };
+    let full = grad_for(GradientPaths::FULL);
+    let adv = grad_for(GradientPaths::ADV);
+    let none = grad_for(GradientPaths::NONE);
+
+    let corr = |a: &VectorField, b: &VectorField| -> f64 {
+        let av: Vec<f64> = a.comp[0].iter().chain(&a.comp[1]).cloned().collect();
+        let bv: Vec<f64> = b.comp[0].iter().chain(&b.comp[1]).cloned().collect();
+        pict::util::correlation(&av, &bv)
+    };
+    let c_adv = corr(&full, &adv);
+    let c_none = corr(&full, &none);
+    assert!(c_adv > 0.9, "Adv vs full correlation {c_adv}");
+    assert!(c_none > 0.7, "none vs full correlation {c_none}");
+    // and they are not identical (the ablation is real)
+    let diff: f64 =
+        full.comp[0].iter().zip(&none.comp[0]).map(|(a, b)| (a - b).abs()).sum();
+    assert!(diff > 1e-8, "none path should differ from full");
+}

@@ -1,0 +1,113 @@
+//! End-to-end learning tests (paper §5, scaled down): the corrector-training
+//! harness must reduce the training loss and beat the No-Model baseline on
+//! held-out rollouts, and the statistics-only SGS training must reduce the
+//! statistics mismatch of the coarse channel.
+
+use pict::adjoint::GradientPaths;
+use pict::coordinator::experiments::corrector2d::{
+    evaluate_corrector, make_reference_frames, train_corrector2d, Corrector2dCfg,
+};
+use pict::coordinator::experiments::tcf_sgs::{
+    eval_sgs, reference_statistics, train_tcf_sgs, TcfSgsCfg,
+};
+use pict::mesh::gen;
+use pict::piso::{PisoConfig, PisoSolver, State};
+
+/// E5-style corrector on a tiny vortex-street: training loss drops and the
+/// trained model beats No-Model at the evaluation checkpoints.
+#[test]
+fn corrector_training_beats_no_model_vortex_street() {
+    let vs = gen::VortexStreetCfg {
+        nx: [6, 4, 10],
+        ny: [6, 4, 6],
+        ..Default::default()
+    };
+    let fine_mesh = gen::vortex_street(&gen::VortexStreetCfg {
+        nx: [12, 8, 20],
+        ny: [12, 8, 12],
+        ..Default::default()
+    });
+    let coarse_mesh = gen::vortex_street(&vs);
+    let nu = vs.u_in * vs.obs_h / 400.0;
+    let cfg = Corrector2dCfg {
+        t_ratio: 2,
+        n_frames: 50,
+        fine_warmup: 100,
+        curriculum: vec![3, 6],
+        opt_steps_per_stage: 50,
+        lr: 2e-3,
+        paths: GradientPaths::NONE,
+        lambda_div: 1e-3,
+        output_scale: 0.1,
+        seed: 0xC0DE,
+    };
+    let mut fine = PisoSolver::new(
+        fine_mesh,
+        PisoConfig { dt: 0.04, use_ilu: true, ..Default::default() },
+        nu,
+    );
+    let mut fine_state = State::zeros(&fine.mesh);
+    let frames = make_reference_frames(&mut fine, &mut fine_state, &coarse_mesh, &cfg);
+
+    let mut coarse = PisoSolver::new(
+        coarse_mesh.clone(),
+        PisoConfig { dt: 0.08, use_ilu: true, ..Default::default() },
+        nu,
+    );
+    let (net, losses) = train_corrector2d(&mut coarse, &frames, &cfg);
+    assert!(losses.iter().all(|l| l.is_finite()), "training stayed stable");
+
+    // evaluation: long rollout (beyond the training unroll) vs both models
+    let checkpoints = [25usize, 45];
+    let mut s1 = PisoSolver::new(
+        coarse_mesh.clone(),
+        PisoConfig { dt: 0.08, use_ilu: true, ..Default::default() },
+        nu,
+    );
+    let base = evaluate_corrector(&mut s1, None, cfg.output_scale, &frames, &checkpoints);
+    let mut s2 = PisoSolver::new(
+        coarse_mesh,
+        PisoConfig { dt: 0.08, use_ilu: true, ..Default::default() },
+        nu,
+    );
+    let nn = evaluate_corrector(&mut s2, Some(&net), cfg.output_scale, &frames, &checkpoints);
+    // NN beats baseline in MSE and vorticity correlation at every
+    // checkpoint (Table 3 / Fig 7 shape)
+    for ((step, mse_base, corr_base), (_, mse_nn, corr_nn)) in base.iter().zip(&nn) {
+        assert!(
+            mse_nn < mse_base,
+            "step {step}: corrected {mse_nn} should beat no-model {mse_base}"
+        );
+        assert!(
+            corr_nn > corr_base,
+            "step {step}: corrected corr {corr_nn} vs {corr_base}"
+        );
+    }
+}
+
+/// E7-style SGS training: statistics-only loss decreases during training,
+/// and the learned model improves the per-frame statistics mismatch vs no-SGS.
+#[test]
+fn sgs_training_improves_channel_statistics() {
+    let cfg = TcfSgsCfg { coarse_n: [8, 8, 4], ..Default::default() };
+    let target = reference_statistics(&cfg, [12, 14, 6], 120);
+    let result = train_tcf_sgs(&cfg, &target);
+    let early: f64 = result.train_losses[..10].iter().sum::<f64>() / 10.0;
+    let late: f64 =
+        result.train_losses[result.train_losses.len() - 10..].iter().sum::<f64>() / 10.0;
+    assert!(
+        late < early,
+        "SGS statistics loss should drop: {early} -> {late}"
+    );
+
+    let steps = 60;
+    let no_sgs = eval_sgs(&cfg, None, &target, steps);
+    let learned = eval_sgs(&cfg, Some(&result.net), &target, steps);
+    let tail = |v: &[f64]| v[v.len() - 10..].iter().sum::<f64>() / 10.0;
+    assert!(
+        tail(&learned) < tail(&no_sgs),
+        "learned SGS {} should beat no-SGS {}",
+        tail(&learned),
+        tail(&no_sgs)
+    );
+}

@@ -1,0 +1,216 @@
+//! Physical-invariant property tests of the PISO solver: discrete
+//! conservation laws and symmetries that must hold for any valid
+//! configuration (randomized over grids, viscosities, and initial fields).
+
+use pict::fvm;
+use pict::mesh::{gen, VectorField};
+use pict::piso::{PisoConfig, PisoSolver, State};
+use pict::util::prop::Prop;
+use pict::util::rng::Rng;
+
+fn random_div_free(mesh: &pict::mesh::Mesh, rng: &mut Rng, modes: usize) -> VectorField {
+    // streamfunction superposition => exactly solenoidal continuum field
+    let mut u = VectorField::zeros(mesh.ncells);
+    let tau = 2.0 * std::f64::consts::PI;
+    for _ in 0..modes {
+        let (kx, ky) = (1.0 + rng.below(3) as f64, 1.0 + rng.below(3) as f64);
+        let amp = rng.range(0.2, 1.0);
+        let ph = rng.range(0.0, tau);
+        for (i, c) in mesh.centers.iter().enumerate() {
+            u.comp[0][i] += amp * ky * (tau * kx * c[0] + ph).cos() * (tau * ky * c[1]).sin();
+            u.comp[1][i] -= amp * kx * (tau * kx * c[0] + ph).sin() * (tau * ky * c[1]).cos();
+        }
+    }
+    u
+}
+
+/// Total momentum Σ J·u is conserved on a periodic box without forcing, up
+/// to the collocated-PISO correction term Σ J·A⁻¹∇p (which does not
+/// telescope when diag(C) varies spatially — an inherent property of the
+/// scheme, small relative to the momentum scale).
+#[test]
+fn momentum_conservation_periodic() {
+    Prop::new(6, 0x101).check("momentum", |rng, _| {
+        let nx = 8 + 4 * rng.below(3);
+        let ny = 8 + 4 * rng.below(3);
+        let mesh = gen::periodic_box2d(nx, ny, 1.0, 1.0);
+        let nu = rng.range(0.001, 0.05);
+        let mut cfg = PisoConfig { dt: 0.02, ..Default::default() };
+        // conservation is exact up to the Krylov tolerance — tighten it
+        cfg.adv_opts.tol = 1e-12;
+        cfg.p_opts.tol = 1e-12;
+        let mut solver = PisoSolver::new(mesh, cfg, nu);
+        let mut state = State::zeros(&solver.mesh);
+        state.u = random_div_free(&solver.mesh, rng, 2);
+        let mom0: f64 = (0..solver.mesh.ncells)
+            .map(|i| solver.mesh.jac[i] * state.u.comp[0][i])
+            .sum();
+        let scale: f64 = (0..solver.mesh.ncells)
+            .map(|i| solver.mesh.jac[i] * state.u.comp[0][i].abs())
+            .sum();
+        let src = VectorField::zeros(solver.mesh.ncells);
+        solver.run(&mut state, &src, 5);
+        let mom1: f64 = (0..solver.mesh.ncells)
+            .map(|i| solver.mesh.jac[i] * state.u.comp[0][i])
+            .sum();
+        if (mom1 - mom0).abs() > 1e-3 * (1.0 + scale) {
+            return Err(format!("momentum drift {mom0} -> {mom1} (scale {scale})"));
+        }
+        Ok(())
+    });
+}
+
+/// Kinetic energy decays monotonically for unforced viscous flow.
+#[test]
+fn energy_decay_unforced() {
+    Prop::new(5, 0x202).check("energy", |rng, _| {
+        let mesh = gen::periodic_box2d(12, 12, 1.0, 1.0);
+        let nu = rng.range(0.005, 0.05);
+        let mut solver =
+            PisoSolver::new(mesh, PisoConfig { dt: 0.01, ..Default::default() }, nu);
+        let mut state = State::zeros(&solver.mesh);
+        state.u = random_div_free(&solver.mesh, rng, 3);
+        let src = VectorField::zeros(solver.mesh.ncells);
+        let mut e_prev = f64::INFINITY;
+        for _ in 0..6 {
+            solver.step(&mut state, &src, None);
+            let e: f64 = (0..2)
+                .map(|c| state.u.comp[c].iter().map(|v| v * v).sum::<f64>())
+                .sum();
+            if e > e_prev * (1.0 + 1e-9) {
+                return Err(format!("energy grew {e_prev} -> {e}"));
+            }
+            e_prev = e;
+        }
+        Ok(())
+    });
+}
+
+/// The dynamics are invariant to a constant shift of the initial pressure
+/// (pressure enters only through its gradient).
+#[test]
+fn pressure_shift_invariance() {
+    let mesh = gen::cavity2d(10, 1.0, 1.0, false);
+    let mut s1 = PisoSolver::new(mesh.clone(), PisoConfig::default(), 0.01);
+    let mut s2 = PisoSolver::new(mesh, PisoConfig::default(), 0.01);
+    let mut a = State::zeros(&s1.mesh);
+    let mut b = State::zeros(&s2.mesh);
+    b.p.iter_mut().for_each(|p| *p += 37.5);
+    let src = VectorField::zeros(s1.mesh.ncells);
+    s1.run(&mut a, &src, 4);
+    s2.run(&mut b, &src, 4);
+    for c in 0..2 {
+        for i in 0..s1.mesh.ncells {
+            assert!(
+                (a.u.comp[c][i] - b.u.comp[c][i]).abs() < 1e-9,
+                "velocity differs under pressure shift"
+            );
+        }
+    }
+}
+
+/// x-translation equivariance on the periodic box: shifting the initial
+/// condition by one cell shifts the solution by one cell.
+#[test]
+fn translation_equivariance_periodic() {
+    let (nx, ny) = (12usize, 10usize);
+    let mesh = gen::periodic_box2d(nx, ny, 1.0, 1.0);
+    let mut rng = Rng::new(7);
+    let u0 = random_div_free(&mesh, &mut rng, 2);
+    let shift = |f: &VectorField| -> VectorField {
+        let b = &mesh.blocks[0];
+        let mut g = VectorField::zeros(mesh.ncells);
+        for c in 0..2 {
+            for j in 0..ny {
+                for i in 0..nx {
+                    g.comp[c][b.lidx((i + 1) % nx, j, 0)] = f.comp[c][b.lidx(i, j, 0)];
+                }
+            }
+        }
+        g
+    };
+    let run = |u_init: VectorField| -> VectorField {
+        let mut solver =
+            PisoSolver::new(mesh.clone(), PisoConfig { dt: 0.02, ..Default::default() }, 0.01);
+        let mut st = State::zeros(&solver.mesh);
+        st.u = u_init;
+        let src = VectorField::zeros(solver.mesh.ncells);
+        solver.run(&mut st, &src, 3);
+        st.u
+    };
+    let a = shift(&run(u0.clone()));
+    let b = run(shift(&u0));
+    for c in 0..2 {
+        for i in 0..mesh.ncells {
+            assert!((a.comp[c][i] - b.comp[c][i]).abs() < 1e-7, "not equivariant");
+        }
+    }
+}
+
+/// 3D lid-driven cavity (paper Fig 3/B.17): symmetric in z about the
+/// midplane and qualitatively matches the 2D solution on the center slice.
+#[test]
+fn cavity3d_z_symmetry_and_center_slice() {
+    let n = 12;
+    let mesh = gen::cavity3d(n, 1.0, 1.0, false);
+    let mut solver = PisoSolver::new(
+        mesh,
+        PisoConfig { dt: 0.03, ..Default::default() },
+        0.02, // Re = 50: fast convergence
+    );
+    let mut state = State::zeros(&solver.mesh);
+    let src = VectorField::zeros(solver.mesh.ncells);
+    solver.run(&mut state, &src, 120);
+    let b = &solver.mesh.blocks[0];
+    // z-symmetry of u about the midplane
+    for j in 0..n {
+        for i in 0..n {
+            for k in 0..n / 2 {
+                let a = state.u.comp[0][b.lidx(i, j, k)];
+                let c = state.u.comp[0][b.lidx(i, j, n - 1 - k)];
+                assert!((a - c).abs() < 1e-8, "z asymmetry at ({i},{j},{k}): {a} vs {c}");
+            }
+        }
+    }
+    // center slice resembles the 2D cavity: negative u low, positive near lid
+    let u_low = state.u.comp[0][b.lidx(n / 2, 1, n / 2)];
+    let u_top = state.u.comp[0][b.lidx(n / 2, n - 2, n / 2)];
+    assert!(u_low < 0.0, "bottom return flow missing: {u_low}");
+    assert!(u_top > 0.0, "lid-driven flow missing: {u_top}");
+}
+
+/// The divergence-free projection holds after every PISO step (compact
+/// operator residual small relative to the velocity-gradient scale).
+#[test]
+fn per_step_divergence_bounded() {
+    Prop::new(4, 0x303).check("div", |rng, _| {
+        let mesh = gen::channel2d(10, 10, 1.0, 1.0, 1.1, rng.uniform() < 0.5);
+        let mut solver =
+            PisoSolver::new(mesh, PisoConfig { dt: 0.02, ..Default::default() }, 0.02);
+        let mut state = State::zeros(&solver.mesh);
+        state.u = random_div_free(&solver.mesh, rng, 2);
+        let src = VectorField::zeros(solver.mesh.ncells);
+        for _ in 0..4 {
+            let stats = solver.step(&mut state, &src, None);
+            let umax = state.u.max_abs()[0].max(1e-6);
+            if stats.max_divergence > 2.0 * umax * 12.0 {
+                return Err(format!("divergence {} too large", stats.max_divergence));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Mass conservation through the pressure system: the divergence RHS sums
+/// to (near) zero globally on closed domains.
+#[test]
+fn global_continuity_closed_domain() {
+    let mesh = gen::cavity2d(12, 1.0, 1.0, true);
+    let mut solver = PisoSolver::new(mesh, PisoConfig::default(), 0.01);
+    let mut state = State::zeros(&solver.mesh);
+    let src = VectorField::zeros(solver.mesh.ncells);
+    solver.run(&mut state, &src, 10);
+    let div = fvm::divergence_h(&solver.mesh, &state.u, None);
+    let net: f64 = div.iter().sum();
+    assert!(net.abs() < 1e-9, "net flux {net}");
+}
