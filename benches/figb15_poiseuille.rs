@@ -1,11 +1,12 @@
 //! Figure B.15 — plane Poiseuille convergence: u-profiles vs the analytic
 //! solution for increasing resolution, uniform vs wall-refined vs distorted
 //! grids. Also Figure 3/B.16: lid-driven cavity centerline profiles vs the
-//! Ghia reference across resolutions.
+//! Ghia reference across resolutions. Setups come from the scenario
+//! registry (`coordinator::scenario`).
 
 use pict::coordinator::references::{GHIA_RE100_U, GHIA_RE100_V};
-use pict::mesh::{field, gen, VectorField};
-use pict::piso::{PisoConfig, PisoSolver, State};
+use pict::coordinator::scenario::{LidDrivenCavity, Poiseuille, Scenario};
+use pict::mesh::field;
 use pict::util::bench::{print_table, write_report};
 use pict::util::json::Json;
 
@@ -14,17 +15,13 @@ fn main() {
     let mut rows = Vec::new();
     let mut jrows = Vec::new();
     for (ny, refined) in [(8, false), (16, false), (32, false), (16, true), (32, true)] {
-        let mesh = gen::channel2d(6, ny, 1.0, 1.0, 1.12, refined);
-        let mut solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.05, ..Default::default() }, 1.0);
-        let mut state = State::zeros(&solver.mesh);
-        let mut src = VectorField::zeros(solver.mesh.ncells);
-        src.comp[0].iter_mut().for_each(|v| *v = 1.0);
-        solver.run(&mut state, &src, 40);
+        let scenario = Poiseuille { ny, refined, ..Default::default() };
+        let mut run = scenario.build();
+        run.solver.run(&mut run.state, &run.source, 40);
         let mut max_err = 0.0f64;
-        for (cell, c) in solver.mesh.centers.iter().enumerate() {
+        for (cell, c) in run.solver.mesh.centers.iter().enumerate() {
             let exact = 0.5 * c[1] * (1.0 - c[1]);
-            max_err = max_err.max((state.u.comp[0][cell] - exact).abs());
+            max_err = max_err.max((run.state.u.comp[0][cell] - exact).abs());
         }
         rows.push(vec![
             format!("{ny}{}", if refined { " refined" } else { "" }),
@@ -42,20 +39,17 @@ fn main() {
     // --- Fig 3 / B.16: cavity Re=100 profiles vs Ghia across resolutions ---
     let mut rows = Vec::new();
     for n in [16usize, 32] {
-        let mesh = gen::cavity2d(n, 1.0, 1.0, false);
-        let mut solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.02, ..Default::default() }, 0.01);
-        let mut state = State::zeros(&solver.mesh);
-        let src = VectorField::zeros(solver.mesh.ncells);
-        solver.run(&mut state, &src, 1200);
+        let scenario = LidDrivenCavity { n, ..Default::default() };
+        let mut run = scenario.build();
+        run.solver.run(&mut run.state, &run.source, 1200);
         let mut worst_u = 0.0f64;
         for (y, u_ref) in GHIA_RE100_U {
-            let u = field::sample_idw(&solver.mesh, &state.u.comp[0], [0.5, y, 0.5]);
+            let u = field::sample_idw(&run.solver.mesh, &run.state.u.comp[0], [0.5, y, 0.5]);
             worst_u = worst_u.max((u - u_ref).abs());
         }
         let mut worst_v = 0.0f64;
         for (x, v_ref) in GHIA_RE100_V {
-            let v = field::sample_idw(&solver.mesh, &state.u.comp[1], [x, 0.5, 0.5]);
+            let v = field::sample_idw(&run.solver.mesh, &run.state.u.comp[1], [x, 0.5, 0.5]);
             worst_v = worst_v.max((v - v_ref).abs());
         }
         rows.push(vec![format!("{n}x{n}"), format!("{worst_u:.3}"), format!("{worst_v:.3}")]);

@@ -1,0 +1,107 @@
+//! Parallel-execution scaling: row-partitioned SpMV vs the serial kernel on
+//! pressure-solve-sized systems (the dominant cost per PISO step), and the
+//! batched scenario runner vs sequential execution. Thread counts are pinned
+//! per measurement via the `*_partitioned` / `with_threads` entry points, so
+//! the comparison is independent of `PICT_THREADS`.
+
+use pict::coordinator::scenario::{cavity_reynolds_sweep, BatchRunner};
+use pict::fvm;
+use pict::mesh::gen;
+use pict::par;
+use pict::util::bench::{print_table, write_report, Bench, BenchResult};
+use pict::util::json::Json;
+
+fn pressure_matrix(n: usize) -> pict::sparse::Csr {
+    let mesh = gen::periodic_box2d(n, n, 1.0, 1.0);
+    let a_inv = vec![1.0; mesh.ncells];
+    let mut m = fvm::pressure_structure(&mesh);
+    fvm::assemble_pressure(&mesh, &a_inv, &mut m);
+    m
+}
+
+fn main() {
+    let bench = Bench::new(2, 10);
+    let mut all: Vec<BenchResult> = Vec::new();
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+
+    // --- SpMV scaling: serial vs partitioned at 1/2/4/8 chunks ---
+    for n in [64usize, 128, 256] {
+        let a = pressure_matrix(n);
+        let x: Vec<f64> = (0..a.n).map(|i| ((i * 31 % 97) as f64) * 0.01 - 0.5).collect();
+        let mut y = vec![0.0; a.n];
+        // repeat the kernel inside each sample so timings are well above
+        // clock resolution (a single small matvec is ~µs)
+        let reps = (4_000_000 / a.nnz()).max(1);
+        let r_serial = bench.run(&format!("matvec serial {n}x{n} (x{reps})"), || {
+            for _ in 0..reps {
+                a.matvec(&x, &mut y);
+                std::hint::black_box(&y);
+            }
+        });
+        let mut row = vec![format!("{n}x{n}"), format!("{:.3}ms", r_serial.mean_s * 1e3)];
+        let mut speed4 = 0.0;
+        for t in [2usize, 4, 8] {
+            let r_par = bench.run(&format!("matvec par x{t} {n}x{n} (x{reps})"), || {
+                for _ in 0..reps {
+                    par::matvec_partitioned(&a, &x, &mut y, t);
+                    std::hint::black_box(&y);
+                }
+            });
+            let speedup = r_serial.mean_s / r_par.mean_s;
+            if t == 4 {
+                speed4 = speedup;
+            }
+            row.push(format!("{speedup:.2}x"));
+            jrows.push(Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("serial_s", Json::Num(r_serial.mean_s)),
+                ("par_s", Json::Num(r_par.mean_s)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+            all.push(r_par);
+        }
+        all.push(r_serial);
+        rows.push(row);
+        // correctness note: the partitioned kernel is bit-for-bit serial
+        let mut y_ref = vec![0.0; a.n];
+        a.matvec(&x, &mut y_ref);
+        par::matvec_partitioned(&a, &x, &mut y, 4);
+        assert_eq!(y, y_ref, "partitioned matvec must be bit-for-bit serial");
+        println!("  {n}x{n}: 4-thread speedup {speed4:.2}x (cores: {})", par::num_threads());
+    }
+    print_table(
+        "parallel matvec speedup vs serial (pressure matrix)",
+        &["system", "serial", "2T", "4T", "8T"],
+        &rows,
+    );
+
+    // --- batch runner: cavity Re sweep, sequential vs pooled ---
+    let res = [50.0, 100.0, 200.0, 400.0];
+    let steps = 30;
+    let t0 = std::time::Instant::now();
+    let seq = BatchRunner::new(steps).with_threads(1).run(&cavity_reynolds_sweep(24, &res));
+    let t_seq = t0.elapsed().as_secs_f64();
+    let nt = par::num_threads().max(2);
+    let t1 = std::time::Instant::now();
+    let par_results =
+        BatchRunner::new(steps).with_threads(nt).run(&cavity_reynolds_sweep(24, &res));
+    let t_par = t1.elapsed().as_secs_f64();
+    assert_eq!(seq.len(), par_results.len());
+    for (a, b) in seq.iter().zip(&par_results) {
+        assert_eq!(a.state.step, b.state.step);
+    }
+    println!(
+        "\nbatch cavity Re sweep ({} scenarios x {steps} steps): sequential {t_seq:.2}s, \
+         {nt}-thread {t_par:.2}s ({:.2}x)",
+        res.len(),
+        t_seq / t_par.max(1e-9)
+    );
+    jrows.push(Json::obj(vec![
+        ("batch_seq_s", Json::Num(t_seq)),
+        ("batch_par_s", Json::Num(t_par)),
+        ("batch_threads", Json::Num(nt as f64)),
+    ]));
+    write_report("par_scaling", &all, vec![("rows", Json::Arr(jrows))]);
+}

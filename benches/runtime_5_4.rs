@@ -4,11 +4,8 @@
 //! comparison for the AOT hot path and the solver-fraction profile.
 
 use pict::coordinator::experiments::tcf_sgs::*;
-use pict::mesh::VectorField;
 use pict::piso::State;
-use pict::runtime::ArtifactSet;
 use pict::util::bench::{print_table, write_report, Bench};
-use pict::util::json::Json;
 use pict::util::timer;
 
 fn main() {
@@ -61,8 +58,18 @@ fn main() {
     println!("paper: 40x over OpenFOAM at 36% lower aggregate error (full scale)");
 
     // --- AOT engine: xla piso_step2d vs native step at the E4 shape ---
-    if let Ok(mut set) = ArtifactSet::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts")) {
-        use pict::mesh::gen;
+    // (requires the off-by-default `pjrt` feature: the runtime module needs
+    // the unvendored xla/anyhow crates)
+    #[cfg(not(feature = "pjrt"))]
+    {
+        println!("pjrt feature disabled; skipping xla engine comparison");
+        write_report("runtime_5_4", &[r_nn, r_base, r_fine], vec![]);
+    }
+    #[cfg(feature = "pjrt")]
+    if let Ok(mut set) =
+        pict::runtime::ArtifactSet::load(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    {
+        use pict::mesh::{gen, VectorField};
         use pict::piso::{PisoConfig, PisoSolver};
         let (ny, nx) = (16usize, 18);
         let mesh = gen::periodic_box2d(nx, ny, 1.0, 1.0);
@@ -104,7 +111,7 @@ fn main() {
         write_report(
             "runtime_5_4",
             &[rb, rx, r_nn, r_base, r_fine],
-            vec![("xla_native_rel_l2", Json::Num(err))],
+            vec![("xla_native_rel_l2", pict::util::json::Json::Num(err))],
         );
     } else {
         println!("artifacts not built; skipping xla engine comparison (run `make artifacts`)");

@@ -1,30 +1,31 @@
 //! Lid-driven cavity validation (paper Fig 3 / B.16): run to steady state
-//! and print the u-centerline against the Ghia et al. reference.
+//! and print the u-centerline against the Ghia et al. reference. Setup comes
+//! from the scenario registry (`coordinator::scenario`).
 
 use pict::coordinator::references::GHIA_RE100_U;
-use pict::mesh::{field, gen, VectorField};
-use pict::piso::{PisoConfig, PisoSolver, State};
+use pict::coordinator::scenario::{LidDrivenCavity, Scenario};
+use pict::mesh::field;
 use pict::util::cli::Args;
 
 fn main() {
     let args = Args::parse();
-    let n = args.usize_or("n", 32);
-    let re = args.f64_or("re", 100.0);
     let steps = args.usize_or("steps", 1200);
-    let mesh = gen::cavity2d(n, 1.0, 1.0, args.flag("refined"));
-    let mut solver =
-        PisoSolver::new(mesh, PisoConfig { dt: 0.02, ..Default::default() }, 1.0 / re);
-    let mut state = State::zeros(&solver.mesh);
-    let src = VectorField::zeros(solver.mesh.ncells);
+    let scenario = LidDrivenCavity {
+        n: args.usize_or("n", 32),
+        re: args.f64_or("re", 100.0),
+        refined: args.flag("refined"),
+        ..Default::default()
+    };
+    let mut run = scenario.build();
     for k in 0..steps {
-        let st = solver.step(&mut state, &src, None);
+        let st = run.solver.step(&mut run.state, &run.source, None);
         if k % 200 == 0 {
             println!("step {k}: max div {:.2e}", st.max_divergence);
         }
     }
     println!("\n{:>8} {:>10} {:>10} {:>8}", "y", "u(sim)", "u(Ghia)", "err");
     for (y, u_ref) in GHIA_RE100_U {
-        let u = field::sample_idw(&solver.mesh, &state.u.comp[0], [0.5, y, 0.5]);
+        let u = field::sample_idw(&run.solver.mesh, &run.state.u.comp[0], [0.5, y, 0.5]);
         println!("{y:>8.4} {u:>10.5} {u_ref:>10.5} {:>8.1e}", (u - u_ref).abs());
     }
 }

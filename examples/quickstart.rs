@@ -14,13 +14,9 @@ fn main() {
     let mut solver =
         PisoSolver::new(mesh, PisoConfig { dt: 0.01, ..Default::default() }, 0.01);
 
-    // 3. initial state: a Taylor–Green vortex
+    // 3. initial state: a Taylor–Green vortex (shared scenario helper)
     let mut state = State::zeros(&solver.mesh);
-    let tau = 2.0 * std::f64::consts::PI;
-    for (i, c) in solver.mesh.centers.iter().enumerate() {
-        state.u.comp[0][i] = (tau * c[0]).sin() * (tau * c[1]).cos();
-        state.u.comp[1][i] = -(tau * c[0]).cos() * (tau * c[1]).sin();
-    }
+    state.u = pict::coordinator::scenario::taylor_green_init(&solver.mesh);
 
     // 4. simulate
     let src = VectorField::zeros(solver.mesh.ncells);

@@ -1,40 +1,38 @@
 //! 3D channel flow statistics (paper Fig 4 at mini scale): run the channel,
 //! accumulate online statistics, print the wall-normal profiles and u_τ.
+//! Setup comes from the scenario registry (`coordinator::scenario`).
 
-use pict::coordinator::experiments::tcf_sgs::{forcing_field, perturbed_channel_init};
-use pict::mesh::gen;
-use pict::piso::{PisoConfig, PisoSolver, State};
+use pict::coordinator::scenario::{Scenario, TurbulentChannel};
 use pict::stats::ChannelStats;
 use pict::util::cli::Args;
 
 fn main() {
     let args = Args::parse();
-    let n = [
-        args.usize_or("nx", 12),
-        args.usize_or("ny", 12),
-        args.usize_or("nz", 6),
-    ];
     let steps = args.usize_or("steps", 300);
-    let nu = args.f64_or("nu", 0.004);
-    let forcing = args.f64_or("forcing", 0.01);
-    let l = [4.0, 2.0, 2.0];
-    let mesh = gen::channel3d(n, l, 1.08);
-    let mut solver =
-        PisoSolver::new(mesh, PisoConfig { dt: 0.08, ..Default::default() }, nu);
-    let mut state = State::zeros(&solver.mesh);
-    state.u = perturbed_channel_init(&solver.mesh, l[1], 0.4, 1);
-    let src = forcing_field(&solver.mesh, forcing);
+    let scenario = TurbulentChannel {
+        n: [
+            args.usize_or("nx", 12),
+            args.usize_or("ny", 12),
+            args.usize_or("nz", 6),
+        ],
+        nu: args.f64_or("nu", 0.004),
+        forcing: args.f64_or("forcing", 0.01),
+        ..Default::default()
+    };
+    let ly = scenario.l[1];
+    let nu = scenario.nu;
+    let mut run = scenario.build();
     // develop
-    solver.run(&mut state, &src, steps / 3);
+    run.solver.run(&mut run.state, &run.source, steps / 3);
     // accumulate
-    let mut stats = ChannelStats::new(&solver.mesh, nu);
+    let mut stats = ChannelStats::new(&run.solver.mesh, nu);
     for _ in 0..(2 * steps / 3) {
-        solver.step(&mut state, &src, None);
-        stats.push(&solver.mesh, &state.u);
+        run.solver.step(&mut run.state, &run.source, None);
+        stats.push(&run.solver.mesh, &run.state.u);
     }
     let (um, uu, vv, ww, uv) = stats.profiles();
     let u_tau = stats.u_tau();
-    println!("u_tau = {u_tau:.4}, Re_tau ≈ {:.1}", u_tau * (l[1] / 2.0) / nu);
+    println!("u_tau = {u_tau:.4}, Re_tau ≈ {:.1}", u_tau * (ly / 2.0) / nu);
     println!(
         "\n{:>8} {:>9} {:>9} {:>9} {:>9} {:>10}",
         "y", "U", "u'u'", "v'v'", "w'w'", "u'v'"

@@ -1,46 +1,37 @@
 //! Vortex street on the 8-block grid-with-hole (paper §5.1 geometry): run
-//! the flow past the square obstacle and report shedding diagnostics.
+//! the flow past the square obstacle and report shedding diagnostics. Setup
+//! comes from the scenario registry (`coordinator::scenario`).
 
 use pict::coordinator::experiments::corrector2d::vorticity;
-use pict::mesh::{field, gen, VectorField};
-use pict::piso::{PisoConfig, PisoSolver, State};
+use pict::coordinator::scenario::{Scenario, VortexStreet};
+use pict::mesh::field;
 use pict::util::cli::Args;
 
 fn main() {
     let args = Args::parse();
-    let re = args.f64_or("re", 500.0);
     let steps = args.usize_or("steps", 300);
-    let cfg = gen::VortexStreetCfg {
-        nx: [8, 6, 16],
-        ny: [10, 6, 10],
-        ..Default::default()
-    };
-    let mesh = gen::vortex_street(&cfg);
-    println!("mesh: {} blocks, {} cells", mesh.blocks.len(), mesh.ncells);
-    let nu = cfg.u_in * cfg.obs_h / re;
-    let mut solver = PisoSolver::new(
-        mesh,
-        PisoConfig { dt: 0.05, target_cfl: Some(0.8), use_ilu: true, ..Default::default() },
-        nu,
+    let scenario = VortexStreet { re: args.f64_or("re", 500.0), ..Default::default() };
+    let mut run = scenario.build();
+    println!(
+        "mesh: {} blocks, {} cells",
+        run.solver.mesh.blocks.len(),
+        run.solver.mesh.ncells
     );
-    let mut state = State::zeros(&solver.mesh);
-    // small transverse perturbation to break the symmetry and trigger
-    // shedding onset within a short run
-    for (i, c) in solver.mesh.centers.iter().enumerate() {
-        state.u.comp[1][i] = 0.05 * (1.3 * c[0]).sin() * (0.9 * c[1]).cos();
-    }
-    let src = VectorField::zeros(solver.mesh.ncells);
     // probe behind the obstacle: v-velocity oscillates once shedding starts
-    let probe = [cfg.obs_x + cfg.obs_w + 1.5, cfg.ly / 2.0, 0.5];
+    let geo = scenario.geometry();
+    let probe = [geo.obs_x + geo.obs_w + 1.5, geo.ly / 2.0, 0.5];
     let mut history = Vec::new();
     for k in 0..steps {
-        solver.step(&mut state, &src, None);
-        let v = field::sample_idw(&solver.mesh, &state.u.comp[1], probe);
+        run.solver.step(&mut run.state, &run.source, None);
+        let v = field::sample_idw(&run.solver.mesh, &run.state.u.comp[1], probe);
         history.push(v);
         if k % 50 == 0 {
-            let w = vorticity(&solver.mesh, &state.u);
+            let w = vorticity(&run.solver.mesh, &run.state.u);
             let wmax = w.iter().fold(0.0f64, |a, b| a.max(b.abs()));
-            println!("step {k}: t={:.1} v(probe)={v:+.4} max|ω|={wmax:.3}", state.time);
+            println!(
+                "step {k}: t={:.1} v(probe)={v:+.4} max|ω|={wmax:.3}",
+                run.state.time
+            );
         }
     }
     // count zero crossings of the probe signal in the second half

@@ -1,8 +1,11 @@
 //! The experiment coordinator: reference data, experiment drivers for every
-//! table/figure in the paper's evaluation (see DESIGN.md §4), and the
+//! table/figure in the paper's evaluation (see DESIGN.md §4), the scenario
+//! registry + batched multi-scenario runner ([`scenario`]), and the
 //! reporting layer shared by the CLI and the bench harness.
 
 pub mod experiments;
 pub mod references;
+pub mod scenario;
 
 pub use experiments::*;
+pub use scenario::{builtin_scenarios, scenario_by_kind, BatchResult, BatchRunner, Scenario};

@@ -1,0 +1,465 @@
+//! Scenario registry + batched multi-scenario runner.
+//!
+//! A [`Scenario`] packages everything needed to start a simulation — mesh,
+//! solver configuration, initial state, and source field — behind one
+//! `build()` call, unifying the setup code that used to be duplicated
+//! across `examples/*.rs` and `benches/*.rs`. The built-in registry covers
+//! the paper's forward workloads (Taylor–Green box, lid-driven cavity,
+//! plane Poiseuille, 3D turbulent channel, vortex street).
+//!
+//! [`BatchRunner`] advances many independent scenario runs concurrently on
+//! the [`par`](crate::par) worker pool — e.g. a cavity Reynolds sweep in one
+//! call — claiming runs off a shared counter so long and short scenarios
+//! load-balance. Each worker advances its run inside
+//! [`par::with_serial`](crate::par::with_serial), so the inner solver
+//! kernels stay serial instead of oversubscribing the machine; the
+//! per-scenario aggregated [`StepStats`] come back in input order.
+
+use crate::mesh::{gen, Mesh, VectorField};
+use crate::par;
+use crate::piso::{PisoConfig, PisoSolver, State, StepStats};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A ready-to-advance simulation: solver + state + (fixed) source field.
+pub struct ScenarioRun {
+    pub label: String,
+    pub solver: PisoSolver,
+    pub state: State,
+    pub source: VectorField,
+}
+
+/// A named, parameterized simulation setup.
+pub trait Scenario: Send + Sync {
+    /// Registry key of the scenario family (e.g. `"cavity"`).
+    fn kind(&self) -> &'static str;
+    /// Human-readable label including the distinguishing parameters.
+    fn label(&self) -> String;
+    /// Construct the mesh, solver, initial state, and source.
+    fn build(&self) -> ScenarioRun;
+}
+
+/// Divergence-free Taylor–Green vortex velocity on the unit box.
+pub fn taylor_green_init(mesh: &Mesh) -> VectorField {
+    let tau = 2.0 * std::f64::consts::PI;
+    let mut u = VectorField::zeros(mesh.ncells);
+    for (i, c) in mesh.centers.iter().enumerate() {
+        u.comp[0][i] = (tau * c[0]).sin() * (tau * c[1]).cos();
+        u.comp[1][i] = -(tau * c[0]).cos() * (tau * c[1]).sin();
+    }
+    u
+}
+
+/// Decaying Taylor–Green vortex on a periodic 2D box (the quickstart /
+/// viscous-decay validation flow).
+#[derive(Clone, Debug)]
+pub struct TaylorGreen {
+    pub n: usize,
+    pub nu: f64,
+    pub dt: f64,
+}
+
+impl Default for TaylorGreen {
+    fn default() -> Self {
+        TaylorGreen { n: 32, nu: 0.01, dt: 0.01 }
+    }
+}
+
+impl Scenario for TaylorGreen {
+    fn kind(&self) -> &'static str {
+        "taylor-green"
+    }
+
+    fn label(&self) -> String {
+        format!("taylor-green {0}x{0} nu={1}", self.n, self.nu)
+    }
+
+    fn build(&self) -> ScenarioRun {
+        let mesh = gen::periodic_box2d(self.n, self.n, 1.0, 1.0);
+        let solver =
+            PisoSolver::new(mesh, PisoConfig { dt: self.dt, ..Default::default() }, self.nu);
+        let mut state = State::zeros(&solver.mesh);
+        state.u = taylor_green_init(&solver.mesh);
+        let source = VectorField::zeros(solver.mesh.ncells);
+        ScenarioRun { label: self.label(), solver, state, source }
+    }
+}
+
+/// Lid-driven cavity at a given Reynolds number (paper Fig 3 / B.16).
+#[derive(Clone, Debug)]
+pub struct LidDrivenCavity {
+    pub n: usize,
+    pub re: f64,
+    pub dt: f64,
+    pub refined: bool,
+}
+
+impl Default for LidDrivenCavity {
+    fn default() -> Self {
+        LidDrivenCavity { n: 32, re: 100.0, dt: 0.02, refined: false }
+    }
+}
+
+impl Scenario for LidDrivenCavity {
+    fn kind(&self) -> &'static str {
+        "cavity"
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "cavity {0}x{0} Re={1}{2}",
+            self.n,
+            self.re,
+            if self.refined { " refined" } else { "" }
+        )
+    }
+
+    fn build(&self) -> ScenarioRun {
+        let mesh = gen::cavity2d(self.n, 1.0, 1.0, self.refined);
+        let solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: self.dt, ..Default::default() },
+            1.0 / self.re,
+        );
+        let state = State::zeros(&solver.mesh);
+        let source = VectorField::zeros(solver.mesh.ncells);
+        ScenarioRun { label: self.label(), solver, state, source }
+    }
+}
+
+/// Plane Poiseuille channel driven by a unit body force at ν = 1 (paper
+/// Fig B.15; the steady profile is the analytic `y(1−y)/2`).
+#[derive(Clone, Debug)]
+pub struct Poiseuille {
+    pub nx: usize,
+    pub ny: usize,
+    pub wall_ratio: f64,
+    pub refined: bool,
+    pub dt: f64,
+}
+
+impl Default for Poiseuille {
+    fn default() -> Self {
+        Poiseuille { nx: 6, ny: 16, wall_ratio: 1.12, refined: false, dt: 0.05 }
+    }
+}
+
+impl Scenario for Poiseuille {
+    fn kind(&self) -> &'static str {
+        "poiseuille"
+    }
+
+    fn label(&self) -> String {
+        format!(
+            "poiseuille {}x{}{}",
+            self.nx,
+            self.ny,
+            if self.refined { " refined" } else { "" }
+        )
+    }
+
+    fn build(&self) -> ScenarioRun {
+        let mesh = gen::channel2d(self.nx, self.ny, 1.0, 1.0, self.wall_ratio, self.refined);
+        let solver =
+            PisoSolver::new(mesh, PisoConfig { dt: self.dt, ..Default::default() }, 1.0);
+        let state = State::zeros(&solver.mesh);
+        let mut source = VectorField::zeros(solver.mesh.ncells);
+        source.comp[0].iter_mut().for_each(|v| *v = 1.0);
+        ScenarioRun { label: self.label(), solver, state, source }
+    }
+}
+
+/// Forced 3D turbulent channel (the §5.3 SGS workload at mini scale).
+#[derive(Clone, Debug)]
+pub struct TurbulentChannel {
+    pub n: [usize; 3],
+    pub l: [f64; 3],
+    pub nu: f64,
+    pub forcing: f64,
+    pub dt: f64,
+    pub perturbation: f64,
+    pub seed: u64,
+}
+
+impl Default for TurbulentChannel {
+    fn default() -> Self {
+        TurbulentChannel {
+            n: [12, 12, 6],
+            l: [4.0, 2.0, 2.0],
+            nu: 0.004,
+            forcing: 0.01,
+            dt: 0.08,
+            perturbation: 0.4,
+            seed: 1,
+        }
+    }
+}
+
+impl Scenario for TurbulentChannel {
+    fn kind(&self) -> &'static str {
+        "channel"
+    }
+
+    fn label(&self) -> String {
+        format!("channel {}x{}x{} nu={}", self.n[0], self.n[1], self.n[2], self.nu)
+    }
+
+    fn build(&self) -> ScenarioRun {
+        use super::experiments::tcf_sgs::{forcing_field, perturbed_channel_init};
+        let mesh = gen::channel3d(self.n, self.l, 1.08);
+        let solver =
+            PisoSolver::new(mesh, PisoConfig { dt: self.dt, ..Default::default() }, self.nu);
+        let mut state = State::zeros(&solver.mesh);
+        state.u = perturbed_channel_init(&solver.mesh, self.l[1], self.perturbation, self.seed);
+        let source = forcing_field(&solver.mesh, self.forcing);
+        ScenarioRun { label: self.label(), solver, state, source }
+    }
+}
+
+/// Vortex street past the square obstacle on the 8-block grid-with-hole
+/// (paper §5.1 geometry), with the symmetry-breaking perturbation that
+/// triggers shedding onset within a short run.
+#[derive(Clone, Debug)]
+pub struct VortexStreet {
+    pub nx: [usize; 3],
+    pub ny: [usize; 3],
+    pub re: f64,
+    pub dt: f64,
+    pub target_cfl: f64,
+}
+
+impl Default for VortexStreet {
+    fn default() -> Self {
+        VortexStreet { nx: [8, 6, 16], ny: [10, 6, 10], re: 500.0, dt: 0.05, target_cfl: 0.8 }
+    }
+}
+
+impl VortexStreet {
+    /// The grid geometry this scenario builds with (single source of truth
+    /// for probe placement in examples/diagnostics).
+    pub fn geometry(&self) -> gen::VortexStreetCfg {
+        gen::VortexStreetCfg { nx: self.nx, ny: self.ny, ..Default::default() }
+    }
+}
+
+impl Scenario for VortexStreet {
+    fn kind(&self) -> &'static str {
+        "vortex-street"
+    }
+
+    fn label(&self) -> String {
+        format!("vortex-street Re={}", self.re)
+    }
+
+    fn build(&self) -> ScenarioRun {
+        let cfg = self.geometry();
+        let mesh = gen::vortex_street(&cfg);
+        let nu = cfg.u_in * cfg.obs_h / self.re;
+        let solver = PisoSolver::new(
+            mesh,
+            PisoConfig {
+                dt: self.dt,
+                target_cfl: Some(self.target_cfl),
+                use_ilu: true,
+                ..Default::default()
+            },
+            nu,
+        );
+        let mut state = State::zeros(&solver.mesh);
+        for (i, c) in solver.mesh.centers.iter().enumerate() {
+            state.u.comp[1][i] = 0.05 * (1.3 * c[0]).sin() * (0.9 * c[1]).cos();
+        }
+        let source = VectorField::zeros(solver.mesh.ncells);
+        ScenarioRun { label: self.label(), solver, state, source }
+    }
+}
+
+/// All built-in scenarios at their default parameters.
+pub fn builtin_scenarios() -> Vec<Box<dyn Scenario>> {
+    vec![
+        Box::new(TaylorGreen::default()),
+        Box::new(LidDrivenCavity::default()),
+        Box::new(Poiseuille::default()),
+        Box::new(TurbulentChannel::default()),
+        Box::new(VortexStreet::default()),
+    ]
+}
+
+/// Look up a scenario family by its registry key (default parameters).
+pub fn scenario_by_kind(kind: &str) -> Option<Box<dyn Scenario>> {
+    builtin_scenarios().into_iter().find(|s| s.kind() == kind)
+}
+
+/// A cavity Reynolds sweep: one scenario per requested Re.
+pub fn cavity_reynolds_sweep(n: usize, res: &[f64]) -> Vec<Box<dyn Scenario>> {
+    res.iter()
+        .map(|&re| Box::new(LidDrivenCavity { n, re, ..Default::default() }) as Box<dyn Scenario>)
+        .collect()
+}
+
+/// Outcome of one scenario advanced by the [`BatchRunner`]: final state plus
+/// aggregated per-step diagnostics.
+pub struct BatchResult {
+    pub label: String,
+    pub state: State,
+    /// Number of steps taken.
+    pub steps: usize,
+    /// Total Krylov iterations across all steps.
+    pub adv_iters: usize,
+    pub p_iters: usize,
+    /// Worst per-step residuals / divergence over the run.
+    pub adv_residual: f64,
+    pub p_residual: f64,
+    pub max_divergence: f64,
+    /// Stats of the final step.
+    pub last: StepStats,
+    /// Wall-clock seconds spent building + advancing this scenario.
+    pub wall_s: f64,
+}
+
+/// Advances many independent scenario runs concurrently on the worker pool.
+pub struct BatchRunner {
+    pub steps: usize,
+    pub threads: usize,
+}
+
+impl BatchRunner {
+    /// Runner advancing each scenario by `steps` steps on the default pool.
+    pub fn new(steps: usize) -> BatchRunner {
+        BatchRunner { steps, threads: par::num_threads() }
+    }
+
+    /// Cap the number of concurrent scenario workers.
+    pub fn with_threads(mut self, threads: usize) -> BatchRunner {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Build and advance every scenario; results come back in input order.
+    pub fn run(&self, scenarios: &[Box<dyn Scenario>]) -> Vec<BatchResult> {
+        self.drive(scenarios.len(), |i| scenarios[i].build())
+    }
+
+    /// Advance pre-built runs (e.g. mid-simulation states).
+    pub fn advance(&self, runs: Vec<ScenarioRun>) -> Vec<BatchResult> {
+        let slots: Vec<Mutex<Option<ScenarioRun>>> =
+            runs.into_iter().map(|r| Mutex::new(Some(r))).collect();
+        self.drive(slots.len(), |i| slots[i].lock().unwrap().take().expect("run taken twice"))
+    }
+
+    fn drive<F>(&self, count: usize, make: F) -> Vec<BatchResult>
+    where
+        F: Fn(usize) -> ScenarioRun + Sync,
+    {
+        let steps = self.steps;
+        let results: Vec<Mutex<Option<BatchResult>>> =
+            (0..count).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let work = || {
+            // the inner solver kernels stay serial: this thread IS the
+            // parallelism (one scenario per worker)
+            par::with_serial(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= count {
+                    break;
+                }
+                let t0 = Instant::now();
+                let mut run = make(i);
+                let mut adv_iters = 0;
+                let mut p_iters = 0;
+                let mut adv_residual = 0.0f64;
+                let mut p_residual = 0.0f64;
+                let mut max_divergence = 0.0f64;
+                let mut last = StepStats::default();
+                for _ in 0..steps {
+                    let st = run.solver.step(&mut run.state, &run.source, None);
+                    adv_iters += st.adv_iters;
+                    p_iters += st.p_iters;
+                    adv_residual = adv_residual.max(st.adv_residual);
+                    p_residual = p_residual.max(st.p_residual);
+                    max_divergence = max_divergence.max(st.max_divergence);
+                    last = st;
+                }
+                *results[i].lock().unwrap() = Some(BatchResult {
+                    label: run.label,
+                    state: run.state,
+                    steps,
+                    adv_iters,
+                    p_iters,
+                    adv_residual,
+                    p_residual,
+                    max_divergence,
+                    last,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                });
+            })
+        };
+        let nt = self.threads.clamp(1, count.max(1));
+        if nt <= 1 {
+            work();
+        } else {
+            std::thread::scope(|s| {
+                for _ in 0..nt {
+                    s.spawn(&work);
+                }
+            });
+        }
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("batch worker skipped a run"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_distinct_kinds() {
+        let all = builtin_scenarios();
+        assert!(all.len() >= 4);
+        let mut kinds: Vec<&str> = all.iter().map(|s| s.kind()).collect();
+        kinds.sort_unstable();
+        kinds.dedup();
+        assert_eq!(kinds.len(), all.len(), "duplicate scenario kinds");
+        assert!(scenario_by_kind("cavity").is_some());
+        assert!(scenario_by_kind("no-such-flow").is_none());
+    }
+
+    #[test]
+    fn cavity_sweep_builds_one_per_re() {
+        let sweep = cavity_reynolds_sweep(8, &[50.0, 100.0, 200.0]);
+        assert_eq!(sweep.len(), 3);
+        assert!(sweep.iter().all(|s| s.kind() == "cavity"));
+        let labels: Vec<String> = sweep.iter().map(|s| s.label()).collect();
+        assert!(labels[0] != labels[1]);
+    }
+
+    #[test]
+    fn batch_runner_advances_small_scenarios() {
+        let scenarios: Vec<Box<dyn Scenario>> = vec![
+            Box::new(TaylorGreen { n: 8, ..Default::default() }),
+            Box::new(LidDrivenCavity { n: 8, ..Default::default() }),
+            Box::new(Poiseuille { nx: 4, ny: 8, ..Default::default() }),
+        ];
+        let results = BatchRunner::new(2).with_threads(3).run(&scenarios);
+        assert_eq!(results.len(), 3);
+        for (r, s) in results.iter().zip(&scenarios) {
+            assert_eq!(r.label, s.label());
+            assert_eq!(r.state.step, 2);
+            assert!(r.state.time > 0.0);
+            assert!(r.p_iters > 0);
+        }
+    }
+
+    #[test]
+    fn advance_resumes_prebuilt_runs() {
+        let runs: Vec<ScenarioRun> =
+            vec![TaylorGreen { n: 8, ..Default::default() }.build()];
+        let runner = BatchRunner::new(1);
+        let first = runner.advance(runs);
+        assert_eq!(first[0].state.step, 1);
+    }
+}

@@ -24,6 +24,15 @@ pub use pressure::{
     assemble_pressure, divergence_h, h_field, pressure_gradient, pressure_structure,
 };
 
+/// Position of `col` within one CSR row's sorted column slice (the per-row
+/// lookup both assembly kernels use); panics if the entry is not in the
+/// structure.
+#[inline]
+pub(crate) fn row_entry(cols: &[u32], row: usize, col: usize) -> usize {
+    cols.binary_search(&(col as u32))
+        .unwrap_or_else(|_| panic!("entry ({row},{col}) not in CSR structure"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

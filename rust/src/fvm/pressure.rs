@@ -15,8 +15,12 @@ pub fn pressure_structure(mesh: &Mesh) -> Csr {
 /// entries. M is symmetric positive semi-definite with the constant
 /// nullspace on all-periodic domains.
 pub fn assemble_pressure(mesh: &Mesh, a_inv: &[f64], m: &mut Csr) {
-    m.zero_values();
-    for cell in 0..mesh.ncells {
+    // Row-partitioned across the worker pool (same disjoint-rows argument
+    // as `assemble_c`); per-row arithmetic matches the serial loop exactly.
+    let Csr { ref row_ptr, ref col_idx, ref mut vals, .. } = *m;
+    crate::par::for_each_row(row_ptr, col_idx, vals, |cell, cols, row_vals| {
+        row_vals.iter_mut().for_each(|v| *v = 0.0);
+        let entry = |col: usize| super::row_entry(cols, cell, col);
         let mut diag = 0.0;
         for face in 0..2 * mesh.dim {
             let ax = face_axis(face);
@@ -25,12 +29,12 @@ pub fn assemble_pressure(mesh: &Mesh, a_inv: &[f64], m: &mut Csr) {
                 let coef = 0.5
                     * (mesh.alpha[cell][ax][ax] * a_inv[cell]
                         + mesh.alpha[nb][ax][ax] * a_inv[nb]);
-                m.add(cell, nb, -coef);
+                row_vals[entry(nb)] += -coef;
                 diag += coef;
             }
         }
-        m.add(cell, cell, diag);
-    }
+        row_vals[entry(cell)] += diag;
+    });
 }
 
 /// Divergence RHS for the pressure system (A.18): per cell,

@@ -6,10 +6,13 @@
 //!
 //! Layer 3 (this crate) owns the general solver: multi-block structured
 //! meshes, FVM discretization, PISO time stepping, the DtO/OtD hybrid
-//! adjoint engine, turbulence statistics, the CNN corrector substrate, and
-//! the experiment coordinator. Layers 1–2 (python/compile) author Pallas
-//! kernels and the JAX PISO graph, AOT-lowered to HLO text executed here via
-//! PJRT ([`runtime`]).
+//! adjoint engine, turbulence statistics, the CNN corrector substrate, the
+//! parallel execution substrate ([`par`]) with the batched scenario runner
+//! ([`coordinator::scenario`]), and the experiment coordinator. Layers 1–2
+//! (python/compile) author Pallas kernels and the JAX PISO graph,
+//! AOT-lowered to HLO text executed here via PJRT (the `runtime` module,
+//! behind the off-by-default `pjrt` feature — it needs the unvendored
+//! `xla`/`anyhow` crates, which the offline build does not ship).
 //!
 //! See DESIGN.md for the system inventory and experiment index.
 
@@ -19,7 +22,9 @@ pub mod fvm;
 pub mod linsolve;
 pub mod mesh;
 pub mod nn;
+pub mod par;
 pub mod piso;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sparse;
 pub mod stats;

@@ -16,11 +16,13 @@ pub fn bicgstab(
     opts: SolveOpts,
 ) -> SolveStats {
     let n = a.n;
+    // SpMV goes through the worker pool: row-partitioned gather for A x
+    // (bit-for-bit equal to serial), scatter-reduce for Aᵀ x.
     let apply = |v: &[f64], out: &mut [f64]| {
         if opts.transpose {
-            a.matvec_transpose(v, out)
+            crate::par::matvec_transpose(a, v, out)
         } else {
-            a.matvec(v, out)
+            crate::par::matvec(a, v, out)
         }
     };
 

@@ -14,8 +14,10 @@ fn remove_mean(v: &mut [f64]) {
     v.iter_mut().for_each(|x| *x -= mean);
 }
 
-/// Solve A x = b (or Aᵀ x = b) with preconditioned CG. `x` holds the initial
-/// guess on entry and the solution on exit.
+/// Solve A x = b with preconditioned CG; `x` holds the initial guess on
+/// entry and the solution on exit. `opts.transpose` (the adjoint solve
+/// Aᵀ x = b) is accepted and solved with the same forward kernel: CG
+/// requires symmetric A, so Aᵀ = A and the two systems coincide.
 pub fn cg(
     a: &Csr,
     b: &[f64],
@@ -25,13 +27,13 @@ pub fn cg(
     opts: SolveOpts,
 ) -> SolveStats {
     let n = a.n;
-    let apply = |v: &[f64], out: &mut [f64]| {
-        if opts.transpose {
-            a.matvec_transpose(v, out)
-        } else {
-            a.matvec(v, out)
-        }
-    };
+    // CG is only applicable to symmetric matrices (the pressure system is
+    // SPD up to its constant nullspace), and for symmetric A the adjoint
+    // system Aᵀ x = b *is* A x = b. `opts.transpose` therefore dispatches to
+    // the same row-partitioned gather matvec as the forward solve instead of
+    // the slow scatter-style `matvec_transpose` — algebraically identical,
+    // and the gather kernel is both cache-friendlier and parallel.
+    let apply = |v: &[f64], out: &mut [f64]| crate::par::matvec(a, v, out);
 
     let mut b = b.to_vec();
     if project_nullspace {

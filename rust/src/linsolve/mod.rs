@@ -35,19 +35,21 @@ impl Default for SolveOpts {
     }
 }
 
+// BLAS-1 primitives route through the worker pool (`par`); below the
+// per-thread work threshold they take the serial path, keeping small
+// systems bit-identical with earlier serial-only builds.
+
 pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    crate::par::dot(a, b)
 }
 
 pub(crate) fn norm2(a: &[f64]) -> f64 {
-    dot(a, a).sqrt()
+    crate::par::norm2(a)
 }
 
 /// y += alpha * x
 pub(crate) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    crate::par::axpy(alpha, x, y);
 }
 
 #[cfg(test)]

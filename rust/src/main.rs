@@ -32,6 +32,7 @@ fn main() {
                 );
             }
         }
+        #[cfg(feature = "pjrt")]
         Some("artifacts") => {
             let dir = args.get_or("dir", "artifacts");
             match pict::runtime::ArtifactSet::load(&dir) {
@@ -49,6 +50,41 @@ fn main() {
                 }
                 Err(e) => eprintln!("failed to load artifacts: {e}"),
             }
+        }
+        #[cfg(not(feature = "pjrt"))]
+        Some("artifacts") => {
+            eprintln!("the PJRT runtime is disabled; rebuild with `--features pjrt`");
+        }
+        Some("batch") => {
+            use pict::coordinator::scenario::{builtin_scenarios, BatchRunner};
+            use pict::util::bench::print_table;
+            let steps = args.usize_or("steps", 10);
+            let scenarios = builtin_scenarios();
+            println!(
+                "advancing {} scenarios x {steps} steps on {} threads...",
+                scenarios.len(),
+                pict::par::num_threads()
+            );
+            let results = BatchRunner::new(steps).run(&scenarios);
+            let rows: Vec<Vec<String>> = results
+                .iter()
+                .map(|r| {
+                    vec![
+                        r.label.clone(),
+                        format!("{}", r.state.step),
+                        format!("{:.3}", r.state.time),
+                        format!("{}", r.adv_iters),
+                        format!("{}", r.p_iters),
+                        format!("{:.2e}", r.max_divergence),
+                        format!("{:.2}s", r.wall_s),
+                    ]
+                })
+                .collect();
+            print_table(
+                "batch run",
+                &["scenario", "steps", "t", "adv iters", "p iters", "max div", "wall"],
+                &rows,
+            );
         }
         Some("cavity") => {
             use pict::coordinator::references::GHIA_RE100_U;
@@ -76,7 +112,9 @@ fn main() {
             println!("commands:");
             println!("  gradpaths [--n 10] [--iters 40] [--lr 0.08]   gradient-path ablation (E4)");
             println!("  cavity [--n 32] [--re 100] [--steps 1200]     lid-driven cavity vs Ghia");
-            println!("  artifacts [--dir artifacts]                   list AOT artifacts");
+            println!("  batch [--steps 10]                            run all registered scenarios in parallel");
+            println!("  artifacts [--dir artifacts]                   list AOT artifacts (needs --features pjrt)");
+            println!("env: PICT_THREADS=<n> caps the worker pool (default: all cores)");
             println!("examples: cargo run --release --example quickstart | train_sgs_tcf | ...");
             println!("benches:  cargo bench  (one per paper table/figure — see DESIGN.md)");
         }

@@ -1,0 +1,489 @@
+//! Parallel execution substrate: a `std::thread::scope`-based worker pool
+//! with row-partitioned sparse kernels and chunked BLAS-1 primitives.
+//!
+//! The build is fully offline (no rayon — see `util`'s vendoring note), so
+//! parallelism is built from scoped threads: every parallel call spawns its
+//! workers, distributes contiguous chunks, and joins before returning. Work
+//! below the per-thread minimum stays on the serial path, so small systems
+//! (most unit tests) are bit-identical with and without the pool.
+//!
+//! Thread count: `PICT_THREADS=<n>` overrides; the default is
+//! `std::thread::available_parallelism()`. `PICT_THREADS=1` (or `0`)
+//! disables the pool entirely.
+//!
+//! Determinism contract:
+//! - [`matvec`] partitions *rows*; per-row accumulation order is identical
+//!   to [`Csr::matvec`], so results are bit-for-bit equal to serial at any
+//!   thread count.
+//! - [`matvec_transpose`], [`dot`] and [`norm2`] combine per-chunk partials
+//!   in chunk order: deterministic for a fixed thread count, but the
+//!   grouping differs from the serial left-to-right sum, so results may
+//!   differ from serial in the last ulps.
+//! - [`axpy`] is elementwise and bit-for-bit equal to serial.
+//!
+//! Nested parallelism is suppressed: code running inside [`with_serial`]
+//! (e.g. each scenario advanced by
+//! [`BatchRunner`](crate::coordinator::scenario::BatchRunner), which already
+//! owns one thread per scenario) keeps every inner kernel on the serial
+//! path instead of oversubscribing the machine.
+
+use crate::sparse::Csr;
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::OnceLock;
+
+/// Minimum matrix nonzeros per worker before a sparse kernel goes parallel.
+pub const MIN_NNZ_PER_THREAD: usize = 4096;
+/// Minimum vector elements per worker before a BLAS-1 kernel goes parallel.
+pub const MIN_VEC_PER_THREAD: usize = 32768;
+
+/// Pool width: `PICT_THREADS` if set (≥ 1), else the machine's available
+/// parallelism. Read once and cached for the process lifetime.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("PICT_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            // 0 reads as "disable the pool", same as 1 — not "all cores"
+            .map(|n| n.max(1))
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+thread_local! {
+    static SERIAL_SCOPE: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True while the current thread runs inside [`with_serial`].
+pub fn in_serial_scope() -> bool {
+    SERIAL_SCOPE.with(|s| s.get())
+}
+
+/// Run `f` with all `par` kernels forced onto the serial path on this
+/// thread. Used by outer-level parallelism (one thread per scenario) so the
+/// inner solver kernels don't oversubscribe the machine.
+pub fn with_serial<T>(f: impl FnOnce() -> T) -> T {
+    SERIAL_SCOPE.with(|s| {
+        let prev = s.replace(true);
+        let out = f();
+        s.set(prev);
+        out
+    })
+}
+
+/// Effective worker count for `work` units with a per-thread minimum:
+/// 1 (serial) unless at least two workers can be fed.
+fn effective_threads(requested: usize, work: usize, min_per_thread: usize) -> usize {
+    if requested <= 1 || in_serial_scope() {
+        return 1;
+    }
+    let by_work = work / min_per_thread.max(1);
+    if by_work < 2 {
+        1
+    } else {
+        requested.min(by_work)
+    }
+}
+
+/// Split `0..n` into `parts` contiguous, near-equal ranges (fewer if
+/// `n < parts`; empty input yields no ranges).
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Split rows into `parts` contiguous ranges balanced by nonzero count
+/// (each boundary snaps to the row whose prefix-nnz first reaches the
+/// target), so graded stencils still load-balance.
+pub fn partition_rows(row_ptr: &[usize], parts: usize) -> Vec<Range<usize>> {
+    let n = row_ptr.len().saturating_sub(1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let nnz = row_ptr[n];
+    let parts = parts.clamp(1, n);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    for p in 0..parts {
+        if start >= n {
+            break;
+        }
+        let end = if p + 1 == parts {
+            n
+        } else {
+            let target = nnz / parts * (p + 1);
+            let mut e = row_ptr.partition_point(|&v| v < target);
+            if e <= start {
+                e = start + 1;
+            }
+            e.min(n)
+        };
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+/// y = A x, row-partitioned across the default pool. Bit-for-bit equal to
+/// the serial [`Csr::matvec`] at any thread count.
+pub fn matvec(a: &Csr, x: &[f64], y: &mut [f64]) {
+    matvec_with(a, x, y, num_threads());
+}
+
+/// [`matvec`] with an explicit thread-count request (benchmarks, tests).
+/// The request is still capped by the work threshold; use
+/// [`matvec_partitioned`] to force the partitioned path on small systems.
+pub fn matvec_with(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
+    let nt = effective_threads(threads, a.nnz(), MIN_NNZ_PER_THREAD);
+    if nt <= 1 {
+        a.matvec(x, y);
+    } else {
+        matvec_partitioned(a, x, y, nt);
+    }
+}
+
+/// The partitioned gather kernel itself, always run at `parts` chunks (no
+/// serial fallback). Public so tests and benches can pin the chunking.
+pub fn matvec_partitioned(a: &Csr, x: &[f64], y: &mut [f64], parts: usize) {
+    assert_eq!(x.len(), a.n);
+    assert_eq!(y.len(), a.n);
+    let ranges = partition_rows(&a.row_ptr, parts);
+    let (row_ptr, col_idx, vals) = (&a.row_ptr, &a.col_idx, &a.vals);
+    std::thread::scope(|s| {
+        let mut rest: &mut [f64] = y;
+        let mut consumed = 0usize;
+        for r in ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.end - consumed);
+            rest = tail;
+            consumed = r.end;
+            s.spawn(move || {
+                for (row, yi) in r.zip(chunk.iter_mut()) {
+                    let mut acc = 0.0;
+                    for k in row_ptr[row]..row_ptr[row + 1] {
+                        acc += vals[k] * x[col_idx[k] as usize];
+                    }
+                    *yi = acc;
+                }
+            });
+        }
+    });
+}
+
+/// y = Aᵀ x: each worker scatters its row range into a thread-local buffer,
+/// then buffers are combined in worker order (deterministic for a fixed
+/// thread count; may differ from serial in the last ulps).
+pub fn matvec_transpose(a: &Csr, x: &[f64], y: &mut [f64]) {
+    matvec_transpose_with(a, x, y, num_threads());
+}
+
+/// [`matvec_transpose`] with an explicit thread-count request.
+pub fn matvec_transpose_with(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
+    let nt = effective_threads(threads, a.nnz(), MIN_NNZ_PER_THREAD);
+    if nt <= 1 {
+        a.matvec_transpose(x, y);
+        return;
+    }
+    matvec_transpose_partitioned(a, x, y, nt);
+}
+
+/// The partitioned scatter-reduce kernel, always run at `parts` chunks.
+pub fn matvec_transpose_partitioned(a: &Csr, x: &[f64], y: &mut [f64], parts: usize) {
+    assert_eq!(x.len(), a.n);
+    assert_eq!(y.len(), a.n);
+    let ranges = partition_rows(&a.row_ptr, parts);
+    let (row_ptr, col_idx, vals) = (&a.row_ptr, &a.col_idx, &a.vals);
+    let n = a.n;
+    let mut partials: Vec<Vec<f64>> = Vec::with_capacity(ranges.len());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                s.spawn(move || {
+                    let mut local = vec![0.0; n];
+                    for row in r {
+                        let xr = x[row];
+                        if xr == 0.0 {
+                            continue;
+                        }
+                        for k in row_ptr[row]..row_ptr[row + 1] {
+                            local[col_idx[k] as usize] += vals[k] * xr;
+                        }
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            partials.push(h.join().expect("par worker panicked"));
+        }
+    });
+    // Combine in parallel too — a serial combine would cost O(parts·n) on
+    // this crate's low-density stencil matrices, rivaling the scatter
+    // itself. Each worker owns an output chunk and sums the partials in
+    // worker order, so the result is deterministic for a fixed `parts`.
+    let partials = &partials;
+    std::thread::scope(|s| {
+        let mut rest: &mut [f64] = y;
+        let mut consumed = 0usize;
+        for r in partition(n, partials.len()) {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.end - consumed);
+            rest = tail;
+            consumed = r.end;
+            s.spawn(move || {
+                for (off, yi) in chunk.iter_mut().enumerate() {
+                    let i = r.start + off;
+                    let mut acc = 0.0;
+                    for local in partials {
+                        acc += local[i];
+                    }
+                    *yi = acc;
+                }
+            });
+        }
+    });
+}
+
+/// Chunked parallel dot product; partials combined in chunk order.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    dot_with(a, b, num_threads())
+}
+
+/// [`dot`] with an explicit thread-count request.
+pub fn dot_with(a: &[f64], b: &[f64], threads: usize) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let nt = effective_threads(threads, a.len(), MIN_VEC_PER_THREAD);
+    if nt <= 1 {
+        return a.iter().zip(b).map(|(x, y)| x * y).sum();
+    }
+    let ranges = partition(a.len(), nt);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|r| {
+                s.spawn(move || {
+                    a[r.clone()].iter().zip(&b[r]).map(|(x, y)| x * y).sum::<f64>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("par worker panicked")).sum()
+    })
+}
+
+/// Parallel 2-norm (via [`dot`]).
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// y += alpha * x, chunk-partitioned; bit-for-bit equal to serial.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    axpy_with(alpha, x, y, num_threads());
+}
+
+/// [`axpy`] with an explicit thread-count request.
+pub fn axpy_with(alpha: f64, x: &[f64], y: &mut [f64], threads: usize) {
+    assert_eq!(x.len(), y.len());
+    let nt = effective_threads(threads, y.len(), MIN_VEC_PER_THREAD);
+    if nt <= 1 {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+        return;
+    }
+    let ranges = partition(y.len(), nt);
+    std::thread::scope(|s| {
+        let mut rest: &mut [f64] = y;
+        let mut consumed = 0usize;
+        for r in ranges {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.end - consumed);
+            rest = tail;
+            consumed = r.end;
+            s.spawn(move || {
+                for (yi, xi) in chunk.iter_mut().zip(&x[r]) {
+                    *yi += alpha * xi;
+                }
+            });
+        }
+    });
+}
+
+/// Visit every CSR row with mutable access to its value slice,
+/// row-partitioned across the pool: `f(row, row_cols, row_vals)`. Rows map
+/// to disjoint `vals` ranges, so workers write without synchronization.
+/// Used by the FVM assembly hot path.
+pub fn for_each_row<F>(row_ptr: &[usize], col_idx: &[u32], vals: &mut [f64], f: F)
+where
+    F: Fn(usize, &[u32], &mut [f64]) + Sync,
+{
+    let n = row_ptr.len().saturating_sub(1);
+    let nt = effective_threads(num_threads(), vals.len(), MIN_NNZ_PER_THREAD);
+    if nt <= 1 {
+        for row in 0..n {
+            let (lo, hi) = (row_ptr[row], row_ptr[row + 1]);
+            f(row, &col_idx[lo..hi], &mut vals[lo..hi]);
+        }
+        return;
+    }
+    let ranges = partition_rows(row_ptr, nt);
+    std::thread::scope(|s| {
+        let fr = &f;
+        let mut rest: &mut [f64] = vals;
+        let mut consumed = 0usize;
+        for r in ranges {
+            let (chunk, tail) =
+                std::mem::take(&mut rest).split_at_mut(row_ptr[r.end] - consumed);
+            rest = tail;
+            consumed = row_ptr[r.end];
+            s.spawn(move || {
+                let mut chunk = chunk;
+                for row in r {
+                    let len = row_ptr[row + 1] - row_ptr[row];
+                    let (row_vals, tail) = std::mem::take(&mut chunk).split_at_mut(len);
+                    chunk = tail;
+                    fr(row, &col_idx[row_ptr[row]..row_ptr[row + 1]], row_vals);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_csr(n: usize, density: f64, rng: &mut Rng) -> Csr {
+        let mut trip = Vec::new();
+        for r in 0..n {
+            for c in 0..n {
+                if rng.uniform() < density {
+                    trip.push((r, c, rng.normal()));
+                }
+            }
+            trip.push((r, r, 1.0 + rng.uniform()));
+        }
+        Csr::from_triplets(n, &trip)
+    }
+
+    #[test]
+    fn partition_covers_range() {
+        for (n, p) in [(10, 3), (7, 7), (1, 4), (100, 8)] {
+            let ranges = partition(n, p);
+            assert_eq!(ranges.first().unwrap().start, 0);
+            assert_eq!(ranges.last().unwrap().end, n);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+                assert!(!w[1].is_empty());
+            }
+        }
+        assert!(partition(0, 4).is_empty());
+    }
+
+    #[test]
+    fn partition_rows_covers_and_balances() {
+        // 100 rows of 5 nnz each
+        let row_ptr: Vec<usize> = (0..=100).map(|r| 5 * r).collect();
+        let ranges = partition_rows(&row_ptr, 4);
+        assert_eq!(ranges.first().unwrap().start, 0);
+        assert_eq!(ranges.last().unwrap().end, 100);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+        for r in &ranges {
+            assert_eq!(r.len(), 25);
+        }
+    }
+
+    #[test]
+    fn parallel_matvec_bit_for_bit_equals_serial() {
+        let mut rng = Rng::new(0xFA11);
+        let a = random_csr(150, 0.2, &mut rng);
+        let x = rng.normal_vec(150);
+        let mut y_serial = vec![0.0; 150];
+        a.matvec(&x, &mut y_serial);
+        for nt in [2, 3, 4, 8] {
+            let mut y_par = vec![0.0; 150];
+            matvec_partitioned(&a, &x, &mut y_par, nt);
+            assert_eq!(y_serial, y_par, "nt={nt}");
+        }
+    }
+
+    #[test]
+    fn parallel_transpose_matches_explicit_transpose() {
+        let mut rng = Rng::new(0x7A2);
+        let a = random_csr(120, 0.25, &mut rng);
+        let x = rng.normal_vec(120);
+        let at = a.transpose();
+        let mut want = vec![0.0; 120];
+        at.matvec(&x, &mut want);
+        for nt in [2, 5] {
+            let mut got = vec![0.0; 120];
+            matvec_transpose_partitioned(&a, &x, &mut got, nt);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12 * (1.0 + w.abs()), "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot_and_axpy_match_serial_above_threshold() {
+        let mut rng = Rng::new(77);
+        let n = 2 * MIN_VEC_PER_THREAD + 17;
+        let a = rng.normal_vec(n);
+        let b = rng.normal_vec(n);
+        let serial: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let par = dot_with(&a, &b, 4);
+        assert!((par - serial).abs() < 1e-9 * (1.0 + serial.abs()));
+        let mut y1 = b.clone();
+        let mut y2 = b.clone();
+        axpy_with(0.37, &a, &mut y1, 1);
+        axpy_with(0.37, &a, &mut y2, 4);
+        assert_eq!(y1, y2); // elementwise: exactly equal
+    }
+
+    #[test]
+    fn serial_scope_suppresses_parallelism() {
+        assert!(!in_serial_scope());
+        with_serial(|| {
+            assert!(in_serial_scope());
+            assert_eq!(effective_threads(8, usize::MAX / 2, 1), 1);
+        });
+        assert!(!in_serial_scope());
+    }
+
+    #[test]
+    fn for_each_row_writes_disjoint_rows() {
+        let mut rng = Rng::new(3);
+        let a = random_csr(40, 0.3, &mut rng);
+        let mut got = a.clone();
+        got.zero_values();
+        let want_vals = a.vals.clone();
+        let (row_ptr, col_idx) = (a.row_ptr.clone(), a.col_idx.clone());
+        for_each_row(&row_ptr, &col_idx, &mut got.vals, |row, _cols, row_vals| {
+            let lo = row_ptr[row];
+            for (k, v) in row_vals.iter_mut().enumerate() {
+                *v = want_vals[lo + k];
+            }
+        });
+        assert_eq!(got.vals, a.vals);
+    }
+
+    #[test]
+    fn num_threads_is_at_least_one() {
+        assert!(num_threads() >= 1);
+    }
+}

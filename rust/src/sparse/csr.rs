@@ -15,9 +15,22 @@ pub struct Csr {
 
 impl Csr {
     /// Build from triplets (duplicates are summed). O(nnz log nnz).
+    ///
+    /// Validates every index up front: the `unsafe` fast path in
+    /// [`Csr::matvec`] elides bounds checks on the invariant that
+    /// `col_idx < n` and `row_ptr` is monotone with `row_ptr[n] == nnz`,
+    /// so every constructor asserts it. The fields are `pub` for the
+    /// assembly/adjoint hot paths, which rewrite `vals` in place; callers
+    /// must not mutate the symbolic part (`row_ptr`, `col_idx`) — doing so
+    /// voids the invariant the unchecked kernels rely on.
     pub fn from_triplets(n: usize, triplets: &[(usize, usize, f64)]) -> Csr {
+        assert!(n <= u32::MAX as usize, "matrix dim {n} exceeds u32 column index range");
         let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
         for &(r, c, v) in triplets {
+            assert!(
+                r < n && c < n,
+                "triplet ({r},{c}) out of bounds for {n}x{n} matrix"
+            );
             per_row[r].push((c, v));
         }
         let mut row_ptr = Vec::with_capacity(n + 1);
@@ -44,17 +57,20 @@ impl Csr {
         Csr { n, row_ptr, col_idx, vals }
     }
 
-    /// Symbolic-only construction: same structure, zero values.
+    /// Symbolic-only construction: same structure, zero values. Column
+    /// indices are validated against `n` (see [`Csr::from_triplets`]).
     pub fn structure_from_columns(columns: &[Vec<usize>]) -> Csr {
         let n = columns.len();
+        assert!(n <= u32::MAX as usize, "matrix dim {n} exceeds u32 column index range");
         let mut row_ptr = Vec::with_capacity(n + 1);
         let mut col_idx = Vec::new();
         row_ptr.push(0);
-        for cols in columns {
+        for (r, cols) in columns.iter().enumerate() {
             let mut sorted = cols.clone();
             sorted.sort_unstable();
             sorted.dedup();
             for c in sorted {
+                assert!(c < n, "column {c} in row {r} out of bounds for {n}x{n} structure");
                 col_idx.push(c as u32);
             }
             row_ptr.push(col_idx.len());
@@ -99,7 +115,10 @@ impl Csr {
         for r in 0..self.n {
             let mut acc = 0.0;
             // SAFETY: row_ptr is monotone with last == nnz (asserted above)
-            // and col_idx entries are < n by construction.
+            // and col_idx entries are < n — validated by every constructor
+            // (`from_triplets` / `structure_from_columns` assert each index)
+            // and relied on here under the documented contract that callers
+            // rewrite only `vals`, never the symbolic part.
             unsafe {
                 let lo = *self.row_ptr.get_unchecked(r);
                 let hi = *self.row_ptr.get_unchecked(r + 1);
@@ -225,6 +244,24 @@ mod tests {
         assert_eq!(a.find(0, 2), None);
         assert_eq!(a.vals[a.find(0, 1).unwrap()], 7.0);
         assert_eq!(a.vals[a.find(2, 0).unwrap()], -1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn from_triplets_rejects_out_of_range_column() {
+        Csr::from_triplets(3, &[(0, 0, 1.0), (1, 3, 2.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn from_triplets_rejects_out_of_range_row() {
+        Csr::from_triplets(2, &[(2, 0, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn structure_rejects_out_of_range_column() {
+        Csr::structure_from_columns(&[vec![0, 1], vec![5]]);
     }
 
     #[test]
