@@ -1,13 +1,16 @@
-//! Parallel-execution scaling: row-partitioned SpMV vs the serial kernel on
-//! pressure-solve-sized systems (the dominant cost per PISO step), and the
-//! batched scenario runner vs sequential execution. Thread counts are pinned
-//! per measurement via the `*_partitioned` / `with_threads` entry points, so
-//! the comparison is independent of `PICT_THREADS`.
+//! Parallel-execution scaling: the persistent worker pool vs the old
+//! spawn-per-call scoped threads vs serial, on pressure-solve-sized systems
+//! (the dominant cost per PISO step) from 32×32 up, plus the batched
+//! scenario runner vs sequential execution. Chunk counts are pinned per
+//! measurement via the `*_chunks` / `with_threads` entry points, so the
+//! comparison is independent of `PICT_THREADS`. Emits
+//! `reports/BENCH_par_pool.json` (pool vs spawn) and
+//! `reports/par_scaling.json` (everything).
 
 use pict::coordinator::scenario::{cavity_reynolds_sweep, BatchRunner};
 use pict::fvm;
 use pict::mesh::gen;
-use pict::par;
+use pict::par::{spawn, ExecCtx};
 use pict::util::bench::{print_table, write_report, Bench, BenchResult};
 use pict::util::json::Json;
 
@@ -15,7 +18,7 @@ fn pressure_matrix(n: usize) -> pict::sparse::Csr {
     let mesh = gen::periodic_box2d(n, n, 1.0, 1.0);
     let a_inv = vec![1.0; mesh.ncells];
     let mut m = fvm::pressure_structure(&mesh);
-    fvm::assemble_pressure(&mesh, &a_inv, &mut m);
+    fvm::assemble_pressure(&ExecCtx::serial(), &mesh, &a_inv, &mut m);
     m
 }
 
@@ -23,10 +26,12 @@ fn main() {
     let bench = Bench::new(2, 10);
     let mut all: Vec<BenchResult> = Vec::new();
     let mut rows = Vec::new();
+    let mut pool_rows = Vec::new();
     let mut jrows = Vec::new();
+    let ctx = ExecCtx::with_threads(8);
 
-    // --- SpMV scaling: serial vs partitioned at 1/2/4/8 chunks ---
-    for n in [64usize, 128, 256] {
+    // --- SpMV scaling: serial vs spawn-per-call vs persistent pool ---
+    for n in [32usize, 64, 128, 256] {
         let a = pressure_matrix(n);
         let x: Vec<f64> = (0..a.n).map(|i| ((i * 31 % 97) as f64) * 0.01 - 0.5).collect();
         let mut y = vec![0.0; a.n];
@@ -40,50 +45,73 @@ fn main() {
             }
         });
         let mut row = vec![format!("{n}x{n}"), format!("{:.3}ms", r_serial.mean_s * 1e3)];
-        let mut speed4 = 0.0;
+        let mut speed4_pool = 0.0;
         for t in [2usize, 4, 8] {
-            let r_par = bench.run(&format!("matvec par x{t} {n}x{n} (x{reps})"), || {
+            let r_spawn = bench.run(&format!("matvec spawn x{t} {n}x{n} (x{reps})"), || {
                 for _ in 0..reps {
-                    par::matvec_partitioned(&a, &x, &mut y, t);
+                    spawn::matvec_partitioned(&a, &x, &mut y, t);
                     std::hint::black_box(&y);
                 }
             });
-            let speedup = r_serial.mean_s / r_par.mean_s;
+            let r_pool = bench.run(&format!("matvec pool x{t} {n}x{n} (x{reps})"), || {
+                for _ in 0..reps {
+                    ctx.matvec_chunks(&a, &x, &mut y, t);
+                    std::hint::black_box(&y);
+                }
+            });
+            let speedup_pool = r_serial.mean_s / r_pool.mean_s;
+            let pool_vs_spawn = r_spawn.mean_s / r_pool.mean_s;
             if t == 4 {
-                speed4 = speedup;
+                speed4_pool = speedup_pool;
             }
-            row.push(format!("{speedup:.2}x"));
+            row.push(format!("{speedup_pool:.2}x"));
+            pool_rows.push(vec![
+                format!("{n}x{n}"),
+                format!("{t}"),
+                format!("{:.1}us", r_spawn.mean_s / reps as f64 * 1e6),
+                format!("{:.1}us", r_pool.mean_s / reps as f64 * 1e6),
+                format!("{pool_vs_spawn:.2}x"),
+            ]);
             jrows.push(Json::obj(vec![
                 ("n", Json::Num(n as f64)),
                 ("threads", Json::Num(t as f64)),
                 ("serial_s", Json::Num(r_serial.mean_s)),
-                ("par_s", Json::Num(r_par.mean_s)),
-                ("speedup", Json::Num(speedup)),
+                ("spawn_s", Json::Num(r_spawn.mean_s)),
+                ("pool_s", Json::Num(r_pool.mean_s)),
+                ("pool_speedup_vs_serial", Json::Num(speedup_pool)),
+                ("pool_speedup_vs_spawn", Json::Num(pool_vs_spawn)),
             ]));
-            all.push(r_par);
+            all.push(r_spawn);
+            all.push(r_pool);
         }
         all.push(r_serial);
         rows.push(row);
-        // correctness note: the partitioned kernel is bit-for-bit serial
+        // correctness note: the pool kernel is bit-for-bit serial
         let mut y_ref = vec![0.0; a.n];
         a.matvec(&x, &mut y_ref);
-        par::matvec_partitioned(&a, &x, &mut y, 4);
-        assert_eq!(y, y_ref, "partitioned matvec must be bit-for-bit serial");
-        println!("  {n}x{n}: 4-thread speedup {speed4:.2}x (cores: {})", par::num_threads());
+        ctx.matvec_chunks(&a, &x, &mut y, 4);
+        assert_eq!(y, y_ref, "pool matvec must be bit-for-bit serial");
+        println!("  {n}x{n}: pool 4-chunk speedup vs serial {speed4_pool:.2}x");
     }
     print_table(
-        "parallel matvec speedup vs serial (pressure matrix)",
+        "persistent-pool matvec speedup vs serial (pressure matrix)",
         &["system", "serial", "2T", "4T", "8T"],
         &rows,
     );
+    print_table(
+        "persistent pool vs spawn-per-call (per matvec)",
+        &["system", "threads", "spawn", "pool", "pool/spawn"],
+        &pool_rows,
+    );
+    write_report("BENCH_par_pool", &all, vec![("rows", Json::Arr(jrows.clone()))]);
 
-    // --- batch runner: cavity Re sweep, sequential vs pooled ---
+    // --- batch runner: cavity Re sweep, sequential vs one shared pool ---
     let res = [50.0, 100.0, 200.0, 400.0];
     let steps = 30;
     let t0 = std::time::Instant::now();
     let seq = BatchRunner::new(steps).with_threads(1).run(&cavity_reynolds_sweep(24, &res));
     let t_seq = t0.elapsed().as_secs_f64();
-    let nt = par::num_threads().max(2);
+    let nt = pict::par::env_threads().max(2);
     let t1 = std::time::Instant::now();
     let par_results =
         BatchRunner::new(steps).with_threads(nt).run(&cavity_reynolds_sweep(24, &res));
@@ -94,7 +122,7 @@ fn main() {
     }
     println!(
         "\nbatch cavity Re sweep ({} scenarios x {steps} steps): sequential {t_seq:.2}s, \
-         {nt}-thread {t_par:.2}s ({:.2}x)",
+         {nt}-worker shared pool {t_par:.2}s ({:.2}x)",
         res.len(),
         t_seq / t_par.max(1e-9)
     );

@@ -3,7 +3,6 @@
 //! multi-rollout substrate for simulation-coupled training loops.
 
 use pict::coordinator::scenario::{builtin_scenarios, cavity_reynolds_sweep, BatchRunner};
-use pict::par;
 use pict::util::bench::print_table;
 use pict::util::cli::Args;
 
@@ -13,13 +12,14 @@ fn main() {
 
     // 1) the full registry in one call
     let scenarios = builtin_scenarios();
+    let runner = BatchRunner::new(steps);
     println!(
-        "advancing {} registered scenarios x {steps} steps on {} threads...",
+        "advancing {} registered scenarios x {steps} steps on a {}-worker pool...",
         scenarios.len(),
-        par::num_threads()
+        runner.threads()
     );
     let t0 = std::time::Instant::now();
-    let results = BatchRunner::new(steps).run(&scenarios);
+    let results = runner.run(&scenarios);
     let wall = t0.elapsed().as_secs_f64();
     let rows: Vec<Vec<String>> = results
         .iter()

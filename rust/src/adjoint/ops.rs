@@ -279,7 +279,7 @@ mod tests {
         let nu = vec![0.05; mesh.ncells];
         let dt = 0.1;
         let mut c0 = fvm::c_structure(&mesh);
-        fvm::assemble_c(&mesh, &u, &nu, dt, &mut c0);
+        fvm::assemble_c(&crate::par::ExecCtx::serial(), &mesh, &u, &nu, dt, &mut c0);
         // random cotangent on C values
         let w: Vec<f64> = rng.normal_vec(c0.nnz());
         // adjoint
@@ -298,8 +298,8 @@ mod tests {
         um.axpy(-eps, &dir);
         let mut cp = c0.clone();
         let mut cm = c0.clone();
-        fvm::assemble_c(&mesh, &up, &nu, dt, &mut cp);
-        fvm::assemble_c(&mesh, &um, &nu, dt, &mut cm);
+        fvm::assemble_c(&crate::par::ExecCtx::serial(), &mesh, &up, &nu, dt, &mut cp);
+        fvm::assemble_c(&crate::par::ExecCtx::serial(), &mesh, &um, &nu, dt, &mut cm);
         let fd: f64 = cp
             .vals
             .iter()
@@ -325,7 +325,8 @@ mod tests {
         let nu0 = 0.07;
         let dt = 0.1;
         let mut c0 = fvm::c_structure(&mesh);
-        fvm::assemble_c(&mesh, &u, &vec![nu0; mesh.ncells], dt, &mut c0);
+        let ctx = crate::par::ExecCtx::serial();
+        fvm::assemble_c(&ctx, &mesh, &u, &vec![nu0; mesh.ncells], dt, &mut c0);
         let w: Vec<f64> = rng.normal_vec(c0.nnz());
         let mut du = VectorField::zeros(mesh.ncells);
         let mut dnu = 0.0;
@@ -333,8 +334,8 @@ mod tests {
         let eps = 1e-6;
         let mut cp = c0.clone();
         let mut cm = c0.clone();
-        fvm::assemble_c(&mesh, &u, &vec![nu0 + eps; mesh.ncells], dt, &mut cp);
-        fvm::assemble_c(&mesh, &u, &vec![nu0 - eps; mesh.ncells], dt, &mut cm);
+        fvm::assemble_c(&ctx, &mesh, &u, &vec![nu0 + eps; mesh.ncells], dt, &mut cp);
+        fvm::assemble_c(&ctx, &mesh, &u, &vec![nu0 - eps; mesh.ncells], dt, &mut cm);
         let fd: f64 = cp
             .vals
             .iter()
@@ -352,7 +353,7 @@ mod tests {
         let mut rng = Rng::new(11);
         let a_inv: Vec<f64> = (0..mesh.ncells).map(|_| 0.5 + rng.uniform()).collect();
         let mut m0 = fvm::pressure_structure(&mesh);
-        fvm::assemble_pressure(&mesh, &a_inv, &mut m0);
+        fvm::assemble_pressure(&crate::par::ExecCtx::serial(), &mesh, &a_inv, &mut m0);
         let w: Vec<f64> = rng.normal_vec(m0.nnz());
         let mut da = vec![0.0; mesh.ncells];
         assemble_pressure_adjoint(&mesh, &m0, &w, &mut da);
@@ -362,8 +363,8 @@ mod tests {
         let am: Vec<f64> = a_inv.iter().zip(&dir).map(|(a, d)| a - eps * d).collect();
         let mut mp = m0.clone();
         let mut mm = m0.clone();
-        fvm::assemble_pressure(&mesh, &ap, &mut mp);
-        fvm::assemble_pressure(&mesh, &am, &mut mm);
+        fvm::assemble_pressure(&crate::par::ExecCtx::serial(), &mesh, &ap, &mut mp);
+        fvm::assemble_pressure(&crate::par::ExecCtx::serial(), &mesh, &am, &mut mm);
         let fd: f64 = mp
             .vals
             .iter()

@@ -70,6 +70,9 @@ pub fn backward_step(
     paths: GradientPaths,
 ) -> StepGrads {
     let mesh = &solver.mesh;
+    // the adjoint's transposed solves run on the same pool as the forward
+    // step: reuse the solver's context
+    let ctx = &solver.ctx;
     let dim = mesh.dim;
     let n = mesh.ncells;
     let dt = rec.dt;
@@ -120,6 +123,7 @@ pub fn backward_step(
             let precond = Jacobi::new(&m);
             timer::scoped("adj_p_solve", || {
                 cg(
+                    ctx,
                     &m,
                     &dp_r,
                     &mut lambda,
@@ -189,6 +193,7 @@ pub fn backward_step(
             let precond = Jacobi::new(&c);
             timer::scoped("adj_adv_solve", || {
                 bicgstab(
+                    ctx,
                     &c,
                     &du.comp[comp],
                     &mut lambda,

@@ -158,6 +158,7 @@ fn episode(
         // source gradient → CNN (with optional divergence modification)
         let ds = if lambda_div > 0.0 {
             crate::train::div_gradient_modification(
+                &solver.ctx,
                 &solver.mesh,
                 &sources[t],
                 &g.dsource,

@@ -261,6 +261,7 @@ pub fn train_tcf_sgs(cfg: &TcfSgsCfg, target: &StatsTarget) -> TcfSgsResult {
             }
             let ds = if cfg.lambda_div > 0.0 {
                 crate::train::div_gradient_modification(
+                    &solver.ctx,
                     &solver.mesh,
                     &sources[t],
                     &ds,

@@ -8,17 +8,20 @@
 //! plane Poiseuille, 3D turbulent channel, vortex street).
 //!
 //! [`BatchRunner`] advances many independent scenario runs concurrently on
-//! the [`par`](crate::par) worker pool — e.g. a cavity Reynolds sweep in one
-//! call — claiming runs off a shared counter so long and short scenarios
-//! load-balance. Each worker advances its run inside
-//! [`par::with_serial`](crate::par::with_serial), so the inner solver
-//! kernels stay serial instead of oversubscribing the machine; the
-//! per-scenario aggregated [`StepStats`] come back in input order.
+//! one persistent [`par`](crate::par) pool — e.g. a cavity Reynolds sweep in
+//! one call — claiming runs off a shared counter so long and short scenarios
+//! load-balance. Scenario-level tasks and kernel-level chunks share the same
+//! workers: each built solver gets a clone of the runner's
+//! [`ExecCtx`](crate::par::ExecCtx), so its inner SpMV/assembly/precondition
+//! kernels submit nested jobs to the pool instead of being forced serial —
+//! a 3-scenario batch on 16 cores keeps the remaining cores busy with kernel
+//! chunks. Per-scenario results are unchanged by the sharing (each
+//! scenario's kernels see the same context width either way) and come back
+//! in input order.
 
 use crate::mesh::{gen, Mesh, VectorField};
-use crate::par;
+use crate::par::ExecCtx;
 use crate::piso::{PisoConfig, PisoSolver, State, StepStats};
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -318,22 +321,36 @@ pub struct BatchResult {
     pub wall_s: f64,
 }
 
-/// Advances many independent scenario runs concurrently on the worker pool.
+/// Advances many independent scenario runs concurrently on one shared
+/// worker pool: scenario-level tasks and each scenario's inner kernel
+/// chunks draw from the same workers (see module docs).
 pub struct BatchRunner {
     pub steps: usize,
-    pub threads: usize,
+    ctx: ExecCtx,
 }
 
 impl BatchRunner {
-    /// Runner advancing each scenario by `steps` steps on the default pool.
+    /// Runner advancing each scenario by `steps` steps on a pool sized by
+    /// `PICT_THREADS` (read now, not from a process-wide cache).
     pub fn new(steps: usize) -> BatchRunner {
-        BatchRunner { steps, threads: par::num_threads() }
+        BatchRunner { steps, ctx: ExecCtx::from_env() }
     }
 
-    /// Cap the number of concurrent scenario workers.
+    /// Use a pool of exactly `threads` workers.
     pub fn with_threads(mut self, threads: usize) -> BatchRunner {
-        self.threads = threads.max(1);
+        self.ctx = ExecCtx::with_threads(threads);
         self
+    }
+
+    /// Share an existing pool (e.g. with other runners or solvers).
+    pub fn with_ctx(mut self, ctx: ExecCtx) -> BatchRunner {
+        self.ctx = ctx;
+        self
+    }
+
+    /// Width of the pool scenarios (and their kernels) run on.
+    pub fn threads(&self) -> usize {
+        self.ctx.width()
     }
 
     /// Build and advance every scenario; results come back in input order.
@@ -355,56 +372,41 @@ impl BatchRunner {
         let steps = self.steps;
         let results: Vec<Mutex<Option<BatchResult>>> =
             (0..count).map(|_| Mutex::new(None)).collect();
-        let next = AtomicUsize::new(0);
-        let work = || {
-            // the inner solver kernels stay serial: this thread IS the
-            // parallelism (one scenario per worker)
-            par::with_serial(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= count {
-                    break;
-                }
-                let t0 = Instant::now();
-                let mut run = make(i);
-                let mut adv_iters = 0;
-                let mut p_iters = 0;
-                let mut adv_residual = 0.0f64;
-                let mut p_residual = 0.0f64;
-                let mut max_divergence = 0.0f64;
-                let mut last = StepStats::default();
-                for _ in 0..steps {
-                    let st = run.solver.step(&mut run.state, &run.source, None);
-                    adv_iters += st.adv_iters;
-                    p_iters += st.p_iters;
-                    adv_residual = adv_residual.max(st.adv_residual);
-                    p_residual = p_residual.max(st.p_residual);
-                    max_divergence = max_divergence.max(st.max_divergence);
-                    last = st;
-                }
-                *results[i].lock().unwrap() = Some(BatchResult {
-                    label: run.label,
-                    state: run.state,
-                    steps,
-                    adv_iters,
-                    p_iters,
-                    adv_residual,
-                    p_residual,
-                    max_divergence,
-                    last,
-                    wall_s: t0.elapsed().as_secs_f64(),
-                });
-            })
-        };
-        let nt = self.threads.clamp(1, count.max(1));
-        if nt <= 1 {
-            work();
-        } else {
-            std::thread::scope(|s| {
-                for _ in 0..nt {
-                    s.spawn(&work);
-                }
+        // one pool job per scenario; each scenario's solver gets a clone of
+        // the same context, so its inner kernels submit nested jobs to the
+        // very workers that are not busy advancing other scenarios
+        self.ctx.run_tasks(count, |i| {
+            let t0 = Instant::now();
+            let mut run = make(i);
+            run.solver.ctx = self.ctx.clone();
+            let mut adv_iters = 0;
+            let mut p_iters = 0;
+            let mut adv_residual = 0.0f64;
+            let mut p_residual = 0.0f64;
+            let mut max_divergence = 0.0f64;
+            let mut last = StepStats::default();
+            for _ in 0..steps {
+                let st = run.solver.step(&mut run.state, &run.source, None);
+                adv_iters += st.adv_iters;
+                p_iters += st.p_iters;
+                adv_residual = adv_residual.max(st.adv_residual);
+                p_residual = p_residual.max(st.p_residual);
+                max_divergence = max_divergence.max(st.max_divergence);
+                last = st;
+            }
+            *results[i].lock().unwrap() = Some(BatchResult {
+                label: run.label,
+                state: run.state,
+                steps,
+                adv_iters,
+                p_iters,
+                adv_residual,
+                p_residual,
+                max_divergence,
+                last,
+                wall_s: t0.elapsed().as_secs_f64(),
             });
-        }
+        });
         results
             .into_iter()
             .map(|m| m.into_inner().unwrap().expect("batch worker skipped a run"))

@@ -2,6 +2,7 @@
 //! (paper A.9, A.11, A.13). Rows are 1/J_P-scaled; see `fvm` docs.
 
 use crate::mesh::{face_axis, face_sign, Mesh, NeighRef, VectorField};
+use crate::par::ExecCtx;
 use crate::sparse::Csr;
 
 /// Contravariant flux components `U^j = J · T_j · u` of one cell.
@@ -46,18 +47,25 @@ pub fn c_structure(mesh: &Mesh) -> Csr {
 /// `nu` the per-cell kinematic viscosity. `dt = f64::INFINITY` drops the
 /// temporal term (steady operator, used by tests and by the SIMPLE-like
 /// initialization).
-pub fn assemble_c(mesh: &Mesh, u_adv: &VectorField, nu: &[f64], dt: f64, c: &mut Csr) {
+pub fn assemble_c(
+    ctx: &ExecCtx,
+    mesh: &Mesh,
+    u_adv: &VectorField,
+    nu: &[f64],
+    dt: f64,
+    c: &mut Csr,
+) {
     // precompute contravariant fluxes per cell
     let uc: Vec<[f64; 3]> = (0..mesh.ncells).map(|i| contravariant(mesh, u_adv, i)).collect();
     let inv_dt = if dt.is_finite() { 1.0 / dt } else { 0.0 };
 
     // Row `cell` of C depends only on that cell's faces, and CSR rows own
     // disjoint value ranges, so assembly is row-partitioned across the
-    // worker pool. The per-row arithmetic (zero, face order, one final
+    // caller's pool. The per-row arithmetic (zero, face order, one final
     // diagonal add) matches the previous serial loop exactly, keeping the
-    // assembled matrix bit-identical at any thread count.
+    // assembled matrix bit-identical at any context width.
     let Csr { ref row_ptr, ref col_idx, ref mut vals, .. } = *c;
-    crate::par::for_each_row(row_ptr, col_idx, vals, |cell, cols, row_vals| {
+    ctx.for_each_row(row_ptr, col_idx, vals, |cell, cols, row_vals| {
         row_vals.iter_mut().for_each(|v| *v = 0.0);
         let entry = |col: usize| super::row_entry(cols, cell, col);
         let inv_j = 1.0 / mesh.jac[cell];
@@ -147,7 +155,7 @@ mod tests {
         let u = VectorField::zeros(m.ncells);
         let nu = vec![0.1; m.ncells];
         let mut c = c_structure(&m);
-        assemble_c(&m, &u, &nu, 1.0, &mut c);
+        assemble_c(&ExecCtx::serial(), &m, &u, &nu, 1.0, &mut c);
         // wall-adjacent cell has larger diagonal than interior cell
         let wall_cell = m.gid(0, 1, 0, 0);
         let mid_cell = m.gid(0, 1, 1, 0);

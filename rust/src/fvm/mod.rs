@@ -48,7 +48,7 @@ mod tests {
         u.comp[1].iter_mut().for_each(|v| *v = -0.3);
         let nu = vec![0.0; m.ncells];
         let mut c = c_structure(&m);
-        assemble_c(&m, &u, &nu, f64::INFINITY, &mut c);
+        assemble_c(&crate::par::ExecCtx::serial(), &m, &u, &nu, f64::INFINITY, &mut c);
         // apply to constant field: result must vanish (rows sum to zero,
         // dt=inf removes the temporal term)
         let x = vec![1.0; m.ncells];
@@ -74,7 +74,7 @@ mod tests {
             let nu = vec![nu_val; mesh.ncells];
             let u_zero = VectorField::zeros(mesh.ncells);
             let mut c = c_structure(&mesh);
-            assemble_c(&mesh, &u_zero, &nu, f64::INFINITY, &mut c);
+            assemble_c(&crate::par::ExecCtx::serial(), &mesh, &u_zero, &nu, f64::INFINITY, &mut c);
             let x: Vec<f64> = mesh.centers.iter().map(|c| c[0] * c[0] + c[1] * c[1]).collect();
             let mut y = vec![0.0; mesh.ncells];
             c.matvec(&x, &mut y);
@@ -106,7 +106,7 @@ mod tests {
         let nu = vec![nu_val; mesh.ncells];
         let u_zero = VectorField::zeros(mesh.ncells);
         let mut c = c_structure(&mesh);
-        assemble_c(&mesh, &u_zero, &nu, f64::INFINITY, &mut c);
+        assemble_c(&crate::par::ExecCtx::serial(), &mesh, &u_zero, &nu, f64::INFINITY, &mut c);
         let x: Vec<f64> = mesh.centers.iter().map(|c| c[0] * c[0] + c[1] * c[1]).collect();
         let mut y = vec![0.0; mesh.ncells];
         c.matvec(&x, &mut y);
@@ -164,7 +164,7 @@ mod tests {
         let m = gen::periodic_box2d(6, 5, 1.0, 1.0);
         let a_inv = vec![0.5; m.ncells];
         let mut pm = pressure_structure(&m);
-        assemble_pressure(&m, &a_inv, &mut pm);
+        assemble_pressure(&crate::par::ExecCtx::serial(), &m, &a_inv, &mut pm);
         let d = pm.to_dense();
         for r in 0..pm.n {
             let row_sum: f64 = d[r].iter().sum();

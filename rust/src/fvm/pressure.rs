@@ -3,6 +3,7 @@
 //! pressure gradient, and h itself.
 
 use crate::mesh::{face_axis, face_sign, Mesh, NeighRef, VectorField};
+use crate::par::ExecCtx;
 use crate::sparse::Csr;
 
 /// Symbolic structure of the pressure matrix (same stencil as C).
@@ -14,11 +15,11 @@ pub fn pressure_structure(mesh: &Mesh) -> Csr {
 /// Boundary faces (velocity Dirichlet/Neumann ⇒ pressure 0-Neumann) carry no
 /// entries. M is symmetric positive semi-definite with the constant
 /// nullspace on all-periodic domains.
-pub fn assemble_pressure(mesh: &Mesh, a_inv: &[f64], m: &mut Csr) {
-    // Row-partitioned across the worker pool (same disjoint-rows argument
+pub fn assemble_pressure(ctx: &ExecCtx, mesh: &Mesh, a_inv: &[f64], m: &mut Csr) {
+    // Row-partitioned across the caller's pool (same disjoint-rows argument
     // as `assemble_c`); per-row arithmetic matches the serial loop exactly.
     let Csr { ref row_ptr, ref col_idx, ref mut vals, .. } = *m;
-    crate::par::for_each_row(row_ptr, col_idx, vals, |cell, cols, row_vals| {
+    ctx.for_each_row(row_ptr, col_idx, vals, |cell, cols, row_vals| {
         row_vals.iter_mut().for_each(|v| *v = 0.0);
         let entry = |col: usize| super::row_entry(cols, cell, col);
         let mut diag = 0.0;
@@ -189,11 +190,12 @@ mod tests {
         }
         let a_inv = vec![1.0; m.ncells];
         let mut pm = pressure_structure(&m);
-        assemble_pressure(&m, &a_inv, &mut pm);
+        assemble_pressure(&ExecCtx::serial(), &m, &a_inv, &mut pm);
         let div0 = divergence_h(&m, &u, None);
         let rhs: Vec<f64> = div0.iter().map(|v| -v).collect();
         let mut p = vec![0.0; m.ncells];
-        let st = cg(&pm, &rhs, &mut p, &Jacobi::new(&pm), true, SolveOpts::default());
+        let ctx = ExecCtx::serial();
+        let st = cg(&ctx, &pm, &rhs, &mut p, &Jacobi::new(&pm), true, SolveOpts::default());
         assert!(st.converged);
         let g = pressure_gradient(&m, &p);
         let mut u2 = u.clone();

@@ -3,12 +3,15 @@
 //! strongly graded meshes).
 
 use super::precond::Preconditioner;
-use super::{axpy, dot, norm2, SolveOpts, SolveStats};
+use super::{SolveOpts, SolveStats};
+use crate::par::ExecCtx;
 use crate::sparse::Csr;
 
 /// Solve A x = b (or Aᵀ x = b) with right-preconditioned BiCGStab.
-/// `x` holds the initial guess on entry and the solution on exit.
+/// `x` holds the initial guess on entry and the solution on exit. Every
+/// kernel (SpMV, BLAS-1, preconditioner apply) runs pool-resident on `ctx`.
 pub fn bicgstab(
+    ctx: &ExecCtx,
     a: &Csr,
     b: &[f64],
     x: &mut [f64],
@@ -20,11 +23,14 @@ pub fn bicgstab(
     // (bit-for-bit equal to serial), scatter-reduce for Aᵀ x.
     let apply = |v: &[f64], out: &mut [f64]| {
         if opts.transpose {
-            crate::par::matvec_transpose(a, v, out)
+            ctx.matvec_transpose(a, v, out)
         } else {
-            crate::par::matvec(a, v, out)
+            ctx.matvec(a, v, out)
         }
     };
+    let dot = |a: &[f64], b: &[f64]| ctx.dot(a, b);
+    let norm2 = |a: &[f64]| ctx.norm2(a);
+    let axpy = |alpha: f64, x: &[f64], y: &mut [f64]| ctx.axpy(alpha, x, y);
 
     let mut r = vec![0.0; n];
     apply(x, &mut r);
@@ -57,7 +63,7 @@ pub fn bicgstab(
         for i in 0..n {
             p[i] = r[i] + beta * (p[i] - omega * v[i]);
         }
-        precond.apply(&p, &mut phat);
+        precond.apply(ctx, &p, &mut phat);
         apply(&phat, &mut v);
         let r0v = dot(&r0, &v);
         if r0v.abs() < 1e-300 {
@@ -71,7 +77,7 @@ pub fn bicgstab(
             axpy(alpha, &phat, x);
             return SolveStats { iterations: it, residual: res, converged: true };
         }
-        precond.apply(&r, &mut shat);
+        precond.apply(ctx, &r, &mut shat);
         apply(&shat, &mut t);
         let tt = dot(&t, &t);
         if tt.abs() < 1e-300 {
@@ -108,7 +114,7 @@ mod tests {
         let mut b = vec![0.0; 60];
         a.matvec(&xs, &mut b);
         let mut x = vec![0.0; 60];
-        let st = bicgstab(&a, &b, &mut x, &Identity, SolveOpts::default());
+        let st = bicgstab(&ExecCtx::serial(), &a, &b, &mut x, &Identity, SolveOpts::default());
         assert!(st.converged);
         for (u, v) in x.iter().zip(&xs) {
             assert!((u - v).abs() < 1e-6, "{u} vs {v}");
@@ -125,6 +131,7 @@ mod tests {
         at.matvec(&xs, &mut b);
         let mut x = vec![0.0; 40];
         let st = bicgstab(
+            &ExecCtx::serial(),
             &a,
             &b,
             &mut x,
@@ -156,8 +163,9 @@ mod tests {
         let b: Vec<f64> = (0..n).map(|i| ((i * 7) % 11) as f64 - 5.0).collect();
         let mut x1 = vec![0.0; n];
         let mut x2 = vec![0.0; n];
-        let st_j = bicgstab(&a, &b, &mut x1, &Jacobi::new(&a), SolveOpts::default());
-        let st_ilu = bicgstab(&a, &b, &mut x2, &Ilu0::new(&a), SolveOpts::default());
+        let ctx = ExecCtx::serial();
+        let st_j = bicgstab(&ctx, &a, &b, &mut x1, &Jacobi::new(&a), SolveOpts::default());
+        let st_ilu = bicgstab(&ctx, &a, &b, &mut x2, &Ilu0::new(&a), SolveOpts::default());
         assert!(st_ilu.converged);
         assert!(
             st_ilu.iterations <= st_j.iterations,
@@ -177,12 +185,13 @@ mod tests {
             let mut b = vec![0.0; n];
             a.matvec(&xs, &mut b);
             let mut x = vec![0.0; n];
-            let st = bicgstab(&a, &b, &mut x, &Jacobi::new(&a), SolveOpts::default());
+            let ctx = ExecCtx::serial();
+            let st = bicgstab(&ctx, &a, &b, &mut x, &Jacobi::new(&a), SolveOpts::default());
             if !st.converged {
                 return Err(format!("n={n} res={}", st.residual));
             }
             let res = a.residual_norm(&x, &b);
-            if res > 1e-6 * (1.0 + super::norm2(&b)) {
+            if res > 1e-6 * (1.0 + b.iter().map(|v| v * v).sum::<f64>().sqrt()) {
                 return Err(format!("residual {res}"));
             }
             Ok(())

@@ -6,7 +6,8 @@
 //! deflation of the constant vector).
 
 use super::precond::Preconditioner;
-use super::{axpy, dot, norm2, SolveOpts, SolveStats};
+use super::{SolveOpts, SolveStats};
+use crate::par::ExecCtx;
 use crate::sparse::Csr;
 
 fn remove_mean(v: &mut [f64]) {
@@ -15,10 +16,13 @@ fn remove_mean(v: &mut [f64]) {
 }
 
 /// Solve A x = b with preconditioned CG; `x` holds the initial guess on
-/// entry and the solution on exit. `opts.transpose` (the adjoint solve
-/// Aᵀ x = b) is accepted and solved with the same forward kernel: CG
-/// requires symmetric A, so Aᵀ = A and the two systems coincide.
+/// entry and the solution on exit. Every kernel (SpMV, BLAS-1,
+/// preconditioner apply) runs pool-resident on `ctx`. `opts.transpose`
+/// (the adjoint solve Aᵀ x = b) is accepted and solved with the same
+/// forward kernel: CG requires symmetric A, so Aᵀ = A and the two systems
+/// coincide.
 pub fn cg(
+    ctx: &ExecCtx,
     a: &Csr,
     b: &[f64],
     x: &mut [f64],
@@ -33,7 +37,10 @@ pub fn cg(
     // the same row-partitioned gather matvec as the forward solve instead of
     // the slow scatter-style `matvec_transpose` — algebraically identical,
     // and the gather kernel is both cache-friendlier and parallel.
-    let apply = |v: &[f64], out: &mut [f64]| crate::par::matvec(a, v, out);
+    let apply = |v: &[f64], out: &mut [f64]| ctx.matvec(a, v, out);
+    let dot = |a: &[f64], b: &[f64]| ctx.dot(a, b);
+    let norm2 = |a: &[f64]| ctx.norm2(a);
+    let axpy = |alpha: f64, x: &[f64], y: &mut [f64]| ctx.axpy(alpha, x, y);
 
     let mut b = b.to_vec();
     if project_nullspace {
@@ -52,7 +59,7 @@ pub fn cg(
 
     let bnorm = norm2(&b).max(1e-300);
     let mut z = vec![0.0; n];
-    precond.apply(&r, &mut z);
+    precond.apply(ctx, &r, &mut z);
     let mut p = z.clone();
     let mut rz = dot(&r, &z);
     let mut ap = vec![0.0; n];
@@ -81,7 +88,7 @@ pub fn cg(
             }
             return SolveStats { iterations: it, residual: res, converged: true };
         }
-        precond.apply(&r, &mut z);
+        precond.apply(ctx, &r, &mut z);
         let rz_new = dot(&r, &z);
         let beta = rz_new / rz;
         rz = rz_new;
@@ -107,7 +114,7 @@ mod tests {
         let mut b = vec![0.0; 50];
         a.matvec(&xs, &mut b);
         let mut x = vec![0.0; 50];
-        let st = cg(&a, &b, &mut x, &Identity, false, SolveOpts::default());
+        let st = cg(&ExecCtx::serial(), &a, &b, &mut x, &Identity, false, SolveOpts::default());
         assert!(st.converged, "residual {}", st.residual);
         for (xi, xsi) in x.iter().zip(&xs) {
             assert!((xi - xsi).abs() < 1e-7);
@@ -131,8 +138,9 @@ mod tests {
         let b: Vec<f64> = (0..n).map(|i| (i as f64).cos()).collect();
         let mut x1 = vec![0.0; n];
         let mut x2 = vec![0.0; n];
-        let st_id = cg(&a, &b, &mut x1, &Identity, false, SolveOpts::default());
-        let st_j = cg(&a, &b, &mut x2, &Jacobi::new(&a), false, SolveOpts::default());
+        let ctx = ExecCtx::serial();
+        let st_id = cg(&ctx, &a, &b, &mut x1, &Identity, false, SolveOpts::default());
+        let st_j = cg(&ctx, &a, &b, &mut x2, &Jacobi::new(&a), false, SolveOpts::default());
         assert!(st_j.converged);
         assert!(
             st_j.iterations < st_id.iterations,
@@ -160,7 +168,7 @@ mod tests {
         let mean = b.iter().sum::<f64>() / n as f64;
         b.iter_mut().for_each(|v| *v -= mean);
         let mut x = vec![0.0; n];
-        let st = cg(&a, &b, &mut x, &Identity, true, SolveOpts::default());
+        let st = cg(&ExecCtx::serial(), &a, &b, &mut x, &Identity, true, SolveOpts::default());
         assert!(st.converged, "residual {}", st.residual);
         assert!(a.residual_norm(&x, &b) < 1e-8);
         // solution is mean-free
@@ -174,8 +182,9 @@ mod tests {
         let b: Vec<f64> = (0..20).map(|i| i as f64).collect();
         let mut x1 = vec![0.0; 20];
         let mut x2 = vec![0.0; 20];
-        cg(&a, &b, &mut x1, &Identity, false, SolveOpts::default());
+        cg(&ExecCtx::serial(), &a, &b, &mut x1, &Identity, false, SolveOpts::default());
         cg(
+            &ExecCtx::serial(),
             &a,
             &b,
             &mut x2,
@@ -216,7 +225,7 @@ mod tests {
             let a = crate::sparse::Csr::from_triplets(n, &trip);
             let b = rng.normal_vec(n);
             let mut x = vec![0.0; n];
-            let st = cg(&a, &b, &mut x, &Identity, false, SolveOpts::default());
+            let st = cg(&ExecCtx::serial(), &a, &b, &mut x, &Identity, false, SolveOpts::default());
             if !st.converged {
                 return Err(format!("no convergence, res={}", st.residual));
             }

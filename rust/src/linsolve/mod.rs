@@ -1,8 +1,9 @@
 //! Linear solver substrate: the paper solves the advection–diffusion system
 //! with BiCGStab (+ optional ILU(0) preconditioning) and the pressure system
 //! with CG, both via cuBLAS/cuSparse; here they are implemented from scratch
-//! over [`Csr`](crate::sparse::Csr). The same solvers run the transposed systems for the OtD
-//! adjoint (`Aᵀ ∂b = ∂x`).
+//! over [`Csr`](crate::sparse::Csr), pool-resident on an explicit
+//! [`ExecCtx`](crate::par::ExecCtx). The same solvers run the transposed
+//! systems for the OtD adjoint (`Aᵀ ∂b = ∂x`).
 
 pub mod bicgstab;
 pub mod cg;
@@ -35,22 +36,12 @@ impl Default for SolveOpts {
     }
 }
 
-// BLAS-1 primitives route through the worker pool (`par`); below the
-// per-thread work threshold they take the serial path, keeping small
+// BLAS-1 primitives and SpMV come from the caller's
+// [`ExecCtx`](crate::par::ExecCtx): both solvers take the context
+// explicitly, so the Krylov loop, its preconditioner applies, and every
+// reduction run pool-resident on the same persistent workers. Below the
+// per-chunk work thresholds the kernels take the serial path, keeping small
 // systems bit-identical with earlier serial-only builds.
-
-pub(crate) fn dot(a: &[f64], b: &[f64]) -> f64 {
-    crate::par::dot(a, b)
-}
-
-pub(crate) fn norm2(a: &[f64]) -> f64 {
-    crate::par::norm2(a)
-}
-
-/// y += alpha * x
-pub(crate) fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    crate::par::axpy(alpha, x, y);
-}
 
 #[cfg(test)]
 pub(crate) mod testmat {

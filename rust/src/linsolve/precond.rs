@@ -1,19 +1,31 @@
 //! Preconditioners: identity, Jacobi (diagonal), and ILU(0) — incomplete LU
 //! with zero fill-in on the CSR sparsity pattern, matching the paper's
 //! cuSparse-based ILU preconditioning for BiCGStab (Appendix A.6).
+//!
+//! All applies are pool-resident: they take the caller's
+//! [`ExecCtx`](crate::par::ExecCtx) so preconditioning runs on the same
+//! persistent workers as the surrounding Krylov iteration. Jacobi is
+//! elementwise (chunk-partitioned, bit-for-bit serial); the ILU(0)
+//! triangular solves are parallelized by *level scheduling*: at
+//! factorization time the rows of L (and of U) are grouped into dependency
+//! levels, and the apply sweeps level by level with a pool barrier between
+//! levels. Rows within a level are independent, and each row accumulates
+//! its own entries in the same order as the serial solve, so the
+//! level-scheduled apply is bit-for-bit equal to the serial one.
 
+use crate::par::{DisjointMut, ExecCtx, MIN_LEVEL_ROWS_PER_THREAD, MIN_VEC_PER_THREAD};
 use crate::sparse::Csr;
 
 pub trait Preconditioner {
-    /// z = M⁻¹ r
-    fn apply(&self, r: &[f64], z: &mut [f64]);
+    /// z = M⁻¹ r, running on `ctx`'s pool.
+    fn apply(&self, ctx: &ExecCtx, r: &[f64], z: &mut [f64]);
 }
 
 /// No-op preconditioner.
 pub struct Identity;
 
 impl Preconditioner for Identity {
-    fn apply(&self, r: &[f64], z: &mut [f64]) {
+    fn apply(&self, _ctx: &ExecCtx, r: &[f64], z: &mut [f64]) {
         z.copy_from_slice(r);
     }
 }
@@ -36,16 +48,91 @@ impl Jacobi {
 }
 
 impl Preconditioner for Jacobi {
-    fn apply(&self, r: &[f64], z: &mut [f64]) {
-        for i in 0..r.len() {
-            z[i] = r[i] * self.inv_diag[i];
+    fn apply(&self, ctx: &ExecCtx, r: &[f64], z: &mut [f64]) {
+        assert_eq!(r.len(), self.inv_diag.len());
+        assert_eq!(z.len(), self.inv_diag.len());
+        let inv_diag = &self.inv_diag;
+        let zs = DisjointMut::new(z);
+        ctx.run_chunks(r.len(), MIN_VEC_PER_THREAD, |_, range| {
+            // SAFETY: chunk ranges are disjoint
+            let chunk = unsafe { zs.range(range.clone()) };
+            for (off, zi) in chunk.iter_mut().enumerate() {
+                let i = range.start + off;
+                *zi = r[i] * inv_diag[i];
+            }
+        });
+    }
+}
+
+/// Dependency levels of one triangular factor: rows grouped so every row in
+/// level `l` depends only on rows in levels `< l`. `rows[level_ptr[l]..
+/// level_ptr[l+1]]` lists level `l`'s rows in ascending order.
+struct LevelSchedule {
+    rows: Vec<u32>,
+    level_ptr: Vec<usize>,
+    /// Rows in the widest level — this factor's available parallelism
+    /// (cached: the apply fast-path check runs per solve).
+    max_rows: usize,
+}
+
+impl LevelSchedule {
+    /// Build the schedule from a per-row dependency closure: `deps(i)`
+    /// yields the entry range of row `i` that references other rows of this
+    /// factor, and `order` iterates rows in an order where dependencies
+    /// precede dependents (ascending for L, descending for U).
+    fn build(
+        n: usize,
+        order: impl Iterator<Item = usize>,
+        deps: impl Fn(usize) -> std::ops::Range<usize>,
+        col_idx: &[u32],
+    ) -> LevelSchedule {
+        let mut level = vec![0u32; n];
+        let mut n_levels = 0usize;
+        for i in order {
+            let mut l = 0u32;
+            for k in deps(i) {
+                l = l.max(level[col_idx[k] as usize] + 1);
+            }
+            level[i] = l;
+            n_levels = n_levels.max(l as usize + 1);
         }
+        if n == 0 {
+            return LevelSchedule { rows: Vec::new(), level_ptr: vec![0], max_rows: 0 };
+        }
+        // counting sort rows by level, ascending row order within a level
+        let mut level_ptr = vec![0usize; n_levels + 1];
+        for &l in &level {
+            level_ptr[l as usize + 1] += 1;
+        }
+        for l in 0..n_levels {
+            level_ptr[l + 1] += level_ptr[l];
+        }
+        let mut cursor = level_ptr.clone();
+        let mut rows = vec![0u32; n];
+        for i in 0..n {
+            let l = level[i] as usize;
+            rows[cursor[l]] = i as u32;
+            cursor[l] += 1;
+        }
+        let max_rows =
+            level_ptr.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0);
+        LevelSchedule { rows, level_ptr, max_rows }
+    }
+
+    fn n_levels(&self) -> usize {
+        self.level_ptr.len() - 1
+    }
+
+    fn level(&self, l: usize) -> &[u32] {
+        &self.rows[self.level_ptr[l]..self.level_ptr[l + 1]]
     }
 }
 
 /// ILU(0): L and U share A's sparsity pattern; factorization by the standard
 /// IKJ variant restricted to existing entries. Rows must be sorted by column
-/// (guaranteed by [`Csr`] construction).
+/// (guaranteed by [`Csr`] construction). The triangular solves of `apply`
+/// are level-scheduled (see module docs): level sets are computed once here
+/// at factorization time.
 pub struct Ilu0 {
     n: usize,
     row_ptr: Vec<usize>,
@@ -54,6 +141,8 @@ pub struct Ilu0 {
     /// diagonal + upper = U
     lu: Vec<f64>,
     diag_ptr: Vec<usize>,
+    l_sched: LevelSchedule,
+    u_sched: LevelSchedule,
 }
 
 impl Ilu0 {
@@ -96,30 +185,102 @@ impl Ilu0 {
                 }
             }
         }
-        Ilu0 { n, row_ptr, col_idx, lu, diag_ptr }
+        // level sets: L rows depend on their strictly-lower entries, U rows
+        // on their strictly-upper entries
+        let l_sched =
+            LevelSchedule::build(n, 0..n, |i| row_ptr[i]..diag_ptr[i], &col_idx);
+        let u_sched = LevelSchedule::build(
+            n,
+            (0..n).rev(),
+            |i| diag_ptr[i] + 1..row_ptr[i + 1],
+            &col_idx,
+        );
+        Ilu0 { n, row_ptr, col_idx, lu, diag_ptr, l_sched, u_sched }
+    }
+
+    /// Longest dependency chains of the two factors (diagnostic: parallel
+    /// speedup is bounded by rows / levels).
+    pub fn level_counts(&self) -> (usize, usize) {
+        (self.l_sched.n_levels(), self.u_sched.n_levels())
+    }
+
+    /// The level-scheduled apply with an explicit per-chunk row minimum
+    /// (`apply` uses [`MIN_LEVEL_ROWS_PER_THREAD`]; tests and benches pass
+    /// smaller values to force the parallel path on small systems).
+    pub fn apply_min_rows(&self, ctx: &ExecCtx, r: &[f64], z: &mut [f64], min_rows: usize) {
+        assert_eq!(r.len(), self.n);
+        assert_eq!(z.len(), self.n);
+        let (row_ptr, col_idx, lu, diag_ptr) =
+            (&self.row_ptr, &self.col_idx, &self.lu, &self.diag_ptr);
+        // Each factor falls back independently to its tight serial sweep
+        // when the context is serial or its own widest level cannot feed
+        // two chunks (chain-structured banded factors degenerate to one row
+        // per level). Per-row arithmetic is identical on both paths, so
+        // results are bit-for-bit equal either way (see module docs).
+        let width = ctx.width();
+        // forward solve L y = r (unit diagonal), y stored in z
+        if width <= 1 || self.l_sched.max_rows < 2 * min_rows {
+            for i in 0..self.n {
+                let mut acc = r[i];
+                for k in row_ptr[i]..diag_ptr[i] {
+                    acc -= lu[k] * z[col_idx[k] as usize];
+                }
+                z[i] = acc;
+            }
+        } else {
+            let zs = DisjointMut::new(z);
+            for l in 0..self.l_sched.n_levels() {
+                let rows = self.l_sched.level(l);
+                ctx.run_chunks(rows.len(), min_rows, |_, range| {
+                    for &i in &rows[range] {
+                        let i = i as usize;
+                        let mut acc = r[i];
+                        for k in row_ptr[i]..diag_ptr[i] {
+                            // SAFETY: reads are of rows in earlier levels,
+                            // already finalized; no task in this level
+                            // writes them
+                            acc -= lu[k] * unsafe { zs.get(col_idx[k] as usize) };
+                        }
+                        // SAFETY: each row is written by exactly one task
+                        unsafe { zs.set(i, acc) };
+                    }
+                });
+            }
+        }
+        // backward solve U z = y
+        if width <= 1 || self.u_sched.max_rows < 2 * min_rows {
+            for i in (0..self.n).rev() {
+                let mut acc = z[i];
+                for k in (diag_ptr[i] + 1)..row_ptr[i + 1] {
+                    acc -= lu[k] * z[col_idx[k] as usize];
+                }
+                let d = lu[diag_ptr[i]];
+                z[i] = if d.abs() > 1e-300 { acc / d } else { acc };
+            }
+        } else {
+            let zs = DisjointMut::new(z);
+            for l in 0..self.u_sched.n_levels() {
+                let rows = self.u_sched.level(l);
+                ctx.run_chunks(rows.len(), min_rows, |_, range| {
+                    for &i in &rows[range] {
+                        let i = i as usize;
+                        // SAFETY: same disjointness argument as the L sweep
+                        let mut acc = unsafe { zs.get(i) };
+                        for k in (diag_ptr[i] + 1)..row_ptr[i + 1] {
+                            acc -= lu[k] * unsafe { zs.get(col_idx[k] as usize) };
+                        }
+                        let d = lu[diag_ptr[i]];
+                        unsafe { zs.set(i, if d.abs() > 1e-300 { acc / d } else { acc }) };
+                    }
+                });
+            }
+        }
     }
 }
 
 impl Preconditioner for Ilu0 {
-    fn apply(&self, r: &[f64], z: &mut [f64]) {
-        let n = self.n;
-        // forward solve L y = r (unit diagonal), y stored in z
-        for i in 0..n {
-            let mut acc = r[i];
-            for k in self.row_ptr[i]..self.diag_ptr[i] {
-                acc -= self.lu[k] * z[self.col_idx[k] as usize];
-            }
-            z[i] = acc;
-        }
-        // backward solve U z = y
-        for i in (0..n).rev() {
-            let mut acc = z[i];
-            for k in (self.diag_ptr[i] + 1)..self.row_ptr[i + 1] {
-                acc -= self.lu[k] * z[self.col_idx[k] as usize];
-            }
-            let d = self.lu[self.diag_ptr[i]];
-            z[i] = if d.abs() > 1e-300 { acc / d } else { acc };
-        }
+    fn apply(&self, ctx: &ExecCtx, r: &[f64], z: &mut [f64]) {
+        self.apply_min_rows(ctx, r, z, MIN_LEVEL_ROWS_PER_THREAD);
     }
 }
 
@@ -132,14 +293,76 @@ mod tests {
         // for tridiagonal matrices ILU(0) == full LU, so M⁻¹ A x == x
         let a = crate::linsolve::testmat::poisson1d(30);
         let ilu = Ilu0::new(&a);
+        let ctx = ExecCtx::serial();
         let x: Vec<f64> = (0..30).map(|i| (i as f64 * 0.7).sin()).collect();
         let mut ax = vec![0.0; 30];
         a.matvec(&x, &mut ax);
         let mut z = vec![0.0; 30];
-        ilu.apply(&ax, &mut z);
+        ilu.apply(&ctx, &ax, &mut z);
         for (zi, xi) in z.iter().zip(&x) {
             assert!((zi - xi).abs() < 1e-10, "{zi} vs {xi}");
         }
+    }
+
+    #[test]
+    fn tridiagonal_levels_are_chains() {
+        // every row of a tridiagonal L depends on the previous one: the
+        // schedule must degenerate to n levels of one row each
+        let a = crate::linsolve::testmat::poisson1d(12);
+        let ilu = Ilu0::new(&a);
+        assert_eq!(ilu.level_counts(), (12, 12));
+    }
+
+    #[test]
+    fn diagonal_matrix_is_one_level() {
+        let a = crate::sparse::Csr::from_triplets(
+            4,
+            &[(0, 0, 2.0), (1, 1, 4.0), (2, 2, 8.0), (3, 3, 16.0)],
+        );
+        let ilu = Ilu0::new(&a);
+        assert_eq!(ilu.level_counts(), (1, 1));
+        let ctx = ExecCtx::with_threads(3);
+        let mut z = vec![0.0; 4];
+        ilu.apply_min_rows(&ctx, &[2.0, 4.0, 8.0, 16.0], &mut z, 1);
+        assert_eq!(z, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn level_scheduled_apply_is_bit_for_bit_serial() {
+        // 2D Poisson-like pattern: levels are the anti-diagonals, so the
+        // parallel path genuinely runs multi-row levels
+        let nx = 8;
+        let n = nx * nx;
+        let mut trip = Vec::new();
+        for j in 0..nx {
+            for i in 0..nx {
+                let c = j * nx + i;
+                trip.push((c, c, 4.0 + 0.1 * (c % 5) as f64));
+                if i > 0 {
+                    trip.push((c, c - 1, -1.0));
+                }
+                if i + 1 < nx {
+                    trip.push((c, c + 1, -1.0));
+                }
+                if j > 0 {
+                    trip.push((c, c - nx, -1.3));
+                }
+                if j + 1 < nx {
+                    trip.push((c, c + nx, -0.7));
+                }
+            }
+        }
+        let a = crate::sparse::Csr::from_triplets(n, &trip);
+        let ilu = Ilu0::new(&a);
+        let (ll, ul) = ilu.level_counts();
+        assert!(ll < n && ul < n, "grid stencil must admit parallel levels");
+        let r: Vec<f64> = (0..n).map(|i| ((i * 31 % 17) as f64) * 0.3 - 2.0).collect();
+        let mut z_serial = vec![0.0; n];
+        ilu.apply(&ExecCtx::serial(), &r, &mut z_serial);
+        let ctx = ExecCtx::with_threads(4);
+        let mut z_par = vec![0.0; n];
+        ilu.apply_min_rows(&ctx, &r, &mut z_par, 1);
+        assert_eq!(z_serial, z_par);
     }
 
     #[test]
@@ -147,14 +370,14 @@ mod tests {
         let a = crate::sparse::Csr::from_triplets(3, &[(0, 0, 2.0), (1, 1, 4.0), (2, 2, 8.0)]);
         let j = Jacobi::new(&a);
         let mut z = vec![0.0; 3];
-        j.apply(&[2.0, 4.0, 8.0], &mut z);
+        j.apply(&ExecCtx::with_threads(2), &[2.0, 4.0, 8.0], &mut z);
         assert_eq!(z, vec![1.0, 1.0, 1.0]);
     }
 
     #[test]
     fn identity_copies() {
         let mut z = vec![0.0; 2];
-        Identity.apply(&[3.0, -1.0], &mut z);
+        Identity.apply(&ExecCtx::serial(), &[3.0, -1.0], &mut z);
         assert_eq!(z, vec![3.0, -1.0]);
     }
 }

@@ -59,13 +59,15 @@ fn main() {
             use pict::coordinator::scenario::{builtin_scenarios, BatchRunner};
             use pict::util::bench::print_table;
             let steps = args.usize_or("steps", 10);
+            let threads = args.usize_or("threads", pict::par::env_threads());
             let scenarios = builtin_scenarios();
+            let runner = BatchRunner::new(steps).with_threads(threads);
             println!(
-                "advancing {} scenarios x {steps} steps on {} threads...",
+                "advancing {} scenarios x {steps} steps on a {}-worker pool...",
                 scenarios.len(),
-                pict::par::num_threads()
+                runner.threads()
             );
-            let results = BatchRunner::new(steps).run(&scenarios);
+            let results = runner.run(&scenarios);
             let rows: Vec<Vec<String>> = results
                 .iter()
                 .map(|r| {
@@ -112,9 +114,9 @@ fn main() {
             println!("commands:");
             println!("  gradpaths [--n 10] [--iters 40] [--lr 0.08]   gradient-path ablation (E4)");
             println!("  cavity [--n 32] [--re 100] [--steps 1200]     lid-driven cavity vs Ghia");
-            println!("  batch [--steps 10]                            run all registered scenarios in parallel");
+            println!("  batch [--steps 10] [--threads N]              run all registered scenarios on one N-worker pool");
             println!("  artifacts [--dir artifacts]                   list AOT artifacts (needs --features pjrt)");
-            println!("env: PICT_THREADS=<n> caps the worker pool (default: all cores)");
+            println!("env: PICT_THREADS=<n> sizes the worker pool (default: all cores; read per context, never cached)");
             println!("examples: cargo run --release --example quickstart | train_sgs_tcf | ...");
             println!("benches:  cargo bench  (one per paper table/figure — see DESIGN.md)");
         }

@@ -1,90 +1,114 @@
-//! Parallel execution substrate: a `std::thread::scope`-based worker pool
-//! with row-partitioned sparse kernels and chunked BLAS-1 primitives.
+//! Parallel execution substrate: a persistent worker [`Pool`] behind an
+//! explicit [`ExecCtx`] handle, with row-partitioned sparse kernels and
+//! chunked BLAS-1 primitives.
 //!
 //! The build is fully offline (no rayon — see `util`'s vendoring note), so
-//! parallelism is built from scoped threads: every parallel call spawns its
-//! workers, distributes contiguous chunks, and joins before returning. Work
-//! below the per-thread minimum stays on the serial path, so small systems
-//! (most unit tests) are bit-identical with and without the pool.
+//! parallelism is built from a parked-thread pool ([`pool`]): workers are
+//! spawned once, sleep on a condvar between jobs, and wake to claim
+//! contiguous-chunk tasks. Waking parked workers costs ~1–2 µs per job
+//! versus ~10–20 µs for the previous spawn-per-call scoped threads, which
+//! makes parallel SpMV profitable down to ~64×64 systems.
 //!
-//! Thread count: `PICT_THREADS=<n>` overrides; the default is
-//! `std::thread::available_parallelism()`. `PICT_THREADS=1` (or `0`)
-//! disables the pool entirely.
+//! There is no process-global pool and no thread-local serial switch: every
+//! layer that runs parallel kernels takes an [`ExecCtx`] — a cheap-clone
+//! handle sharing one pool — threaded explicitly from the owner downwards
+//! (`BatchRunner`/`PisoSolver` → `fvm` assembly → `linsolve` Krylov loops →
+//! preconditioner applies). The pool width is a property of the constructed
+//! context: `PICT_THREADS` is read when [`ExecCtx::from_env`] is called,
+//! never cached process-wide, so tests and embedders can build contexts of
+//! any width at any time.
 //!
-//! Determinism contract:
-//! - [`matvec`] partitions *rows*; per-row accumulation order is identical
-//!   to [`Csr::matvec`], so results are bit-for-bit equal to serial at any
-//!   thread count.
-//! - [`matvec_transpose`], [`dot`] and [`norm2`] combine per-chunk partials
-//!   in chunk order: deterministic for a fixed thread count, but the
-//!   grouping differs from the serial left-to-right sum, so results may
-//!   differ from serial in the last ulps.
-//! - [`axpy`] is elementwise and bit-for-bit equal to serial.
+//! Determinism contract (all relative to the *context width*, never to how
+//! many workers happen to be idle):
+//! - [`ExecCtx::matvec`] partitions *rows*; per-row accumulation order is
+//!   identical to [`Csr::matvec`], so results are bit-for-bit equal to
+//!   serial at any width.
+//! - [`ExecCtx::matvec_transpose`], [`ExecCtx::dot`] and [`ExecCtx::norm2`]
+//!   combine per-chunk partials in chunk order: deterministic for a fixed
+//!   width, but the grouping differs from the serial left-to-right sum, so
+//!   results may differ from serial in the last ulps.
+//! - [`ExecCtx::axpy`] is elementwise and bit-for-bit equal to serial.
+//! - Work below the per-chunk minima stays on the serial path, so small
+//!   systems (most unit tests) are bit-identical at any width.
 //!
-//! Nested parallelism is suppressed: code running inside [`with_serial`]
-//! (e.g. each scenario advanced by
-//! [`BatchRunner`](crate::coordinator::scenario::BatchRunner), which already
-//! owns one thread per scenario) keeps every inner kernel on the serial
-//! path instead of oversubscribing the machine.
+//! Outer-level parallelism (one task per scenario in
+//! [`BatchRunner`](crate::coordinator::scenario::BatchRunner)) and
+//! inner-kernel parallelism share the same pool: scenario tasks run as pool
+//! jobs and their solver kernels submit nested jobs to the same workers, so
+//! a 3-scenario batch on 16 cores keeps the remaining cores busy with
+//! kernel chunks instead of idling them.
+
+pub mod pool;
+
+pub use pool::Pool;
 
 use crate::sparse::Csr;
-use std::cell::Cell;
+use std::marker::PhantomData;
 use std::ops::Range;
-use std::sync::OnceLock;
+use std::sync::Arc;
 
-/// Minimum matrix nonzeros per worker before a sparse kernel goes parallel.
-pub const MIN_NNZ_PER_THREAD: usize = 4096;
-/// Minimum vector elements per worker before a BLAS-1 kernel goes parallel.
+/// Minimum matrix nonzeros per chunk before a sparse kernel goes parallel.
+pub const MIN_NNZ_PER_THREAD: usize = 2048;
+/// Minimum vector elements per chunk before a BLAS-1 kernel goes parallel.
 pub const MIN_VEC_PER_THREAD: usize = 32768;
+/// Minimum rows per chunk before one ILU level-set sweep goes parallel.
+pub const MIN_LEVEL_ROWS_PER_THREAD: usize = 256;
 
-/// Pool width: `PICT_THREADS` if set (≥ 1), else the machine's available
-/// parallelism. Read once and cached for the process lifetime.
-pub fn num_threads() -> usize {
-    static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| {
-        std::env::var("PICT_THREADS")
-            .ok()
-            .and_then(|s| s.trim().parse::<usize>().ok())
-            // 0 reads as "disable the pool", same as 1 — not "all cores"
-            .map(|n| n.max(1))
-            .unwrap_or_else(|| {
-                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-            })
-    })
+/// Requested pool width from the environment: `PICT_THREADS` if set (≥ 1;
+/// `0` reads as "disable", same as `1`), else the machine's available
+/// parallelism. Read fresh on every call — never cached — so the value is
+/// bound into whichever [`ExecCtx`] is being constructed, not the process.
+pub fn env_threads() -> usize {
+    std::env::var("PICT_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
-thread_local! {
-    static SERIAL_SCOPE: Cell<bool> = const { Cell::new(false) };
+/// Shared-slice handle for pool tasks that write disjoint index ranges of
+/// one buffer. The unsafe accessors hand out `&mut` views without
+/// synchronization; callers guarantee concurrent tasks touch disjoint
+/// indices (row partitions, level sets, chunk ranges).
+pub(crate) struct DisjointMut<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
 }
 
-/// True while the current thread runs inside [`with_serial`].
-pub fn in_serial_scope() -> bool {
-    SERIAL_SCOPE.with(|s| s.get())
-}
+// SAFETY: access is only through the unsafe accessors, whose contract
+// (disjoint indices across concurrent tasks) restores exclusive ownership
+// per element; T: Send makes cross-thread element access sound.
+unsafe impl<T: Send> Send for DisjointMut<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointMut<'_, T> {}
 
-/// Run `f` with all `par` kernels forced onto the serial path on this
-/// thread. Used by outer-level parallelism (one thread per scenario) so the
-/// inner solver kernels don't oversubscribe the machine.
-pub fn with_serial<T>(f: impl FnOnce() -> T) -> T {
-    SERIAL_SCOPE.with(|s| {
-        let prev = s.replace(true);
-        let out = f();
-        s.set(prev);
-        out
-    })
-}
-
-/// Effective worker count for `work` units with a per-thread minimum:
-/// 1 (serial) unless at least two workers can be fed.
-fn effective_threads(requested: usize, work: usize, min_per_thread: usize) -> usize {
-    if requested <= 1 || in_serial_scope() {
-        return 1;
+impl<'a, T> DisjointMut<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> DisjointMut<'a, T> {
+        DisjointMut { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
     }
-    let by_work = work / min_per_thread.max(1);
-    if by_work < 2 {
-        1
-    } else {
-        requested.min(by_work)
+
+    /// # Safety
+    /// Concurrent callers must use non-overlapping ranges.
+    pub unsafe fn range(&self, r: Range<usize>) -> &mut [T] {
+        debug_assert!(r.start <= r.end && r.end <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(r.start), r.end - r.start)
+    }
+
+    /// # Safety
+    /// No concurrent task may write index `i`.
+    pub unsafe fn get(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+
+    /// # Safety
+    /// No concurrent task may read or write index `i`.
+    pub unsafe fn set(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
     }
 }
 
@@ -139,226 +163,292 @@ pub fn partition_rows(row_ptr: &[usize], parts: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// y = A x, row-partitioned across the default pool. Bit-for-bit equal to
-/// the serial [`Csr::matvec`] at any thread count.
-pub fn matvec(a: &Csr, x: &[f64], y: &mut [f64]) {
-    matvec_with(a, x, y, num_threads());
+/// Execution context: a cheap-clone handle on one persistent [`Pool`],
+/// passed explicitly through every layer that runs parallel kernels. Clones
+/// share the pool (and its width); dropping the last clone shuts the
+/// workers down.
+#[derive(Clone)]
+pub struct ExecCtx {
+    pool: Arc<Pool>,
 }
 
-/// [`matvec`] with an explicit thread-count request (benchmarks, tests).
-/// The request is still capped by the work threshold; use
-/// [`matvec_partitioned`] to force the partitioned path on small systems.
-pub fn matvec_with(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
-    let nt = effective_threads(threads, a.nnz(), MIN_NNZ_PER_THREAD);
-    if nt <= 1 {
-        a.matvec(x, y);
-    } else {
-        matvec_partitioned(a, x, y, nt);
+impl Default for ExecCtx {
+    fn default() -> Self {
+        ExecCtx::from_env()
     }
 }
 
-/// The partitioned gather kernel itself, always run at `parts` chunks (no
-/// serial fallback). Public so tests and benches can pin the chunking.
-pub fn matvec_partitioned(a: &Csr, x: &[f64], y: &mut [f64], parts: usize) {
-    assert_eq!(x.len(), a.n);
-    assert_eq!(y.len(), a.n);
-    let ranges = partition_rows(&a.row_ptr, parts);
-    let (row_ptr, col_idx, vals) = (&a.row_ptr, &a.col_idx, &a.vals);
-    std::thread::scope(|s| {
-        let mut rest: &mut [f64] = y;
-        let mut consumed = 0usize;
-        for r in ranges {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.end - consumed);
-            rest = tail;
-            consumed = r.end;
-            s.spawn(move || {
-                for (row, yi) in r.zip(chunk.iter_mut()) {
-                    let mut acc = 0.0;
+impl ExecCtx {
+    /// Width-1 context: every kernel takes the serial path, no threads are
+    /// ever spawned.
+    pub fn serial() -> ExecCtx {
+        ExecCtx::with_threads(1)
+    }
+
+    /// Context over a pool of exactly `threads` workers (including the
+    /// submitting thread; `0` reads as `1`).
+    pub fn with_threads(threads: usize) -> ExecCtx {
+        ExecCtx { pool: Arc::new(Pool::new(threads)) }
+    }
+
+    /// Context sized by [`env_threads`] (`PICT_THREADS`, read now — not from
+    /// a process-wide cache).
+    pub fn from_env() -> ExecCtx {
+        ExecCtx::with_threads(env_threads())
+    }
+
+    /// Pool width: the number of workers kernels may chunk across (1 =
+    /// serial). Chunk counts derive from this, never from runtime worker
+    /// availability, so results are deterministic for a fixed width.
+    pub fn width(&self) -> usize {
+        self.pool.width()
+    }
+
+    /// The shared pool (crate-internal; external callers submit through
+    /// [`ExecCtx::run_tasks`] / [`ExecCtx::run_chunks`]).
+    pub(crate) fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// Run `f(t)` for `t` in `0..n_tasks` on the pool (reentrant; the
+    /// calling thread participates).
+    pub fn run_tasks<F: Fn(usize) + Sync>(&self, n_tasks: usize, f: F) {
+        self.pool.run(n_tasks, &f);
+    }
+
+    /// Chunked dispatch: split `0..len` into width-bounded ranges of at
+    /// least `min_per_thread` elements and run `f(chunk_index, range)` per
+    /// chunk; below the threshold, one inline `f(0, 0..len)` call.
+    pub fn run_chunks<F: Fn(usize, Range<usize>) + Sync>(
+        &self,
+        len: usize,
+        min_per_thread: usize,
+        f: F,
+    ) {
+        let nt = self.effective(len, min_per_thread);
+        if nt <= 1 {
+            f(0, 0..len);
+            return;
+        }
+        let ranges = partition(len, nt);
+        let rf = &f;
+        self.pool.run(ranges.len(), &|t| rf(t, ranges[t].clone()));
+    }
+
+    /// Effective chunk count for `work` units with a per-chunk minimum:
+    /// 1 (serial) unless at least two chunks can be fed.
+    fn effective(&self, work: usize, min_per_thread: usize) -> usize {
+        let w = self.width();
+        if w <= 1 {
+            return 1;
+        }
+        let by_work = work / min_per_thread.max(1);
+        if by_work < 2 {
+            1
+        } else {
+            w.min(by_work)
+        }
+    }
+
+    /// y = A x, row-partitioned across the pool. Bit-for-bit equal to the
+    /// serial [`Csr::matvec`] at any width.
+    pub fn matvec(&self, a: &Csr, x: &[f64], y: &mut [f64]) {
+        let nt = self.effective(a.nnz(), MIN_NNZ_PER_THREAD);
+        if nt <= 1 {
+            a.matvec(x, y);
+        } else {
+            self.matvec_chunks(a, x, y, nt);
+        }
+    }
+
+    /// The partitioned gather kernel itself, always run at `parts` chunks
+    /// (no serial fallback). Public so tests and benches can pin the
+    /// chunking.
+    pub fn matvec_chunks(&self, a: &Csr, x: &[f64], y: &mut [f64], parts: usize) {
+        assert_eq!(x.len(), a.n);
+        assert_eq!(y.len(), a.n);
+        let ranges = partition_rows(&a.row_ptr, parts);
+        let (row_ptr, col_idx, vals) = (&a.row_ptr, &a.col_idx, &a.vals);
+        let ys = DisjointMut::new(y);
+        self.run_tasks(ranges.len(), |t| {
+            let r = ranges[t].clone();
+            // SAFETY: row ranges are disjoint, one task per range
+            let chunk = unsafe { ys.range(r.clone()) };
+            for (row, yi) in r.zip(chunk.iter_mut()) {
+                let mut acc = 0.0;
+                for k in row_ptr[row]..row_ptr[row + 1] {
+                    acc += vals[k] * x[col_idx[k] as usize];
+                }
+                *yi = acc;
+            }
+        });
+    }
+
+    /// y = Aᵀ x: each chunk scatters its row range into a private buffer,
+    /// then buffers are combined in chunk order (deterministic for a fixed
+    /// width; may differ from serial in the last ulps).
+    pub fn matvec_transpose(&self, a: &Csr, x: &[f64], y: &mut [f64]) {
+        let nt = self.effective(a.nnz(), MIN_NNZ_PER_THREAD);
+        if nt <= 1 {
+            a.matvec_transpose(x, y);
+        } else {
+            self.matvec_transpose_chunks(a, x, y, nt);
+        }
+    }
+
+    /// The partitioned scatter-reduce kernel, always run at `parts` chunks.
+    pub fn matvec_transpose_chunks(&self, a: &Csr, x: &[f64], y: &mut [f64], parts: usize) {
+        assert_eq!(x.len(), a.n);
+        assert_eq!(y.len(), a.n);
+        let n = a.n;
+        let ranges = partition_rows(&a.row_ptr, parts);
+        let (row_ptr, col_idx, vals) = (&a.row_ptr, &a.col_idx, &a.vals);
+        let mut partials: Vec<Vec<f64>> = vec![Vec::new(); ranges.len()];
+        {
+            let ps = DisjointMut::new(&mut partials);
+            self.run_tasks(ranges.len(), |t| {
+                let mut local = vec![0.0; n];
+                for row in ranges[t].clone() {
+                    let xr = x[row];
+                    if xr == 0.0 {
+                        continue;
+                    }
                     for k in row_ptr[row]..row_ptr[row + 1] {
-                        acc += vals[k] * x[col_idx[k] as usize];
+                        local[col_idx[k] as usize] += vals[k] * xr;
                     }
-                    *yi = acc;
                 }
+                // SAFETY: slot t is written by task t only
+                unsafe { ps.range(t..t + 1) }[0] = local;
             });
         }
-    });
-}
-
-/// y = Aᵀ x: each worker scatters its row range into a thread-local buffer,
-/// then buffers are combined in worker order (deterministic for a fixed
-/// thread count; may differ from serial in the last ulps).
-pub fn matvec_transpose(a: &Csr, x: &[f64], y: &mut [f64]) {
-    matvec_transpose_with(a, x, y, num_threads());
-}
-
-/// [`matvec_transpose`] with an explicit thread-count request.
-pub fn matvec_transpose_with(a: &Csr, x: &[f64], y: &mut [f64], threads: usize) {
-    let nt = effective_threads(threads, a.nnz(), MIN_NNZ_PER_THREAD);
-    if nt <= 1 {
-        a.matvec_transpose(x, y);
-        return;
+        // Combine in parallel too — a serial combine would cost
+        // O(parts·n) on this crate's low-density stencil matrices,
+        // rivaling the scatter itself. Each chunk owns an output range and
+        // sums the partials in chunk order, so the result is deterministic
+        // for a fixed `parts`.
+        let partials = &partials;
+        let out_ranges = partition(n, partials.len());
+        let ys = DisjointMut::new(y);
+        self.run_tasks(out_ranges.len(), |t| {
+            let r = out_ranges[t].clone();
+            // SAFETY: output ranges are disjoint, one task per range
+            let chunk = unsafe { ys.range(r.clone()) };
+            for (off, yi) in chunk.iter_mut().enumerate() {
+                let i = r.start + off;
+                let mut acc = 0.0;
+                for local in partials {
+                    acc += local[i];
+                }
+                *yi = acc;
+            }
+        });
     }
-    matvec_transpose_partitioned(a, x, y, nt);
+
+    /// Chunked parallel dot product; partials combined in chunk order.
+    pub fn dot(&self, a: &[f64], b: &[f64]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        let nt = self.effective(a.len(), MIN_VEC_PER_THREAD);
+        if nt <= 1 {
+            return a.iter().zip(b).map(|(x, y)| x * y).sum();
+        }
+        let ranges = partition(a.len(), nt);
+        let mut partials = vec![0.0; ranges.len()];
+        {
+            let ps = DisjointMut::new(&mut partials);
+            self.run_tasks(ranges.len(), |t| {
+                let r = ranges[t].clone();
+                let s: f64 = a[r.clone()].iter().zip(&b[r]).map(|(x, y)| x * y).sum();
+                // SAFETY: slot t is written by task t only
+                unsafe { ps.set(t, s) };
+            });
+        }
+        partials.iter().sum()
+    }
+
+    /// Parallel 2-norm (via [`ExecCtx::dot`]).
+    pub fn norm2(&self, a: &[f64]) -> f64 {
+        self.dot(a, a).sqrt()
+    }
+
+    /// y += alpha * x, chunk-partitioned; bit-for-bit equal to serial.
+    pub fn axpy(&self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), y.len());
+        let ys = DisjointMut::new(y);
+        self.run_chunks(x.len(), MIN_VEC_PER_THREAD, |_, r| {
+            // SAFETY: chunk ranges are disjoint
+            let chunk = unsafe { ys.range(r.clone()) };
+            for (yi, xi) in chunk.iter_mut().zip(&x[r]) {
+                *yi += alpha * xi;
+            }
+        });
+    }
+
+    /// Visit every CSR row with mutable access to its value slice,
+    /// row-partitioned across the pool: `f(row, row_cols, row_vals)`. Rows
+    /// map to disjoint `vals` ranges, so chunks write without
+    /// synchronization. Used by the FVM assembly hot path.
+    pub fn for_each_row<F>(&self, row_ptr: &[usize], col_idx: &[u32], vals: &mut [f64], f: F)
+    where
+        F: Fn(usize, &[u32], &mut [f64]) + Sync,
+    {
+        let n = row_ptr.len().saturating_sub(1);
+        assert_eq!(vals.len(), if n == 0 { 0 } else { row_ptr[n] });
+        assert_eq!(col_idx.len(), vals.len());
+        let nt = self.effective(vals.len(), MIN_NNZ_PER_THREAD);
+        if nt <= 1 {
+            for row in 0..n {
+                let (lo, hi) = (row_ptr[row], row_ptr[row + 1]);
+                f(row, &col_idx[lo..hi], &mut vals[lo..hi]);
+            }
+            return;
+        }
+        let ranges = partition_rows(row_ptr, nt);
+        let vs = DisjointMut::new(vals);
+        self.run_tasks(ranges.len(), |t| {
+            for row in ranges[t].clone() {
+                let (lo, hi) = (row_ptr[row], row_ptr[row + 1]);
+                // SAFETY: rows are disjoint value ranges, row ranges are
+                // disjoint across tasks
+                let row_vals = unsafe { vs.range(lo..hi) };
+                f(row, &col_idx[lo..hi], row_vals);
+            }
+        });
+    }
 }
 
-/// The partitioned scatter-reduce kernel, always run at `parts` chunks.
-pub fn matvec_transpose_partitioned(a: &Csr, x: &[f64], y: &mut [f64], parts: usize) {
-    assert_eq!(x.len(), a.n);
-    assert_eq!(y.len(), a.n);
-    let ranges = partition_rows(&a.row_ptr, parts);
-    let (row_ptr, col_idx, vals) = (&a.row_ptr, &a.col_idx, &a.vals);
-    let n = a.n;
-    let mut partials: Vec<Vec<f64>> = Vec::with_capacity(ranges.len());
-    std::thread::scope(|s| {
-        let handles: Vec<_> = ranges
-            .into_iter()
-            .map(|r| {
+/// The pre-pool spawn-per-call kernels, kept as the benchmark baseline so
+/// `benches/par_scaling.rs` can quantify what the persistent pool saves.
+/// Not used by any solver path.
+pub mod spawn {
+    use super::partition_rows;
+    use crate::sparse::Csr;
+
+    /// y = A x at `parts` chunks, spawning (and joining) one scoped thread
+    /// per chunk — the old kernel this crate's pool replaced.
+    pub fn matvec_partitioned(a: &Csr, x: &[f64], y: &mut [f64], parts: usize) {
+        assert_eq!(x.len(), a.n);
+        assert_eq!(y.len(), a.n);
+        let ranges = partition_rows(&a.row_ptr, parts);
+        let (row_ptr, col_idx, vals) = (&a.row_ptr, &a.col_idx, &a.vals);
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = y;
+            let mut consumed = 0usize;
+            for r in ranges {
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.end - consumed);
+                rest = tail;
+                consumed = r.end;
                 s.spawn(move || {
-                    let mut local = vec![0.0; n];
-                    for row in r {
-                        let xr = x[row];
-                        if xr == 0.0 {
-                            continue;
-                        }
+                    for (row, yi) in r.zip(chunk.iter_mut()) {
+                        let mut acc = 0.0;
                         for k in row_ptr[row]..row_ptr[row + 1] {
-                            local[col_idx[k] as usize] += vals[k] * xr;
+                            acc += vals[k] * x[col_idx[k] as usize];
                         }
+                        *yi = acc;
                     }
-                    local
-                })
-            })
-            .collect();
-        for h in handles {
-            partials.push(h.join().expect("par worker panicked"));
-        }
-    });
-    // Combine in parallel too — a serial combine would cost O(parts·n) on
-    // this crate's low-density stencil matrices, rivaling the scatter
-    // itself. Each worker owns an output chunk and sums the partials in
-    // worker order, so the result is deterministic for a fixed `parts`.
-    let partials = &partials;
-    std::thread::scope(|s| {
-        let mut rest: &mut [f64] = y;
-        let mut consumed = 0usize;
-        for r in partition(n, partials.len()) {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.end - consumed);
-            rest = tail;
-            consumed = r.end;
-            s.spawn(move || {
-                for (off, yi) in chunk.iter_mut().enumerate() {
-                    let i = r.start + off;
-                    let mut acc = 0.0;
-                    for local in partials {
-                        acc += local[i];
-                    }
-                    *yi = acc;
-                }
-            });
-        }
-    });
-}
-
-/// Chunked parallel dot product; partials combined in chunk order.
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    dot_with(a, b, num_threads())
-}
-
-/// [`dot`] with an explicit thread-count request.
-pub fn dot_with(a: &[f64], b: &[f64], threads: usize) -> f64 {
-    assert_eq!(a.len(), b.len());
-    let nt = effective_threads(threads, a.len(), MIN_VEC_PER_THREAD);
-    if nt <= 1 {
-        return a.iter().zip(b).map(|(x, y)| x * y).sum();
+                });
+            }
+        });
     }
-    let ranges = partition(a.len(), nt);
-    std::thread::scope(|s| {
-        let handles: Vec<_> = ranges
-            .into_iter()
-            .map(|r| {
-                s.spawn(move || {
-                    a[r.clone()].iter().zip(&b[r]).map(|(x, y)| x * y).sum::<f64>()
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("par worker panicked")).sum()
-    })
-}
-
-/// Parallel 2-norm (via [`dot`]).
-pub fn norm2(a: &[f64]) -> f64 {
-    dot(a, a).sqrt()
-}
-
-/// y += alpha * x, chunk-partitioned; bit-for-bit equal to serial.
-pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    axpy_with(alpha, x, y, num_threads());
-}
-
-/// [`axpy`] with an explicit thread-count request.
-pub fn axpy_with(alpha: f64, x: &[f64], y: &mut [f64], threads: usize) {
-    assert_eq!(x.len(), y.len());
-    let nt = effective_threads(threads, y.len(), MIN_VEC_PER_THREAD);
-    if nt <= 1 {
-        for (yi, xi) in y.iter_mut().zip(x) {
-            *yi += alpha * xi;
-        }
-        return;
-    }
-    let ranges = partition(y.len(), nt);
-    std::thread::scope(|s| {
-        let mut rest: &mut [f64] = y;
-        let mut consumed = 0usize;
-        for r in ranges {
-            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(r.end - consumed);
-            rest = tail;
-            consumed = r.end;
-            s.spawn(move || {
-                for (yi, xi) in chunk.iter_mut().zip(&x[r]) {
-                    *yi += alpha * xi;
-                }
-            });
-        }
-    });
-}
-
-/// Visit every CSR row with mutable access to its value slice,
-/// row-partitioned across the pool: `f(row, row_cols, row_vals)`. Rows map
-/// to disjoint `vals` ranges, so workers write without synchronization.
-/// Used by the FVM assembly hot path.
-pub fn for_each_row<F>(row_ptr: &[usize], col_idx: &[u32], vals: &mut [f64], f: F)
-where
-    F: Fn(usize, &[u32], &mut [f64]) + Sync,
-{
-    let n = row_ptr.len().saturating_sub(1);
-    let nt = effective_threads(num_threads(), vals.len(), MIN_NNZ_PER_THREAD);
-    if nt <= 1 {
-        for row in 0..n {
-            let (lo, hi) = (row_ptr[row], row_ptr[row + 1]);
-            f(row, &col_idx[lo..hi], &mut vals[lo..hi]);
-        }
-        return;
-    }
-    let ranges = partition_rows(row_ptr, nt);
-    std::thread::scope(|s| {
-        let fr = &f;
-        let mut rest: &mut [f64] = vals;
-        let mut consumed = 0usize;
-        for r in ranges {
-            let (chunk, tail) =
-                std::mem::take(&mut rest).split_at_mut(row_ptr[r.end] - consumed);
-            rest = tail;
-            consumed = row_ptr[r.end];
-            s.spawn(move || {
-                let mut chunk = chunk;
-                for row in r {
-                    let len = row_ptr[row + 1] - row_ptr[row];
-                    let (row_vals, tail) = std::mem::take(&mut chunk).split_at_mut(len);
-                    chunk = tail;
-                    fr(row, &col_idx[row_ptr[row]..row_ptr[row + 1]], row_vals);
-                }
-            });
-        }
-    });
 }
 
 #[cfg(test)]
@@ -409,30 +499,32 @@ mod tests {
     }
 
     #[test]
-    fn parallel_matvec_bit_for_bit_equals_serial() {
+    fn pool_matvec_bit_for_bit_equals_serial() {
         let mut rng = Rng::new(0xFA11);
         let a = random_csr(150, 0.2, &mut rng);
         let x = rng.normal_vec(150);
         let mut y_serial = vec![0.0; 150];
         a.matvec(&x, &mut y_serial);
         for nt in [2, 3, 4, 8] {
+            let ctx = ExecCtx::with_threads(nt);
             let mut y_par = vec![0.0; 150];
-            matvec_partitioned(&a, &x, &mut y_par, nt);
+            ctx.matvec_chunks(&a, &x, &mut y_par, nt);
             assert_eq!(y_serial, y_par, "nt={nt}");
         }
     }
 
     #[test]
-    fn parallel_transpose_matches_explicit_transpose() {
+    fn pool_transpose_matches_explicit_transpose() {
         let mut rng = Rng::new(0x7A2);
         let a = random_csr(120, 0.25, &mut rng);
         let x = rng.normal_vec(120);
         let at = a.transpose();
         let mut want = vec![0.0; 120];
         at.matvec(&x, &mut want);
+        let ctx = ExecCtx::with_threads(5);
         for nt in [2, 5] {
             let mut got = vec![0.0; 120];
-            matvec_transpose_partitioned(&a, &x, &mut got, nt);
+            ctx.matvec_transpose_chunks(&a, &x, &mut got, nt);
             for (g, w) in got.iter().zip(&want) {
                 assert!((g - w).abs() < 1e-12 * (1.0 + w.abs()), "{g} vs {w}");
             }
@@ -446,23 +538,29 @@ mod tests {
         let a = rng.normal_vec(n);
         let b = rng.normal_vec(n);
         let serial: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-        let par = dot_with(&a, &b, 4);
+        let ctx = ExecCtx::with_threads(4);
+        let par = ctx.dot(&a, &b);
         assert!((par - serial).abs() < 1e-9 * (1.0 + serial.abs()));
         let mut y1 = b.clone();
         let mut y2 = b.clone();
-        axpy_with(0.37, &a, &mut y1, 1);
-        axpy_with(0.37, &a, &mut y2, 4);
+        ExecCtx::serial().axpy(0.37, &a, &mut y1);
+        ctx.axpy(0.37, &a, &mut y2);
         assert_eq!(y1, y2); // elementwise: exactly equal
     }
 
     #[test]
-    fn serial_scope_suppresses_parallelism() {
-        assert!(!in_serial_scope());
-        with_serial(|| {
-            assert!(in_serial_scope());
-            assert_eq!(effective_threads(8, usize::MAX / 2, 1), 1);
-        });
-        assert!(!in_serial_scope());
+    fn serial_ctx_width_is_one_and_runs_inline() {
+        let ctx = ExecCtx::serial();
+        assert_eq!(ctx.width(), 1);
+        assert_eq!(ctx.effective(usize::MAX / 2, 1), 1);
+    }
+
+    #[test]
+    fn clones_share_one_pool() {
+        let ctx = ExecCtx::with_threads(3);
+        let other = ctx.clone();
+        assert_eq!(other.width(), 3);
+        assert!(std::ptr::eq(ctx.pool(), other.pool()));
     }
 
     #[test]
@@ -473,7 +571,8 @@ mod tests {
         got.zero_values();
         let want_vals = a.vals.clone();
         let (row_ptr, col_idx) = (a.row_ptr.clone(), a.col_idx.clone());
-        for_each_row(&row_ptr, &col_idx, &mut got.vals, |row, _cols, row_vals| {
+        let ctx = ExecCtx::with_threads(4);
+        ctx.for_each_row(&row_ptr, &col_idx, &mut got.vals, |row, _cols, row_vals| {
             let lo = row_ptr[row];
             for (k, v) in row_vals.iter_mut().enumerate() {
                 *v = want_vals[lo + k];
@@ -483,7 +582,19 @@ mod tests {
     }
 
     #[test]
-    fn num_threads_is_at_least_one() {
-        assert!(num_threads() >= 1);
+    fn spawn_baseline_matches_serial() {
+        let mut rng = Rng::new(0x5BA);
+        let a = random_csr(90, 0.3, &mut rng);
+        let x = rng.normal_vec(90);
+        let mut y_serial = vec![0.0; 90];
+        let mut y_spawn = vec![0.0; 90];
+        a.matvec(&x, &mut y_serial);
+        spawn::matvec_partitioned(&a, &x, &mut y_spawn, 4);
+        assert_eq!(y_serial, y_spawn);
+    }
+
+    #[test]
+    fn env_threads_is_at_least_one() {
+        assert!(env_threads() >= 1);
     }
 }

@@ -1,0 +1,335 @@
+//! Persistent worker pool: threads spawned once (lazily, on the first
+//! parallel job) and parked on a condvar between jobs, replacing the
+//! previous spawn-per-call scoped threads whose ~10–20 µs setup tax made
+//! parallel kernels unprofitable below large systems.
+//!
+//! A job is a task function plus a task count. Workers — and the submitting
+//! thread, which always helps — claim task indices from a shared counter,
+//! so work keyed by task index lands deterministically no matter which
+//! worker executes it. Multiple threads may submit concurrently (jobs queue
+//! up and drain in order), and submission is reentrant: a task already
+//! running on a pool worker may submit a nested job, which is exactly what
+//! the scenario-level tasks of
+//! [`BatchRunner`](crate::coordinator::scenario::BatchRunner) do for their
+//! inner solver kernels. Because the submitter executes its own job's tasks
+//! while waiting, nested submission cannot deadlock even when every worker
+//! is busy: tasks never block on anything but their own nested jobs, so the
+//! wait graph stays acyclic.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Erased reference to a job's task function. [`Pool::run`] blocks until
+/// every task has finished before returning, so the pointee outlives every
+/// dereference despite the erased lifetime.
+struct TaskRef(*const (dyn Fn(usize) + Sync + 'static));
+
+// SAFETY: the pointee is `Sync` (shared calls are safe) and the erased
+// borrow is kept alive by the submitter until the job completes.
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+struct Job {
+    task: TaskRef,
+    n_tasks: usize,
+    /// Claim counter: next unclaimed task index (may overshoot `n_tasks`).
+    next: AtomicUsize,
+    /// Tasks not yet finished (claimed or not).
+    pending: AtomicUsize,
+    /// First panic payload caught on a task; resumed on the submitting
+    /// thread once the job completes, so the original assertion message
+    /// and backtrace context survive the pool boundary.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+    done: Mutex<()>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    /// Claim and execute tasks until the claim counter is exhausted.
+    fn help(&self) {
+        loop {
+            let t = self.next.fetch_add(1, Ordering::SeqCst);
+            if t >= self.n_tasks {
+                return;
+            }
+            // SAFETY: tasks are only claimed while the submitter is blocked
+            // in `Pool::run`, which keeps the borrow alive (see `TaskRef`).
+            let task = unsafe { &*self.task.0 };
+            let flag = TaskFlagGuard::enter();
+            if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(t)))
+            {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            drop(flag);
+            if self.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                // last finisher: take the lock so the notify cannot race
+                // between the waiter's predicate check and its wait()
+                let _guard = self.done.lock().unwrap();
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::SeqCst) >= self.n_tasks
+    }
+
+    fn wait(&self) {
+        let mut guard = self.done.lock().unwrap();
+        while self.pending.load(Ordering::SeqCst) != 0 {
+            guard = self.done_cv.wait(guard).unwrap();
+        }
+    }
+}
+
+struct Gate {
+    queue: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct PoolInner {
+    gate: Mutex<Gate>,
+    work_cv: Condvar,
+}
+
+thread_local! {
+    /// True while the current thread is executing a pool task (on a worker,
+    /// on a submitter helping its own job, or on an inline fast path):
+    /// nested jobs submitted from inside a task jump the queue, so inner
+    /// kernel chunks run before not-yet-started outer tasks instead of
+    /// queueing behind them.
+    static IN_POOL_TASK: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Sets [`IN_POOL_TASK`] for the current scope; restores the previous value
+/// on drop, including during unwinding (the inline paths run tasks without
+/// a `catch_unwind`).
+struct TaskFlagGuard(bool);
+
+impl TaskFlagGuard {
+    fn enter() -> TaskFlagGuard {
+        TaskFlagGuard(IN_POOL_TASK.with(|w| w.replace(true)))
+    }
+}
+
+impl Drop for TaskFlagGuard {
+    fn drop(&mut self) {
+        IN_POOL_TASK.with(|w| w.set(self.0));
+    }
+}
+
+fn worker_loop(inner: &PoolInner) {
+    let mut gate = inner.gate.lock().unwrap();
+    loop {
+        if gate.shutdown {
+            return;
+        }
+        while gate.queue.front().map(|j| j.exhausted()).unwrap_or(false) {
+            // fully claimed: stragglers finish on the threads that claimed
+            // the tasks; nothing left for a new worker to pick up
+            gate.queue.pop_front();
+        }
+        match gate.queue.front() {
+            Some(job) => {
+                let job = job.clone();
+                drop(gate);
+                job.help();
+                gate = inner.gate.lock().unwrap();
+            }
+            None => gate = inner.work_cv.wait(gate).unwrap(),
+        }
+    }
+}
+
+/// A persistent pool of `width − 1` parked worker threads (the submitting
+/// thread is always the width-th worker). `width ≤ 1` never spawns anything
+/// and runs every job inline; otherwise the workers start lazily on the
+/// first parallel job and shut down when the pool is dropped.
+pub struct Pool {
+    width: usize,
+    inner: OnceLock<Arc<PoolInner>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    pub fn new(width: usize) -> Pool {
+        Pool { width: width.max(1), inner: OnceLock::new(), handles: Mutex::new(Vec::new()) }
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    fn spawned(&self) -> &Arc<PoolInner> {
+        self.inner.get_or_init(|| {
+            let inner = Arc::new(PoolInner {
+                gate: Mutex::new(Gate { queue: VecDeque::new(), shutdown: false }),
+                work_cv: Condvar::new(),
+            });
+            let mut handles = self.handles.lock().unwrap();
+            for i in 0..self.width - 1 {
+                let worker = inner.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("pict-par-{i}"))
+                    .spawn(move || worker_loop(&worker))
+                    .expect("failed to spawn pool worker");
+                handles.push(handle);
+            }
+            inner
+        })
+    }
+
+    /// Run `task(t)` for every `t` in `0..n_tasks` across the pool,
+    /// returning once all tasks have finished. Reentrant: may be called
+    /// from inside a pool task (the nested job jumps the queue).
+    pub fn run<'a>(&self, n_tasks: usize, task: &'a (dyn Fn(usize) + Sync + 'a)) {
+        if n_tasks == 0 {
+            return;
+        }
+        if self.width <= 1 || n_tasks == 1 {
+            // the inline paths are still pool-task execution: mark the
+            // scope so jobs nested under them keep jumping the queue
+            let _flag = TaskFlagGuard::enter();
+            for t in 0..n_tasks {
+                task(t);
+            }
+            return;
+        }
+        let inner = self.spawned();
+        // SAFETY: `run` blocks below until `pending` hits zero, i.e. until
+        // the last dereference of the erased task reference has completed,
+        // so the fake 'static never outlives the real borrow.
+        let task: &'static (dyn Fn(usize) + Sync + 'static) = unsafe {
+            std::mem::transmute::<
+                &'a (dyn Fn(usize) + Sync + 'a),
+                &'static (dyn Fn(usize) + Sync + 'static),
+            >(task)
+        };
+        let job = Arc::new(Job {
+            task: TaskRef(task as *const _),
+            n_tasks,
+            next: AtomicUsize::new(0),
+            pending: AtomicUsize::new(n_tasks),
+            panic: Mutex::new(None),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        {
+            let mut gate = inner.gate.lock().unwrap();
+            if IN_POOL_TASK.with(|w| w.get()) {
+                gate.queue.push_front(job.clone());
+            } else {
+                gate.queue.push_back(job.clone());
+            }
+        }
+        // wake just enough parked workers to cover the tasks the submitter
+        // cannot take itself; busy workers re-check the queue before they
+        // park, so under-waking cannot strand the job (and notify_all here
+        // would thundering-herd every parked worker through the gate lock
+        // on each small kernel dispatch)
+        for _ in 0..(n_tasks - 1).min(self.width - 1) {
+            inner.work_cv.notify_one();
+        }
+        job.help();
+        job.wait();
+        if let Some(payload) = job.panic.lock().unwrap().take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if let Some(inner) = self.inner.get() {
+            inner.gate.lock().unwrap().shutdown = true;
+            inner.work_cv.notify_all();
+            for handle in self.handles.get_mut().unwrap().drain(..) {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = Pool::new(4);
+        let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), &|t| {
+            hits[t].fetch_add(1, Ordering::SeqCst);
+        });
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {t}");
+        }
+    }
+
+    #[test]
+    fn serial_pool_runs_inline() {
+        let pool = Pool::new(1);
+        let sum = AtomicUsize::new(0);
+        pool.run(10, &|t| {
+            sum.fetch_add(t, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 45);
+        assert!(pool.inner.get().is_none(), "width-1 pool must not spawn workers");
+    }
+
+    #[test]
+    fn nested_submission_from_worker_tasks() {
+        // outer tasks submit inner jobs on the same pool — the BatchRunner
+        // shape. Must complete without deadlock and cover all inner work.
+        let pool = Pool::new(3);
+        let total = AtomicUsize::new(0);
+        pool.run(4, &|_outer| {
+            pool.run(8, &|inner| {
+                total.fetch_add(inner + 1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 36);
+    }
+
+    #[test]
+    fn concurrent_external_submitters() {
+        let pool = Pool::new(2);
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    pool.run(16, &|t| {
+                        total.fetch_add(t, Ordering::SeqCst);
+                    });
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 3 * 120);
+    }
+
+    #[test]
+    fn task_panic_reaches_the_submitter() {
+        let pool = Pool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, &|t| {
+                if t == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        let payload = result.expect_err("panic must propagate to the submitter");
+        // the original payload is resumed, not a generic pool error
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // the pool survives a poisoned job
+        let sum = AtomicUsize::new(0);
+        pool.run(4, &|t| {
+            sum.fetch_add(t, Ordering::SeqCst);
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 6);
+    }
+}

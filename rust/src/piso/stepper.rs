@@ -4,6 +4,7 @@
 use crate::fvm;
 use crate::linsolve::{bicgstab, cg, Ilu0, Jacobi, Preconditioner, SolveOpts};
 use crate::mesh::{face_axis, face_sign, Mesh, NeighRef, VectorField};
+use crate::par::ExecCtx;
 use crate::sparse::Csr;
 use crate::util::timer;
 
@@ -93,8 +94,9 @@ pub struct StepRecord {
     pub correctors: Vec<CorrectorRecord>,
 }
 
-/// The PISO solver: owns the mesh, viscosity field, and reusable matrix
-/// structures. One instance per mesh; `step` advances a [`State`].
+/// The PISO solver: owns the mesh, viscosity field, reusable matrix
+/// structures, and the execution context its kernels run on. One instance
+/// per mesh; `step` advances a [`State`].
 pub struct PisoSolver {
     pub mesh: Mesh,
     pub cfg: PisoConfig,
@@ -102,20 +104,30 @@ pub struct PisoSolver {
     pub nu: Vec<f64>,
     pub c: Csr,
     pub pmat: Csr,
+    /// Execution context threaded through assembly, Krylov solves, and
+    /// preconditioner applies (and reused by the adjoint for the transposed
+    /// solves). Constructors default to [`ExecCtx::from_env`]; embedders
+    /// sharing one pool across solvers (e.g. the batch runner) swap in a
+    /// clone of theirs via [`PisoSolver::with_ctx`].
+    pub ctx: ExecCtx,
 }
 
 impl PisoSolver {
     pub fn new(mesh: Mesh, cfg: PisoConfig, nu_uniform: f64) -> PisoSolver {
-        let c = fvm::c_structure(&mesh);
-        let pmat = fvm::pressure_structure(&mesh);
         let nu = vec![nu_uniform; mesh.ncells];
-        PisoSolver { mesh, cfg, nu, c, pmat }
+        PisoSolver::with_viscosity_field(mesh, cfg, nu)
     }
 
     pub fn with_viscosity_field(mesh: Mesh, cfg: PisoConfig, nu: Vec<f64>) -> PisoSolver {
         let c = fvm::c_structure(&mesh);
         let pmat = fvm::pressure_structure(&mesh);
-        PisoSolver { mesh, cfg, nu, c, pmat }
+        PisoSolver { mesh, cfg, nu, c, pmat, ctx: ExecCtx::from_env() }
+    }
+
+    /// Replace the execution context (builder-style), sharing its pool.
+    pub fn with_ctx(mut self, ctx: ExecCtx) -> PisoSolver {
+        self.ctx = ctx;
+        self
     }
 
     /// CFL-limited time step for the current velocity.
@@ -156,8 +168,9 @@ impl PisoSolver {
         let n = mesh.ncells;
 
         // --- assemble C and the momentum RHS ---
+        let ctx = &self.ctx;
         timer::scoped("assemble_c", || {
-            fvm::assemble_c(mesh, &state.u, &self.nu, dt, &mut self.c)
+            fvm::assemble_c(ctx, mesh, &state.u, &self.nu, dt, &mut self.c)
         });
         let mut rhs_base = fvm::boundary_flux_rhs(mesh, &self.nu);
         for comp in 0..dim {
@@ -190,7 +203,8 @@ impl PisoSolver {
                     }
                 }
                 let st = timer::scoped("adv_solve", || {
-                    bicgstab(&self.c, &rhs, &mut u_star.comp[comp], precond.as_ref(), self.cfg.adv_opts)
+                    let u = &mut u_star.comp[comp];
+                    bicgstab(ctx, &self.c, &rhs, u, precond.as_ref(), self.cfg.adv_opts)
                 });
                 stats.adv_iters += st.iterations;
                 stats.adv_residual = stats.adv_residual.max(st.residual);
@@ -201,7 +215,7 @@ impl PisoSolver {
         let diag = self.c.diagonal();
         let a_inv: Vec<f64> = diag.iter().map(|d| 1.0 / d).collect();
         timer::scoped("assemble_p", || {
-            fvm::assemble_pressure(mesh, &a_inv, &mut self.pmat)
+            fvm::assemble_pressure(ctx, mesh, &a_inv, &mut self.pmat)
         });
         let p_precond = Jacobi::new(&self.pmat);
         // pure-Neumann/periodic pressure ⇒ constant nullspace unless any
@@ -225,7 +239,7 @@ impl PisoSolver {
                     }
                 }
                 let st = timer::scoped("p_solve", || {
-                    cg(&self.pmat, &rhs_p, &mut p, &p_precond, project, self.cfg.p_opts)
+                    cg(ctx, &self.pmat, &rhs_p, &mut p, &p_precond, project, self.cfg.p_opts)
                 });
                 stats.p_iters += st.iterations;
                 stats.p_residual = stats.p_residual.max(st.residual);

@@ -101,6 +101,7 @@ pub fn stats_loss_grad(mesh: &Mesh, u: &VectorField, target: &StatsTarget) -> (f
 /// optimization toward divergence-free outputs with a *globally* correct
 /// signal. Returns the modified gradient.
 pub fn div_gradient_modification(
+    ctx: &crate::par::ExecCtx,
     mesh: &Mesh,
     s_theta: &VectorField,
     dl_ds: &VectorField,
@@ -109,7 +110,7 @@ pub fn div_gradient_modification(
     // unit-coefficient Laplacian (A⁻¹ ≡ 1): M p = −∇·S
     let mut m = fvm::pressure_structure(mesh);
     let ones = vec![1.0; mesh.ncells];
-    fvm::assemble_pressure(mesh, &ones, &mut m);
+    fvm::assemble_pressure(ctx, mesh, &ones, &mut m);
     // divergence of the corrector output; Dirichlet boundary fluxes do not
     // involve S, so pass an explicit zero override
     let n_bc: usize = mesh
@@ -123,7 +124,8 @@ pub fn div_gradient_modification(
     let rhs: Vec<f64> = div.iter().map(|v| -v).collect();
     let mut p = vec![0.0; mesh.ncells];
     let precond = Jacobi::new(&m);
-    cg(&m, &rhs, &mut p, &precond, true, SolveOpts { tol: 1e-8, max_iter: 4000, transpose: false });
+    let opts = SolveOpts { tol: 1e-8, max_iter: 4000, transpose: false };
+    cg(ctx, &m, &rhs, &mut p, &precond, true, opts);
     let gp = fvm::pressure_gradient(mesh, &p);
     let mut out = dl_ds.clone();
     out.axpy(lambda, &gp);
@@ -228,7 +230,8 @@ mod tests {
             s_free.comp[1][i] = (tau * c[0]).sin() * 0.0;
         }
         let dl = VectorField::zeros(mesh.ncells);
-        let g_free = div_gradient_modification(&mesh, &s_free, &dl, 1.0);
+        let ctx = crate::par::ExecCtx::serial();
+        let g_free = div_gradient_modification(&ctx, &mesh, &s_free, &dl, 1.0);
         let gn: f64 = g_free.comp[0].iter().chain(&g_free.comp[1]).map(|v| v * v).sum();
         assert!(gn < 1e-10, "div-free output should get ~zero modification: {gn}");
         // divergent field: gradient points along the irrotational part
@@ -236,7 +239,7 @@ mod tests {
         for (i, c) in mesh.centers.iter().enumerate() {
             s_div.comp[0][i] = (tau * c[0]).sin();
         }
-        let g_div = div_gradient_modification(&mesh, &s_div, &dl, 1.0);
+        let g_div = div_gradient_modification(&ctx, &mesh, &s_div, &dl, 1.0);
         // descent step S − η g reduces ‖∇·S‖
         let mut s_new = s_div.clone();
         s_new.axpy(-0.5, &g_div);

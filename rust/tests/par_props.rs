@@ -1,8 +1,11 @@
-//! Property tests for the parallel execution substrate and the transpose
-//! solve paths, over randomized sparsity patterns (util::prop).
+//! Property tests for the pool-resident parallel execution substrate and
+//! the transpose solve paths, over randomized sparsity patterns
+//! (util::prop): the determinism contract (par == serial for
+//! row-partitioned kernels), level-scheduled ILU(0) vs the serial
+//! triangular solves, and pool-resident Krylov vs serial results.
 
-use pict::linsolve::{bicgstab, cg, SolveOpts};
-use pict::par;
+use pict::linsolve::{bicgstab, cg, Ilu0, Jacobi, Preconditioner, SolveOpts};
+use pict::par::ExecCtx;
 use pict::sparse::Csr;
 use pict::util::prop::Prop;
 use pict::util::rng::Rng;
@@ -59,7 +62,8 @@ fn prop_matvec_transpose_matches_explicit_transpose() {
 }
 
 #[test]
-fn prop_parallel_matvec_bit_for_bit_serial() {
+fn prop_pool_matvec_bit_for_bit_serial() {
+    let ctx = ExecCtx::with_threads(8);
     Prop::new(16, 0xB17F).check("par_matvec", |rng, case| {
         let n = 8 + rng.below(120);
         let a = random_sparse(n, 0.25, rng);
@@ -68,7 +72,7 @@ fn prop_parallel_matvec_bit_for_bit_serial() {
         a.matvec(&x, &mut y_serial);
         for nt in [2, 3, 4, 8] {
             let mut y_par = vec![0.0; n];
-            par::matvec_partitioned(&a, &x, &mut y_par, nt);
+            ctx.matvec_chunks(&a, &x, &mut y_par, nt);
             if y_par != y_serial {
                 return Err(format!("case {case}: nt={nt} differs from serial"));
             }
@@ -76,7 +80,7 @@ fn prop_parallel_matvec_bit_for_bit_serial() {
         // the auto-dispatching entry point must agree as well (it may take
         // either path depending on the work threshold)
         let mut y_auto = vec![0.0; n];
-        par::matvec(&a, &x, &mut y_auto);
+        ctx.matvec(&a, &x, &mut y_auto);
         if y_auto != y_serial {
             return Err("auto-dispatch matvec differs from serial".into());
         }
@@ -85,22 +89,23 @@ fn prop_parallel_matvec_bit_for_bit_serial() {
 }
 
 #[test]
-fn parallel_matvec_above_threshold_is_bit_for_bit_serial() {
-    // large enough that matvec_with actually engages the pool
+fn pool_matvec_above_threshold_is_bit_for_bit_serial() {
+    // large enough that the auto path actually engages the pool
     let mut rng = Rng::new(0xA11C);
     let n = 600;
     let a = random_sparse(n, 0.1, &mut rng);
-    assert!(a.nnz() >= 2 * par::MIN_NNZ_PER_THREAD, "nnz {}", a.nnz());
+    assert!(a.nnz() >= 2 * pict::par::MIN_NNZ_PER_THREAD, "nnz {}", a.nnz());
     let x = rng.normal_vec(n);
     let mut y_serial = vec![0.0; n];
     let mut y_par = vec![0.0; n];
     a.matvec(&x, &mut y_serial);
-    par::matvec_with(&a, &x, &mut y_par, 4);
+    ExecCtx::with_threads(4).matvec(&a, &x, &mut y_par);
     assert_eq!(y_serial, y_par);
 }
 
 #[test]
-fn prop_parallel_transpose_matches_serial_to_roundoff() {
+fn prop_pool_transpose_matches_serial_to_roundoff() {
+    let ctx = ExecCtx::with_threads(5);
     Prop::new(12, 0x7A57).check("par_mvT", |rng, _| {
         let n = 8 + rng.below(100);
         let a = random_sparse(n, 0.25, rng);
@@ -109,12 +114,35 @@ fn prop_parallel_transpose_matches_serial_to_roundoff() {
         a.matvec_transpose(&x, &mut y_serial);
         for nt in [2, 5] {
             let mut y_par = vec![0.0; n];
-            par::matvec_transpose_partitioned(&a, &x, &mut y_par, nt);
+            ctx.matvec_transpose_chunks(&a, &x, &mut y_par, nt);
             for (p, s) in y_par.iter().zip(&y_serial) {
                 if (p - s).abs() > 1e-12 * (1.0 + s.abs()) {
                     return Err(format!("nt={nt}: {p} vs {s}"));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_level_scheduled_ilu0_apply_is_bit_for_bit_serial() {
+    // the satellite contract: level-scheduled triangular solves (parallel
+    // path forced via min_rows=1) must equal the serial apply exactly on
+    // random nonsymmetric systems
+    let ctx = ExecCtx::with_threads(4);
+    let serial = ExecCtx::serial();
+    Prop::new(16, 0x11D0).check("ilu_levels", |rng, case| {
+        let n = 10 + rng.below(120);
+        let a = random_dd(n, rng);
+        let ilu = Ilu0::new(&a);
+        let r = rng.normal_vec(n);
+        let mut z_serial = vec![0.0; n];
+        let mut z_par = vec![0.0; n];
+        ilu.apply(&serial, &r, &mut z_serial);
+        ilu.apply_min_rows(&ctx, &r, &mut z_par, 1);
+        if z_serial != z_par {
+            return Err(format!("case {case}: level-scheduled apply differs (n={n})"));
         }
         Ok(())
     });
@@ -131,10 +159,11 @@ fn prop_bicgstab_transpose_solves_nonsymmetric_adjoint() {
         a.matvec_transpose(&xs, &mut b);
         let mut x = vec![0.0; n];
         let st = bicgstab(
+            &ExecCtx::serial(),
             &a,
             &b,
             &mut x,
-            &pict::linsolve::Jacobi::new(&a.transpose()),
+            &Jacobi::new(&a.transpose()),
             SolveOpts { transpose: true, ..Default::default() },
         );
         if !st.converged {
@@ -171,8 +200,10 @@ fn cg_transpose_mode_equals_forward_on_symmetric_systems() {
     let mut x_fwd = vec![0.0; n];
     let mut x_t = vec![0.0; n];
     let id = pict::linsolve::precond::Identity;
-    let st1 = cg(&a, &b, &mut x_fwd, &id, false, SolveOpts::default());
+    let ctx = ExecCtx::serial();
+    let st1 = cg(&ctx, &a, &b, &mut x_fwd, &id, false, SolveOpts::default());
     let st2 = cg(
+        &ctx,
         &a,
         &b,
         &mut x_t,
@@ -184,4 +215,88 @@ fn cg_transpose_mode_equals_forward_on_symmetric_systems() {
     // identical dispatch ⇒ identical iterates, not merely close
     assert_eq!(x_fwd, x_t);
     assert_eq!(st1.iterations, st2.iterations);
+}
+
+/// The Poiseuille pressure system the batch runner exercises: small enough
+/// that every kernel stays under the parallel thresholds, so pool-resident
+/// CG must reproduce the serial (pre-refactor) iterates bit-for-bit.
+fn poiseuille_pressure_system() -> (Csr, Vec<f64>) {
+    use pict::fvm;
+    use pict::mesh::gen;
+    let mesh = gen::channel2d(6, 16, 1.0, 1.0, 1.12, false);
+    let a_inv = vec![1.0; mesh.ncells];
+    let mut m = fvm::pressure_structure(&mesh);
+    fvm::assemble_pressure(&ExecCtx::serial(), &mesh, &a_inv, &mut m);
+    // a consistent, mean-free RHS shaped like a divergence field
+    let mut rhs: Vec<f64> = mesh
+        .centers
+        .iter()
+        .map(|c| (7.1 * c[0]).sin() * (3.3 * c[1]).cos())
+        .collect();
+    let mean = rhs.iter().sum::<f64>() / rhs.len() as f64;
+    rhs.iter_mut().for_each(|v| *v -= mean);
+    (m, rhs)
+}
+
+#[test]
+fn pool_resident_cg_matches_serial_on_poiseuille_pressure() {
+    let (m, rhs) = poiseuille_pressure_system();
+    let precond = Jacobi::new(&m);
+    let mut x_serial = vec![0.0; m.n];
+    let mut x_pool = vec![0.0; m.n];
+    let st_s = cg(
+        &ExecCtx::serial(),
+        &m,
+        &rhs,
+        &mut x_serial,
+        &precond,
+        true,
+        SolveOpts::default(),
+    );
+    let st_p = cg(
+        &ExecCtx::with_threads(4),
+        &m,
+        &rhs,
+        &mut x_pool,
+        &precond,
+        true,
+        SolveOpts::default(),
+    );
+    assert!(st_s.converged && st_p.converged);
+    assert_eq!(x_serial, x_pool, "pool-resident CG must match serial bit-for-bit");
+    assert_eq!(st_s.iterations, st_p.iterations);
+}
+
+#[test]
+fn pool_resident_bicgstab_matches_serial_on_poiseuille_pressure() {
+    let (m, rhs) = poiseuille_pressure_system();
+    // regularize the singular pressure matrix so BiCGStab has a unique
+    // solution (same system both ways, so the comparison still holds)
+    let mut a = m.clone();
+    for i in 0..a.n {
+        let k = a.find(i, i).expect("diag");
+        a.vals[k] += 1.0;
+    }
+    let precond = Ilu0::new(&a);
+    let mut x_serial = vec![0.0; a.n];
+    let mut x_pool = vec![0.0; a.n];
+    let st_s = bicgstab(
+        &ExecCtx::serial(),
+        &a,
+        &rhs,
+        &mut x_serial,
+        &precond,
+        SolveOpts::default(),
+    );
+    let st_p = bicgstab(
+        &ExecCtx::with_threads(4),
+        &a,
+        &rhs,
+        &mut x_pool,
+        &precond,
+        SolveOpts::default(),
+    );
+    assert!(st_s.converged && st_p.converged);
+    assert_eq!(x_serial, x_pool, "pool-resident BiCGStab must match serial bit-for-bit");
+    assert_eq!(st_s.iterations, st_p.iterations);
 }
