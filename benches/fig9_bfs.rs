@@ -88,6 +88,7 @@ fn main() {
         lambda_div: 1e-3,
         output_scale: 0.1,
         seed: 0xBF5,
+        ..Default::default()
     };
     let mk = |mesh: pict::mesh::Mesh, dt: f64| {
         PisoSolver::new(mesh, PisoConfig { dt, use_ilu: true, ..Default::default() }, nu)

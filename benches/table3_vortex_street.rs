@@ -31,6 +31,7 @@ fn main() {
         output_scale: 0.1,
         seed: 0xC0DE,
         curriculum: vec![],
+        ..Default::default()
     };
     let mut fine = mk(gen::vortex_street(&fine_cfg), 0.04);
     let mut fs = State::zeros(&fine.mesh);

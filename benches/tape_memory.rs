@@ -1,0 +1,147 @@
+//! Tape-memory bench: peak resident fields and backward wall-time of the
+//! rollout tape under Full vs Checkpoint strategies (the PR-4 acceptance
+//! numbers: ≥ 4× peak-field reduction at n = 64 / every = 8, bit-for-bit
+//! equal gradients). Writes `reports/BENCH_tape_checkpoint.json`.
+
+use pict::adjoint::{GradientPaths, RolloutGrads, Tape, TapeStrategy};
+use pict::coordinator::scenario::{Scenario, ScenarioRun, TaylorGreen};
+use pict::mesh::VectorField;
+use pict::piso::State;
+use pict::util::bench::{print_table, write_report, Bench};
+use pict::util::json::Json;
+use std::time::Instant;
+
+const N_STEPS: usize = 64;
+
+fn terminal_ke(ncells: usize) -> impl FnMut(usize, &State) -> (VectorField, Vec<f64>) {
+    move |step, st| {
+        let mut du = VectorField::zeros(ncells);
+        if step + 1 == N_STEPS {
+            for c in 0..2 {
+                for i in 0..ncells {
+                    du.comp[c][i] = 2.0 * st.u.comp[c][i];
+                }
+            }
+        }
+        (du, vec![0.0; ncells])
+    }
+}
+
+struct Sample {
+    label: String,
+    resident: usize,
+    peak: usize,
+    record_s: f64,
+    backward_s: f64,
+    grads: RolloutGrads,
+}
+
+fn measure(scen: &TaylorGreen, strategy: TapeStrategy) -> Sample {
+    let ScenarioRun { mut solver, mut state, source, .. } = scen.build();
+    let ncells = solver.mesh.ncells;
+    let t0 = Instant::now();
+    let tape =
+        Tape::record(&mut solver, &mut state, N_STEPS, strategy, |_, _| source.clone());
+    let record_s = t0.elapsed().as_secs_f64();
+    let resident = tape.resident_f64();
+    let t1 = Instant::now();
+    let (grads, stats) = tape.backward_with_stats(
+        &mut solver,
+        GradientPaths::FULL,
+        |_, _| source.clone(),
+        terminal_ke(ncells),
+    );
+    Sample {
+        label: strategy.label(),
+        resident,
+        peak: stats.peak_resident_f64,
+        record_s,
+        backward_s: t1.elapsed().as_secs_f64(),
+        grads,
+    }
+}
+
+fn main() {
+    let scen = TaylorGreen { n: 20, nu: 0.01, dt: 0.01 };
+    let strategies = [
+        TapeStrategy::Full,
+        TapeStrategy::Checkpoint { every: 4 },
+        TapeStrategy::Checkpoint { every: 8 },
+        TapeStrategy::Checkpoint { every: 16 },
+    ];
+    println!(
+        "tape memory: {} x {N_STEPS} steps, backward with full gradient paths",
+        scen.label()
+    );
+
+    let samples: Vec<Sample> = strategies.iter().map(|&s| measure(&scen, s)).collect();
+    let full = &samples[0];
+
+    // every strategy must deliver the full tape's gradients, bit-for-bit
+    for s in &samples[1..] {
+        assert_eq!(s.grads.du0, full.grads.du0, "{}: du0 differs from full", s.label);
+        assert_eq!(s.grads.dnu, full.grads.dnu, "{}: dnu differs from full", s.label);
+    }
+    // acceptance: >= 4x peak-field reduction at every = 8
+    let ckpt8 = &samples[2];
+    assert!(
+        ckpt8.peak * 4 <= full.peak,
+        "ckpt(8) peak {} vs full {} — below the 4x acceptance bar",
+        ckpt8.peak,
+        full.peak
+    );
+    let reduction = full.peak as f64 / ckpt8.peak as f64;
+
+    let rows: Vec<Vec<String>> = samples
+        .iter()
+        .map(|s| {
+            vec![
+                s.label.clone(),
+                format!("{}", s.resident),
+                format!("{}", s.peak),
+                format!("{:.1}x", full.peak as f64 / s.peak as f64),
+                format!("{:.3}s", s.record_s),
+                format!("{:.3}s", s.backward_s),
+            ]
+        })
+        .collect();
+    print_table(
+        "rollout tape memory (f64 counts)",
+        &["strategy", "resident", "peak", "vs full", "record", "backward"],
+        &rows,
+    );
+    println!("ckpt(8) peak reduction: {reduction:.1}x (acceptance >= 4x)");
+
+    // repeatable wall-time samples for the report
+    let bench = Bench::new(0, 2);
+    let mut results = Vec::new();
+    for &strategy in &strategies {
+        results.push(bench.run(&format!("record+backward {}", strategy.label()), || {
+            measure(&scen, strategy).backward_s
+        }));
+    }
+    let memory = Json::Arr(
+        samples
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("strategy", Json::Str(s.label.clone())),
+                    ("resident_f64", Json::Num(s.resident as f64)),
+                    ("peak_f64", Json::Num(s.peak as f64)),
+                    ("record_s", Json::Num(s.record_s)),
+                    ("backward_s", Json::Num(s.backward_s)),
+                ])
+            })
+            .collect(),
+    );
+    write_report(
+        "BENCH_tape_checkpoint",
+        &results,
+        vec![
+            ("n_steps", Json::Num(N_STEPS as f64)),
+            ("scenario", Json::Str(scen.label())),
+            ("memory", memory),
+            ("ckpt8_peak_reduction_x", Json::Num(reduction)),
+        ],
+    );
+}

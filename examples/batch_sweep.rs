@@ -1,8 +1,14 @@
 //! Batched scenario execution: advance every registered scenario, then a
-//! cavity Reynolds-number sweep, concurrently on the worker pool — the
-//! multi-rollout substrate for simulation-coupled training loops.
+//! cavity Reynolds-number sweep, concurrently on the worker pool — and
+//! finally the gradient-producing variant: record checkpointed tapes for a
+//! scenario batch and backpropagate a terminal loss through every rollout
+//! in one call (the substrate for simulation-coupled training loops).
 
-use pict::coordinator::scenario::{builtin_scenarios, cavity_reynolds_sweep, BatchRunner};
+use pict::adjoint::{GradientPaths, TapeStrategy};
+use pict::coordinator::scenario::{
+    builtin_scenarios, cavity_reynolds_sweep, reduce_shared, BatchRunner,
+    TerminalKineticEnergy,
+};
 use pict::util::bench::print_table;
 use pict::util::cli::Args;
 
@@ -65,4 +71,49 @@ fn main() {
             r.label, r.max_divergence, r.p_iters
         );
     }
+
+    // 3) the gradient-producing variant: record a checkpointed tape per
+    // scenario and backpropagate a terminal kinetic-energy loss through
+    // each rollout, all on the same pool
+    let grad_steps = args.usize_or("grad-steps", 16).max(1);
+    let every = args.usize_or("every", 4).max(1);
+    println!("\ngradient batch: cavity sweep x {grad_steps} steps, tape ckpt({every})...");
+    let grad_sweep = cavity_reynolds_sweep(args.usize_or("grad-n", 12), &[100.0, 400.0]);
+    let runner = BatchRunner::new(grad_steps);
+    let loss = TerminalKineticEnergy { final_step: grad_steps - 1 };
+    let grads = runner.run_gradients(
+        &grad_sweep,
+        TapeStrategy::Checkpoint { every },
+        GradientPaths::FULL,
+        &loss,
+    );
+    let rows: Vec<Vec<String>> = grads
+        .iter()
+        .map(|r| {
+            let g0: f64 = r
+                .grads
+                .du0
+                .comp
+                .iter()
+                .map(|c| c.iter().map(|v| v * v).sum::<f64>())
+                .sum::<f64>()
+                .sqrt();
+            vec![
+                r.label.clone(),
+                format!("{:.3e}", r.loss),
+                format!("{g0:.3e}"),
+                format!("{:.3e}", r.grads.dnu),
+                format!("{}", r.grads.dsource.len()),
+                format!("{}", r.peak_resident_f64),
+                format!("{:.2}s", r.wall_s),
+            ]
+        })
+        .collect();
+    print_table(
+        "gradient batch (record + backward per scenario)",
+        &["scenario", "loss", "|dL/du0|", "dL/dnu", "dS steps", "peak f64", "wall"],
+        &rows,
+    );
+    let shared = reduce_shared(&grads);
+    println!("batch-reduced shared gradients: dnu = {:.4e}", shared.dnu);
 }

@@ -1,7 +1,7 @@
 //! Quickstart: build a mesh, run a few PISO steps, differentiate through
 //! them — the smallest end-to-end tour of the PICT API.
 
-use pict::adjoint::{rollout_backward, GradientPaths, RolloutTape};
+use pict::adjoint::{rollout_backward, GradientPaths, Tape, TapeStrategy};
 use pict::mesh::{gen, VectorField};
 use pict::piso::{PisoConfig, PisoSolver, State};
 
@@ -27,22 +27,30 @@ fn main() {
     );
 
     // 5. differentiate: gradient of the kinetic energy after 3 more steps
-    //    with respect to the current velocity field
+    //    with respect to the current velocity field. TapeStrategy::Full
+    //    stores every step; Checkpoint { every } trades one recompute pass
+    //    for O(n/k + k) memory on long rollouts — same gradients either way.
     let ncells = solver.mesh.ncells;
-    let tape = RolloutTape::record(&mut solver, &mut state, 3, |_, _| {
+    let tape = Tape::record(&mut solver, &mut state, 3, TapeStrategy::Full, |_, _| {
         VectorField::zeros(ncells)
     });
-    let g = rollout_backward(&solver, &tape, GradientPaths::FULL, |step, st| {
-        let mut du = VectorField::zeros(ncells);
-        if step == 2 {
-            for c in 0..2 {
-                for i in 0..ncells {
-                    du.comp[c][i] = 2.0 * st.u.comp[c][i]; // d(Σu²)/du
+    let g = rollout_backward(
+        &mut solver,
+        &tape,
+        GradientPaths::FULL,
+        |_, _| VectorField::zeros(ncells),
+        |step, st| {
+            let mut du = VectorField::zeros(ncells);
+            if step == 2 {
+                for c in 0..2 {
+                    for i in 0..ncells {
+                        du.comp[c][i] = 2.0 * st.u.comp[c][i]; // d(Σu²)/du
+                    }
                 }
             }
-        }
-        (du, vec![0.0; ncells])
-    });
+            (du, vec![0.0; ncells])
+        },
+    );
     let gnorm: f64 =
         (0..2).map(|c| g.du0.comp[c].iter().map(|v| v * v).sum::<f64>()).sum::<f64>().sqrt();
     println!("|dE/du0| = {gnorm:.4e} — gradients flow through the full solver");

@@ -12,6 +12,11 @@
 //! with both solves skipped, the `J_none` bypass paths of eq. (8) still
 //! deliver per-cell gradients from output to input.
 //!
+//! Multi-step rollouts record a [`Tape`] whose memory strategy is
+//! selectable ([`TapeStrategy`]): eager full-field storage, or O(n/k + k)
+//! checkpointing that re-steps each segment during the backward sweep
+//! (bit-for-bit equal gradients; see [`tape`]).
+//!
 //! Omitted (as in the paper, A.29/A.41): gradients of the non-orthogonal
 //! deferred-correction terms and of the mesh transformation metrics. The
 //! advective-outflow boundary update is treated as an external state
@@ -20,6 +25,8 @@
 pub mod ops;
 pub mod rollout;
 pub mod step;
+pub mod tape;
 
-pub use rollout::{rollout_backward, RolloutTape};
+pub use rollout::{rollout_backward, RolloutGrads};
 pub use step::{backward_step, GradientPaths, StepGrads};
+pub use tape::{Tape, TapeBackwardStats, TapeStrategy};

@@ -1,59 +1,16 @@
 //! Multi-step rollout differentiation (paper eq. 5): run n PISO steps
-//! recording a tape per step, then backpropagate a terminal (and/or
+//! recording a [`Tape`](super::Tape), then backpropagate a terminal (and/or
 //! per-step) loss gradient through the whole rollout by chaining
-//! [`backward_step`], accumulating gradients for the initial state, the
-//! per-step sources (the NN training signal), viscosity, and boundary
-//! values.
+//! [`backward_step`](super::backward_step), accumulating gradients for the
+//! initial state, the per-step sources (the NN training signal), viscosity,
+//! and boundary values. The tape's memory strategy (eager vs checkpointed)
+//! lives in [`tape`](super::tape); this module owns the gradient bundle and
+//! the one-call convenience wrapper.
 
-use super::step::{backward_step, GradientPaths, StepGrads};
+use super::step::GradientPaths;
+use super::tape::Tape;
 use crate::mesh::VectorField;
-use crate::piso::{PisoSolver, State, StepRecord};
-
-/// Tape of a forward rollout.
-pub struct RolloutTape {
-    pub records: Vec<StepRecord>,
-    /// State after each step (states\[0\] = initial state).
-    pub states: Vec<State>,
-}
-
-impl RolloutTape {
-    /// Run `n` steps from `state`, recording each. `source_fn(step, state)`
-    /// supplies the per-step source (e.g. a corrector network's output).
-    pub fn record(
-        solver: &mut PisoSolver,
-        state: &mut State,
-        n: usize,
-        mut source_fn: impl FnMut(usize, &State) -> VectorField,
-    ) -> RolloutTape {
-        let mut records = Vec::with_capacity(n);
-        let mut states = Vec::with_capacity(n + 1);
-        states.push(state.clone());
-        for step in 0..n {
-            let src = source_fn(step, state);
-            let mut rec = empty_record();
-            solver.step(state, &src, Some(&mut rec));
-            records.push(rec);
-            states.push(state.clone());
-        }
-        RolloutTape { records, states }
-    }
-}
-
-pub(crate) fn empty_record() -> StepRecord {
-    StepRecord {
-        dt: 0.0,
-        u_n: VectorField::zeros(0),
-        p_in: vec![],
-        source: VectorField::zeros(0),
-        c_vals: vec![],
-        a_inv: vec![],
-        pmat_vals: vec![],
-        rhs_base: VectorField::zeros(0),
-        grad_p_in: VectorField::zeros(0),
-        u_star: VectorField::zeros(0),
-        correctors: vec![],
-    }
-}
+use crate::piso::{PisoSolver, State};
 
 /// Accumulated gradients of a rollout.
 pub struct RolloutGrads {
@@ -69,73 +26,28 @@ pub struct RolloutGrads {
     pub dbc: Vec<Vec<[f64; 3]>>,
 }
 
-/// Backpropagate through the tape. `loss_grad(step, state)` returns the
-/// direct per-step cotangent (∂L/∂u_t, ∂L/∂p_t) for the state *after* step
-/// `step` (1-based states; called with `step` in `0..n` for `states[step+1]`);
-/// return zero fields for steps without loss.
+/// Backpropagate through a recorded tape — convenience wrapper over
+/// [`Tape::backward`]. `source_fn` must be the function the tape was
+/// recorded with (re-invoked for checkpointed tapes); `loss_grad(step,
+/// state)` returns the direct per-step cotangent (∂L/∂u_t, ∂L/∂p_t) for the
+/// state *after* step `step` (called with `step` in `0..n`); return zero
+/// fields for steps without loss.
 pub fn rollout_backward(
-    solver: &PisoSolver,
-    tape: &RolloutTape,
+    solver: &mut PisoSolver,
+    tape: &Tape,
     paths: GradientPaths,
-    mut loss_grad: impl FnMut(usize, &State) -> (VectorField, Vec<f64>),
+    source_fn: impl FnMut(usize, &State) -> VectorField,
+    loss_grad: impl FnMut(usize, &State) -> (VectorField, Vec<f64>),
 ) -> RolloutGrads {
-    let n = tape.records.len();
-    let ncells = solver.mesh.ncells;
-    let mut du = VectorField::zeros(ncells);
-    let mut dp = vec![0.0; ncells];
-    let mut dsource = Vec::with_capacity(n);
-    let mut dnu = 0.0;
-    let mut dbc: Vec<Vec<[f64; 3]>> =
-        solver.mesh.bc_values.iter().map(|b| vec![[0.0; 3]; b.vel.len()]).collect();
-
-    for step in (0..n).rev() {
-        // add the direct loss cotangent on the post-step state
-        let (lu, lp) = loss_grad(step, &tape.states[step + 1]);
-        du.axpy(1.0, &lu);
-        for c in 0..ncells {
-            dp[c] += lp[c];
-        }
-        let g: StepGrads = backward_step(solver, &tape.records[step], &du, &dp, paths);
-        du = g.du_n;
-        dp = g.dp_in;
-        dsource.push(g.dsource);
-        dnu += g.dnu;
-        for (acc, inc) in dbc.iter_mut().zip(&g.dbc) {
-            for (a, b) in acc.iter_mut().zip(inc) {
-                for c in 0..3 {
-                    a[c] += b[c];
-                }
-            }
-        }
-    }
-    dsource.reverse();
-    RolloutGrads { du0: du, dp0: dp, dsource, dnu, dbc }
+    tape.backward(solver, paths, source_fn, loss_grad)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adjoint::TapeStrategy;
     use crate::mesh::gen;
     use crate::piso::PisoConfig;
-
-    #[test]
-    fn tape_records_n_steps_and_states() {
-        let mesh = gen::periodic_box2d(6, 6, 1.0, 1.0);
-        let mut solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.02, ..Default::default() }, 0.05);
-        let mut state = State::zeros(&solver.mesh);
-        for (i, c) in solver.mesh.centers.iter().enumerate() {
-            state.u.comp[0][i] = (6.28 * c[1]).sin();
-        }
-        let ncells = solver.mesh.ncells;
-        let tape = RolloutTape::record(&mut solver, &mut state, 3, |_, _| {
-            VectorField::zeros(ncells)
-        });
-        assert_eq!(tape.records.len(), 3);
-        assert_eq!(tape.states.len(), 4);
-        // final tape state matches the advanced state
-        assert_eq!(tape.states[3].u, state.u);
-    }
 
     #[test]
     fn rollout_backward_accumulates_per_step_sources() {
@@ -147,16 +59,23 @@ mod tests {
             state.u.comp[0][i] = (6.28 * c[1]).sin() * 0.4;
         }
         let ncells = solver.mesh.ncells;
-        let tape =
-            RolloutTape::record(&mut solver, &mut state, 2, |_, _| VectorField::zeros(ncells));
-        // loss only on the last state: L = Σ u_x
-        let g = rollout_backward(&solver, &tape, GradientPaths::FULL, |step, _| {
-            let mut du = VectorField::zeros(ncells);
-            if step == 1 {
-                du.comp[0].iter_mut().for_each(|v| *v = 1.0);
-            }
-            (du, vec![0.0; ncells])
+        let tape = Tape::record(&mut solver, &mut state, 2, TapeStrategy::Full, |_, _| {
+            VectorField::zeros(ncells)
         });
+        // loss only on the last state: L = Σ u_x
+        let g = rollout_backward(
+            &mut solver,
+            &tape,
+            GradientPaths::FULL,
+            |_, _| VectorField::zeros(ncells),
+            |step, _| {
+                let mut du = VectorField::zeros(ncells);
+                if step == 1 {
+                    du.comp[0].iter_mut().for_each(|v| *v = 1.0);
+                }
+                (du, vec![0.0; ncells])
+            },
+        );
         assert_eq!(g.dsource.len(), 2);
         let n0: f64 = g.dsource[0].comp[0].iter().map(|v| v.abs()).sum();
         let n1: f64 = g.dsource[1].comp[0].iter().map(|v| v.abs()).sum();

@@ -61,6 +61,41 @@ impl StepGrads {
     }
 }
 
+/// Panic with a clear message if the record's buffers don't match the
+/// solver's system sizes (an empty or foreign record would otherwise die
+/// deep in the sweep with a bare index panic).
+fn validate_record(solver: &PisoSolver, rec: &StepRecord, du_out: &VectorField, dp_out: &[f64]) {
+    let n = solver.mesh.ncells;
+    let check = |what: &str, got: usize, want: usize| {
+        assert!(
+            got == want,
+            "backward_step: StepRecord {what} has {got} entries, solver expects {want} \
+             (was the record filled by PisoSolver::step on this mesh?)"
+        );
+    };
+    assert!(
+        rec.dt > 0.0,
+        "backward_step: StepRecord.dt = {} — the record was never filled by a forward step",
+        rec.dt
+    );
+    check("c_vals", rec.c_vals.len(), solver.c.nnz());
+    check("pmat_vals", rec.pmat_vals.len(), solver.pmat.nnz());
+    check("a_inv", rec.a_inv.len(), n);
+    check("u_star", rec.u_star.ncells(), n);
+    check("u_n", rec.u_n.ncells(), n);
+    check("p_in", rec.p_in.len(), n);
+    check("source", rec.source.ncells(), n);
+    check("rhs_base", rec.rhs_base.ncells(), n);
+    check("grad_p_in", rec.grad_p_in.ncells(), n);
+    for (r, cr) in rec.correctors.iter().enumerate() {
+        check(&format!("correctors[{r}].u_in"), cr.u_in.ncells(), n);
+        check(&format!("correctors[{r}].h"), cr.h.ncells(), n);
+        check(&format!("correctors[{r}].p"), cr.p.len(), n);
+    }
+    check("cotangent du_out", du_out.ncells(), n);
+    check("cotangent dp_out", dp_out.len(), n);
+}
+
 /// Backpropagate `(du_out, dp_out)` through the recorded PISO step.
 pub fn backward_step(
     solver: &PisoSolver,
@@ -69,6 +104,7 @@ pub fn backward_step(
     dp_out: &[f64],
     paths: GradientPaths,
 ) -> StepGrads {
+    validate_record(solver, rec, du_out, dp_out);
     let mesh = &solver.mesh;
     // the adjoint's transposed solves run on the same pool as the forward
     // step: reuse the solver's context
@@ -254,22 +290,6 @@ mod tests {
     use crate::mesh::gen;
     use crate::piso::{PisoConfig, State};
 
-    fn empty_record() -> StepRecord {
-        StepRecord {
-            dt: 0.0,
-            u_n: VectorField::zeros(0),
-            p_in: vec![],
-            source: VectorField::zeros(0),
-            c_vals: vec![],
-            a_inv: vec![],
-            pmat_vals: vec![],
-            rhs_base: VectorField::zeros(0),
-            grad_p_in: VectorField::zeros(0),
-            u_star: VectorField::zeros(0),
-            correctors: vec![],
-        }
-    }
-
     /// Backward step runs and produces finite gradients for all paths.
     #[test]
     fn backward_produces_finite_grads() {
@@ -285,7 +305,7 @@ mod tests {
             state.u.comp[1][i] = (6.28 * c[0]).sin() * 0.3;
         }
         let src = VectorField::zeros(solver.mesh.ncells);
-        let mut rec = empty_record();
+        let mut rec = StepRecord::empty();
         solver.step(&mut state, &src, Some(&mut rec));
         let du_out = {
             let mut f = VectorField::zeros(solver.mesh.ncells);
@@ -308,5 +328,30 @@ mod tests {
     fn path_labels() {
         assert_eq!(GradientPaths::FULL.label(), "Adv+P");
         assert_eq!(GradientPaths::NONE.label(), "none");
+    }
+
+    #[test]
+    #[should_panic(expected = "never filled by a forward step")]
+    fn empty_record_is_rejected_with_clear_error() {
+        let mesh = gen::periodic_box2d(4, 4, 1.0, 1.0);
+        let solver = PisoSolver::new(mesh, PisoConfig::default(), 0.01);
+        let du = VectorField::zeros(solver.mesh.ncells);
+        let dp = vec![0.0; solver.mesh.ncells];
+        backward_step(&solver, &StepRecord::empty(), &du, &dp, GradientPaths::NONE);
+    }
+
+    #[test]
+    #[should_panic(expected = "StepRecord a_inv")]
+    fn truncated_record_is_rejected_with_clear_error() {
+        let mesh = gen::periodic_box2d(4, 4, 1.0, 1.0);
+        let mut solver = PisoSolver::new(mesh, PisoConfig::default(), 0.01);
+        let mut state = State::zeros(&solver.mesh);
+        let src = VectorField::zeros(solver.mesh.ncells);
+        let mut rec = StepRecord::empty();
+        solver.step(&mut state, &src, Some(&mut rec));
+        rec.a_inv.pop();
+        let du = VectorField::zeros(solver.mesh.ncells);
+        let dp = vec![0.0; solver.mesh.ncells];
+        backward_step(&solver, &rec, &du, &dp, GradientPaths::NONE);
     }
 }

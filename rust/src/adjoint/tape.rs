@@ -1,0 +1,458 @@
+//! Rollout tapes with selectable memory strategy.
+//!
+//! A [`Tape`] records an `n`-step PISO rollout for the backward sweep.
+//! [`TapeStrategy::Full`] keeps every [`StepRecord`] plus every post-step
+//! [`State`] — O(n) full-field memory, the limiter on long 3D rollouts.
+//! [`TapeStrategy::Checkpoint`] keeps a full [`State`] (and boundary-value
+//! snapshot) only every `every` steps and rematerializes the intermediate
+//! records during [`Tape::backward`] by re-stepping from the nearest
+//! checkpoint — O(n/k + k) fields resident at peak. Forward stepping is
+//! deterministic (all Krylov warm starts and the advective-outflow update
+//! derive from the checkpointed state and boundary values), so the
+//! rematerialized records — and therefore the gradients — are bit-for-bit
+//! identical to the full tape's.
+
+use super::rollout::RolloutGrads;
+use super::step::{backward_step, GradientPaths};
+use crate::mesh::{BcValues, VectorField};
+use crate::piso::{PisoSolver, State, StepRecord};
+
+/// How much of the rollout a [`Tape`] keeps resident.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TapeStrategy {
+    /// Eager: every step record and state is stored (O(n) fields).
+    Full,
+    /// Store a state snapshot every `every` steps; recompute the step
+    /// records segment-by-segment during the backward sweep (O(n/k + k)
+    /// fields, one extra forward pass of compute).
+    Checkpoint { every: usize },
+}
+
+impl TapeStrategy {
+    /// Short label for tables and reports (`full`, `ckpt(8)`).
+    pub fn label(&self) -> String {
+        match self {
+            TapeStrategy::Full => "full".to_string(),
+            TapeStrategy::Checkpoint { every } => format!("ckpt({every})"),
+        }
+    }
+
+    /// Segment length for an `n`-step rollout under this strategy.
+    pub fn segment(&self, n: usize) -> usize {
+        match *self {
+            TapeStrategy::Full => n.max(1),
+            TapeStrategy::Checkpoint { every } => {
+                assert!(every >= 1, "TapeStrategy::Checkpoint requires every >= 1");
+                every
+            }
+        }
+    }
+}
+
+/// Peak-memory diagnostics of one backward sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct TapeBackwardStats {
+    /// Largest number of *tape* f64 values resident at any point of the
+    /// sweep: the stored fields plus (checkpoint mode) the largest
+    /// rematerialized segment. Excludes the gradient outputs being
+    /// accumulated (notably the n per-step `dsource` fields of
+    /// [`RolloutGrads`]) — those are the caller's requested artifact and
+    /// identical under every strategy.
+    pub peak_resident_f64: usize,
+}
+
+/// Tape of a forward rollout under a [`TapeStrategy`].
+pub struct Tape {
+    strategy: TapeStrategy,
+    n: usize,
+    /// `Full`: one record per step. `Checkpoint`: empty (rematerialized).
+    records: Vec<StepRecord>,
+    /// `Full`: states\[s\] = state after step s (n+1 entries).
+    /// `Checkpoint`: the checkpoint states, aligned with `checkpoint_steps`.
+    states: Vec<State>,
+    /// `Checkpoint`: the step index each entry of `states` precedes
+    /// (0, k, 2k, …).
+    checkpoint_steps: Vec<usize>,
+    /// `Checkpoint`: boundary values at each checkpoint (the advective
+    /// outflow update mutates them between steps, so re-stepping needs the
+    /// values as they were).
+    bc_snaps: Vec<Vec<BcValues>>,
+    /// `Checkpoint`: state after the last step (`Full` reads `states[n]`
+    /// instead of storing a second copy).
+    final_state: Option<State>,
+}
+
+impl Tape {
+    /// Run `n` steps from `state`, recording under `strategy`.
+    /// `source_fn(step, state)` supplies the per-step source (e.g. a
+    /// corrector network's output). With `Checkpoint`, `source_fn` must be
+    /// a pure function of `(step, state)` — it is called again during
+    /// [`Tape::backward`] to rematerialize the skipped records.
+    pub fn record(
+        solver: &mut PisoSolver,
+        state: &mut State,
+        n: usize,
+        strategy: TapeStrategy,
+        mut source_fn: impl FnMut(usize, &State) -> VectorField,
+    ) -> Tape {
+        let mut tape = Tape {
+            strategy,
+            n,
+            records: Vec::new(),
+            states: Vec::new(),
+            checkpoint_steps: Vec::new(),
+            bc_snaps: Vec::new(),
+            final_state: None,
+        };
+        match strategy {
+            TapeStrategy::Full => {
+                tape.records.reserve(n);
+                tape.states.reserve(n + 1);
+                tape.states.push(state.clone());
+                for step in 0..n {
+                    let src = source_fn(step, state);
+                    let mut rec = StepRecord::empty();
+                    solver.step(state, &src, Some(&mut rec));
+                    tape.records.push(rec);
+                    tape.states.push(state.clone());
+                }
+            }
+            TapeStrategy::Checkpoint { every } => {
+                assert!(every >= 1, "TapeStrategy::Checkpoint requires every >= 1");
+                for step in 0..n {
+                    if step % every == 0 {
+                        tape.checkpoint_steps.push(step);
+                        tape.states.push(state.clone());
+                        tape.bc_snaps.push(solver.mesh.bc_values.clone());
+                    }
+                    let src = source_fn(step, state);
+                    solver.step(state, &src, None);
+                }
+                tape.final_state = Some(state.clone());
+            }
+        }
+        tape
+    }
+
+    /// Number of steps recorded.
+    pub fn steps(&self) -> usize {
+        self.n
+    }
+
+    pub fn strategy(&self) -> TapeStrategy {
+        self.strategy
+    }
+
+    /// State after the last recorded step.
+    pub fn final_state(&self) -> &State {
+        self.final_state
+            .as_ref()
+            .or_else(|| self.states.last())
+            .expect("Tape::record stores at least the initial state")
+    }
+
+    /// Number of f64 values the tape keeps resident between record and
+    /// backward (excludes the per-segment rematerialization buffers; see
+    /// [`TapeBackwardStats::peak_resident_f64`] for the sweep peak).
+    pub fn resident_f64(&self) -> usize {
+        let bc: usize = self
+            .bc_snaps
+            .iter()
+            .map(|snap| snap.iter().map(|b| 3 * b.vel.len()).sum::<usize>())
+            .sum();
+        self.records.iter().map(|r| r.len_f64()).sum::<usize>()
+            + self.states.iter().map(|s| s.len_f64()).sum::<usize>()
+            + self.final_state.as_ref().map_or(0, |s| s.len_f64())
+            + bc
+    }
+
+    /// Backpropagate through the rollout. `loss_grad(step, state)` returns
+    /// the direct per-step cotangent (∂L/∂u, ∂L/∂p) on the state *after*
+    /// step `step` (called once for every `step` in `0..n`, last step
+    /// first); return zero fields for steps without loss. `source_fn` must
+    /// be the function passed to [`Tape::record`] (only called under
+    /// `Checkpoint`, to rematerialize). The solver is only mutated for
+    /// checkpoint re-stepping and is left at its post-forward boundary
+    /// state either way.
+    pub fn backward(
+        &self,
+        solver: &mut PisoSolver,
+        paths: GradientPaths,
+        source_fn: impl FnMut(usize, &State) -> VectorField,
+        loss_grad: impl FnMut(usize, &State) -> (VectorField, Vec<f64>),
+    ) -> RolloutGrads {
+        self.backward_with_stats(solver, paths, source_fn, loss_grad).0
+    }
+
+    /// [`Tape::backward`] plus peak-memory diagnostics.
+    pub fn backward_with_stats(
+        &self,
+        solver: &mut PisoSolver,
+        paths: GradientPaths,
+        mut source_fn: impl FnMut(usize, &State) -> VectorField,
+        mut loss_grad: impl FnMut(usize, &State) -> (VectorField, Vec<f64>),
+    ) -> (RolloutGrads, TapeBackwardStats) {
+        let mut acc = SweepAcc::new(solver);
+        let mut peak_segment = 0usize;
+        match self.strategy {
+            TapeStrategy::Full => {
+                for step in (0..self.n).rev() {
+                    acc.sweep_step(
+                        solver,
+                        &self.records[step],
+                        &self.states[step + 1],
+                        step,
+                        paths,
+                        &mut loss_grad,
+                    );
+                }
+            }
+            TapeStrategy::Checkpoint { .. } => {
+                // NOTE: coordinator::engine::episode carries a parallel copy
+                // of this segment-replay scheme (it must also rematerialize
+                // CNN activation tapes and couple the network-input gradient
+                // into the sweep); keep the bc snapshot/restore order in sync.
+                //
+                // re-stepping advances the outflow boundary values again;
+                // save them so the solver ends where the forward left it
+                let final_bc = solver.mesh.bc_values.clone();
+                for ci in (0..self.checkpoint_steps.len()).rev() {
+                    let seg_start = self.checkpoint_steps[ci];
+                    let seg_end = self
+                        .checkpoint_steps
+                        .get(ci + 1)
+                        .copied()
+                        .unwrap_or(self.n);
+                    solver.mesh.bc_values = self.bc_snaps[ci].clone();
+                    let mut st = self.states[ci].clone();
+                    let seg_len = seg_end - seg_start;
+                    let mut recs = Vec::with_capacity(seg_len);
+                    let mut states_after = Vec::with_capacity(seg_len);
+                    for step in seg_start..seg_end {
+                        let src = source_fn(step, &st);
+                        let mut rec = StepRecord::empty();
+                        solver.step(&mut st, &src, Some(&mut rec));
+                        recs.push(rec);
+                        states_after.push(st.clone());
+                    }
+                    // the full-tape backward runs every step's adjoint with
+                    // the solver at its post-forward boundary state; match
+                    // it (the dnu/dbc boundary ops read bc values)
+                    solver.mesh.bc_values = final_bc.clone();
+                    let seg_f64 = recs.iter().map(|r| r.len_f64()).sum::<usize>()
+                        + states_after.iter().map(|s| s.len_f64()).sum::<usize>();
+                    peak_segment = peak_segment.max(seg_f64);
+                    for (i, step) in (seg_start..seg_end).enumerate().rev() {
+                        acc.sweep_step(
+                            solver,
+                            &recs[i],
+                            &states_after[i],
+                            step,
+                            paths,
+                            &mut loss_grad,
+                        );
+                    }
+                }
+                solver.mesh.bc_values = final_bc;
+            }
+        }
+        let stats = TapeBackwardStats {
+            peak_resident_f64: self.resident_f64() + peak_segment,
+        };
+        (acc.finish(), stats)
+    }
+}
+
+/// Running accumulator of the backward sweep (shared by both strategies so
+/// the chain of operations — and thus the bits — are identical).
+struct SweepAcc {
+    du: VectorField,
+    dp: Vec<f64>,
+    /// ∂L/∂S_t pushed in reverse step order.
+    dsource_rev: Vec<VectorField>,
+    dnu: f64,
+    dbc: Vec<Vec<[f64; 3]>>,
+}
+
+impl SweepAcc {
+    fn new(solver: &PisoSolver) -> SweepAcc {
+        let ncells = solver.mesh.ncells;
+        SweepAcc {
+            du: VectorField::zeros(ncells),
+            dp: vec![0.0; ncells],
+            dsource_rev: Vec::new(),
+            dnu: 0.0,
+            dbc: solver
+                .mesh
+                .bc_values
+                .iter()
+                .map(|b| vec![[0.0; 3]; b.vel.len()])
+                .collect(),
+        }
+    }
+
+    fn sweep_step(
+        &mut self,
+        solver: &PisoSolver,
+        rec: &StepRecord,
+        state_after: &State,
+        step: usize,
+        paths: GradientPaths,
+        loss_grad: &mut impl FnMut(usize, &State) -> (VectorField, Vec<f64>),
+    ) {
+        // add the direct loss cotangent on the post-step state
+        let (lu, lp) = loss_grad(step, state_after);
+        assert!(
+            lu.ncells() == self.du.ncells() && lp.len() == self.dp.len(),
+            "rollout backward: loss_grad returned cotangents sized ({}, {}) for a {}-cell mesh",
+            lu.ncells(),
+            lp.len(),
+            self.dp.len()
+        );
+        self.du.axpy(1.0, &lu);
+        for (d, l) in self.dp.iter_mut().zip(&lp) {
+            *d += l;
+        }
+        let g = backward_step(solver, rec, &self.du, &self.dp, paths);
+        self.du = g.du_n;
+        self.dp = g.dp_in;
+        self.dsource_rev.push(g.dsource);
+        self.dnu += g.dnu;
+        for (acc, inc) in self.dbc.iter_mut().zip(&g.dbc) {
+            for (a, b) in acc.iter_mut().zip(inc) {
+                for c in 0..3 {
+                    a[c] += b[c];
+                }
+            }
+        }
+    }
+
+    fn finish(mut self) -> RolloutGrads {
+        self.dsource_rev.reverse();
+        RolloutGrads {
+            du0: self.du,
+            dp0: self.dp,
+            dsource: self.dsource_rev,
+            dnu: self.dnu,
+            dbc: self.dbc,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::gen;
+    use crate::piso::PisoConfig;
+
+    fn tg_setup(n: usize) -> (PisoSolver, State) {
+        let mesh = gen::periodic_box2d(n, n, 1.0, 1.0);
+        let solver =
+            PisoSolver::new(mesh, PisoConfig { dt: 0.02, ..Default::default() }, 0.05);
+        let mut state = State::zeros(&solver.mesh);
+        for (i, c) in solver.mesh.centers.iter().enumerate() {
+            state.u.comp[0][i] = (6.28 * c[1]).sin();
+            state.u.comp[1][i] = -(6.28 * c[0]).sin() * 0.5;
+        }
+        (solver, state)
+    }
+
+    #[test]
+    fn full_tape_records_n_steps_and_final_state() {
+        let (mut solver, mut state) = tg_setup(6);
+        let ncells = solver.mesh.ncells;
+        let tape = Tape::record(&mut solver, &mut state, 3, TapeStrategy::Full, |_, _| {
+            VectorField::zeros(ncells)
+        });
+        assert_eq!(tape.steps(), 3);
+        assert_eq!(tape.final_state().u, state.u);
+        assert!(tape.resident_f64() > 0);
+    }
+
+    #[test]
+    fn checkpoint_tape_stores_a_fraction_of_the_fields() {
+        let (mut solver, state0) = tg_setup(6);
+        let ncells = solver.mesh.ncells;
+        let n = 12;
+        let mut s_full = state0.clone();
+        let full = Tape::record(&mut solver, &mut s_full, n, TapeStrategy::Full, |_, _| {
+            VectorField::zeros(ncells)
+        });
+        let mut s_chk = state0.clone();
+        let chk = Tape::record(
+            &mut solver,
+            &mut s_chk,
+            n,
+            TapeStrategy::Checkpoint { every: 4 },
+            |_, _| VectorField::zeros(ncells),
+        );
+        assert_eq!(s_full.u, s_chk.u, "strategies must not change the forward");
+        assert_eq!(chk.checkpoint_steps, vec![0, 4, 8]);
+        assert!(
+            chk.resident_f64() * 3 < full.resident_f64(),
+            "checkpoint {} vs full {}",
+            chk.resident_f64(),
+            full.resident_f64()
+        );
+    }
+
+    #[test]
+    fn checkpoint_backward_matches_full_bit_for_bit() {
+        // uneven final segment on purpose (n=7, every=3 -> 3+3+1)
+        let (mut solver, state0) = tg_setup(6);
+        let ncells = solver.mesh.ncells;
+        let n = 7;
+        let loss = |step: usize, st: &State| {
+            let mut du = VectorField::zeros(ncells);
+            if step == n - 1 {
+                du.comp[0].clone_from(&st.u.comp[0]);
+            }
+            (du, vec![0.0; ncells])
+        };
+        let mut s1 = state0.clone();
+        let full = Tape::record(&mut solver, &mut s1, n, TapeStrategy::Full, |_, _| {
+            VectorField::zeros(ncells)
+        });
+        let g_full = full.backward(
+            &mut solver,
+            GradientPaths::FULL,
+            |_, _| VectorField::zeros(ncells),
+            loss,
+        );
+        let mut s2 = state0.clone();
+        let chk = Tape::record(
+            &mut solver,
+            &mut s2,
+            n,
+            TapeStrategy::Checkpoint { every: 3 },
+            |_, _| VectorField::zeros(ncells),
+        );
+        let g_chk = chk.backward(
+            &mut solver,
+            GradientPaths::FULL,
+            |_, _| VectorField::zeros(ncells),
+            loss,
+        );
+        assert_eq!(g_full.du0, g_chk.du0);
+        assert_eq!(g_full.dp0, g_chk.dp0);
+        assert_eq!(g_full.dnu, g_chk.dnu);
+        assert_eq!(g_full.dsource.len(), g_chk.dsource.len());
+        for (a, b) in g_full.dsource.iter().zip(&g_chk.dsource) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "every >= 1")]
+    fn zero_checkpoint_interval_is_rejected() {
+        let (mut solver, mut state) = tg_setup(4);
+        let ncells = solver.mesh.ncells;
+        let _ = Tape::record(
+            &mut solver,
+            &mut state,
+            2,
+            TapeStrategy::Checkpoint { every: 0 },
+            |_, _| VectorField::zeros(ncells),
+        );
+    }
+}

@@ -1,0 +1,438 @@
+//! Scenario-driven training engine: one shared corrector network trained
+//! across a *batch* of registered scenarios per optimizer step, with
+//! checkpointed unrolled-episode tapes.
+//!
+//! This generalizes the single-flow corrector training of
+//! [`experiments::corrector2d`](super::experiments::corrector2d): each
+//! optimizer step runs one unrolled episode per scenario concurrently on the
+//! [`BatchRunner`]'s pool, sums the per-scenario parameter gradients
+//! (scenarios share the network), and takes one Adam step. Episode memory
+//! follows the episode's [`TapeStrategy`](crate::adjoint::TapeStrategy):
+//! under `Checkpoint { every }` the
+//! forward pass stores only every `every`-th state and the backward sweep
+//! rematerializes each segment — solver [`StepRecord`]s *and* CNN
+//! activation tapes — by re-stepping from the nearest checkpoint, so a
+//! length-n episode holds O(n/k + k) instead of O(n) full-field tapes while
+//! producing bit-for-bit the gradients of the eager episode (forward
+//! stepping and the network are deterministic).
+
+use crate::adjoint::backward_step;
+use crate::mesh::{BcValues, VectorField};
+use crate::nn::Cnn;
+use crate::piso::{PisoSolver, State, StepRecord};
+use crate::train::{mse_loss_grad, Adam, Optimizer};
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+
+use super::experiments::corrector2d::{corrector_net, net_input, Corrector2dCfg};
+use super::scenario::{BatchRunner, Scenario, ScenarioRun};
+
+/// Outcome of a batched corrector training run.
+pub struct BatchTrainResult {
+    pub net: Cnn,
+    /// Batch-mean episode loss per optimizer step.
+    pub losses: Vec<f64>,
+}
+
+/// One unrolled training episode against coarse-aligned reference frames,
+/// with tape memory governed by `cfg.strategy`: forward from
+/// `frames[start]`, per-step MSE loss vs `frames[start + t + 1]`, backward
+/// through solver and network. Returns `(mean loss, ∂L/∂params)`.
+pub fn episode(
+    solver: &mut PisoSolver,
+    net: &Cnn,
+    base_source: &VectorField,
+    frames: &[VectorField],
+    start: usize,
+    unroll: usize,
+    cfg: &Corrector2dCfg,
+) -> (f64, Vec<f64>) {
+    assert!(unroll >= 1, "episode: unroll must be at least 1 step");
+    assert!(
+        start + unroll < frames.len(),
+        "episode: start {start} + unroll {unroll} needs {} frames, have {}",
+        start + unroll + 1,
+        frames.len()
+    );
+    let ncells = solver.mesh.ncells;
+    let every = cfg.strategy.segment(unroll);
+
+    let mut state = State::zeros(&solver.mesh);
+    state.u = frames[start].clone();
+
+    // skeleton forward: store only the checkpoint states (+ boundary
+    // values, which the advective-outflow update advances). With a single
+    // segment (Full, or every >= unroll) the backward's rematerialization
+    // IS the forward, so no skeleton pass is needed at all.
+    //
+    // NOTE: this mirrors adjoint::Tape's Checkpoint backward (which cannot
+    // be reused directly: the sweep here must also rematerialize CNN
+    // activation tapes and add the network-input path to the state
+    // cotangent); keep the bc snapshot/restore order in sync with tape.rs.
+    let mut checkpoints: Vec<(usize, State, Vec<BcValues>)> =
+        vec![(0, state.clone(), solver.mesh.bc_values.clone())];
+    if every < unroll {
+        for t in 0..unroll {
+            if t % every == 0 && t > 0 {
+                checkpoints.push((t, state.clone(), solver.mesh.bc_values.clone()));
+            }
+            let src = source_for(solver, net, base_source, &state, cfg);
+            solver.step(&mut state, &src, None);
+        }
+    }
+    // with a skeleton pass the solver's boundary values have advanced to
+    // their end-of-episode state; each segment's backward_steps must see
+    // them there (like the eager episode's did), not mid-trajectory
+    let final_bc =
+        if every < unroll { Some(solver.mesh.bc_values.clone()) } else { None };
+
+    // backward: segments last-to-first; rematerialize records + CNN tapes
+    // per segment, then sweep it in reverse.
+    let mut total_loss = 0.0;
+    let mut dparams = vec![0.0; net.nparams()];
+    let mut du = VectorField::zeros(ncells);
+    let mut dp = vec![0.0; ncells];
+    for ci in (0..checkpoints.len()).rev() {
+        let (seg_start, cp_state, cp_bc) = &checkpoints[ci];
+        let seg_start = *seg_start;
+        let seg_end =
+            checkpoints.get(ci + 1).map(|c| c.0).unwrap_or(unroll);
+        solver.mesh.bc_values = cp_bc.clone();
+        let mut st = cp_state.clone();
+        let seg = seg_end - seg_start;
+        let mut recs = Vec::with_capacity(seg);
+        let mut inputs = Vec::with_capacity(seg);
+        let mut tapes = Vec::with_capacity(seg);
+        let mut sources = Vec::with_capacity(seg);
+        let mut states_after = Vec::with_capacity(seg);
+        for _t in seg_start..seg_end {
+            let input = net_input(&st.u);
+            let (out, tape) = net.forward(&input);
+            let mut s_theta = VectorField::zeros(ncells);
+            let mut src = base_source.clone();
+            for c in 0..2 {
+                for i in 0..ncells {
+                    let v = cfg.output_scale * out[c][i];
+                    s_theta.comp[c][i] = v;
+                    src.comp[c][i] += v;
+                }
+            }
+            let mut rec = StepRecord::empty();
+            solver.step(&mut st, &src, Some(&mut rec));
+            recs.push(rec);
+            inputs.push(input);
+            tapes.push(tape);
+            sources.push(s_theta);
+            states_after.push(st.clone());
+        }
+        if let Some(fb) = &final_bc {
+            solver.mesh.bc_values = fb.clone();
+        }
+        for (i, t) in (seg_start..seg_end).enumerate().rev() {
+            let (l, mut cot) = mse_loss_grad(2, &states_after[i].u, &frames[start + t + 1]);
+            total_loss += l;
+            cot.axpy(1.0, &du);
+            let g = backward_step(solver, &recs[i], &cot, &dp, cfg.paths);
+            // source gradient → CNN (with optional divergence modification)
+            let ds = if cfg.lambda_div > 0.0 {
+                crate::train::div_gradient_modification(
+                    &solver.ctx,
+                    &solver.mesh,
+                    &sources[i],
+                    &g.dsource,
+                    cfg.lambda_div,
+                )
+            } else {
+                g.dsource.clone()
+            };
+            let dout: Vec<Vec<f64>> = (0..2)
+                .map(|c| ds.comp[c].iter().map(|v| cfg.output_scale * v).collect())
+                .collect();
+            let (dpar, dins) = net.backward(&inputs[i], &tapes[i], &dout);
+            for (a, b) in dparams.iter_mut().zip(&dpar) {
+                *a += b;
+            }
+            // state gradient: solver path + network-input path
+            du = g.du_n;
+            for c in 0..2 {
+                for cell in 0..ncells {
+                    du.comp[c][cell] += dins[c][cell];
+                }
+            }
+            dp = g.dp_in;
+        }
+    }
+    (total_loss / unroll as f64, dparams)
+}
+
+/// The corrector source for one step: base forcing + scaled network output
+/// (activation tape discarded — used by the skeleton forward and
+/// evaluation, where no backward follows).
+fn source_for(
+    solver: &PisoSolver,
+    net: &Cnn,
+    base_source: &VectorField,
+    state: &State,
+    cfg: &Corrector2dCfg,
+) -> VectorField {
+    let ncells = solver.mesh.ncells;
+    let (out, _) = net.forward(&net_input(&state.u));
+    let mut src = base_source.clone();
+    for c in 0..2 {
+        for i in 0..ncells {
+            src.comp[c][i] += cfg.output_scale * out[c][i];
+        }
+    }
+    src
+}
+
+/// Train one shared corrector across a scenario batch: per optimizer step,
+/// one episode per scenario runs concurrently on the runner's pool (each
+/// scenario against its own reference frames), the parameter gradients are
+/// summed, and a single Adam step updates the shared network. All
+/// scenarios must share the coarse mesh (the network's conv tables are
+/// built on it); pair with
+/// [`cavity_reynolds_sweep`](super::scenario::cavity_reynolds_sweep)-style
+/// sweeps. Results are independent of the pool width (episodes only read
+/// shared state; the reduction is in scenario order).
+pub fn train_corrector_batch(
+    runner: &BatchRunner,
+    scenarios: &[Box<dyn Scenario>],
+    frames: &[Vec<VectorField>],
+    cfg: &Corrector2dCfg,
+) -> BatchTrainResult {
+    assert_eq!(
+        scenarios.len(),
+        frames.len(),
+        "one reference-frame sequence per scenario"
+    );
+    assert!(!scenarios.is_empty(), "empty scenario batch");
+    let ctx = runner.ctx();
+    let runs: Vec<Mutex<ScenarioRun>> = scenarios
+        .iter()
+        .map(|s| {
+            let mut r = s.build();
+            r.solver.ctx = ctx.clone();
+            Mutex::new(r)
+        })
+        .collect();
+    {
+        // the shared network's conv tables are built on scenario 0's mesh:
+        // every scenario must provide the *same* mesh geometry, not merely
+        // the same cell count (a periodic box and a cavity of equal size
+        // would silently convolve with the wrong neighbor tables)
+        let first = runs[0].lock().unwrap();
+        for r in &runs[1..] {
+            let other = r.lock().unwrap();
+            assert!(
+                other.solver.mesh.ncells == first.solver.mesh.ncells
+                    && other.solver.mesh.dim == first.solver.mesh.dim
+                    && other.solver.mesh.centers == first.solver.mesh.centers,
+                "batched scenarios must share the coarse mesh ({} vs {})",
+                other.label,
+                first.label
+            );
+        }
+    }
+
+    let mut net = corrector_net(&runs[0].lock().unwrap().solver.mesh, cfg.seed);
+    let mut opt = Adam::new(cfg.lr, net.nparams());
+    let mut rng = Rng::new(cfg.seed ^ 0x55);
+    let mut losses = Vec::new();
+    let nscen = scenarios.len();
+    for &unroll in &cfg.curriculum {
+        for _ in 0..cfg.opt_steps_per_stage {
+            // per-scenario episode starts (drawn serially: deterministic
+            // regardless of pool width)
+            let starts: Vec<usize> = (0..nscen)
+                .map(|i| rng.below(frames[i].len().saturating_sub(unroll + 1)))
+                .collect();
+            let slots: Vec<Mutex<Option<(f64, Vec<f64>)>>> =
+                (0..nscen).map(|_| Mutex::new(None)).collect();
+            {
+                let net_ref = &net;
+                let cfg_ref = cfg;
+                let frames_ref = frames;
+                let starts_ref = &starts;
+                ctx.run_tasks(nscen, |i| {
+                    let mut run = runs[i].lock().unwrap();
+                    let ScenarioRun { ref mut solver, ref source, .. } = *run;
+                    let got = episode(
+                        solver,
+                        net_ref,
+                        source,
+                        &frames_ref[i],
+                        starts_ref[i],
+                        unroll,
+                        cfg_ref,
+                    );
+                    *slots[i].lock().unwrap() = Some(got);
+                });
+            }
+            // reduce in scenario order (deterministic sum)
+            let mut batch_loss = 0.0;
+            let mut dparams = vec![0.0; net.nparams()];
+            for slot in &slots {
+                let (l, dp) = slot.lock().unwrap().take().expect("episode skipped");
+                batch_loss += l;
+                for (a, b) in dparams.iter_mut().zip(&dp) {
+                    *a += b;
+                }
+            }
+            let mut params = std::mem::take(&mut net.params);
+            opt.step(&mut params, &dparams);
+            net.params = params;
+            losses.push(batch_loss / nscen as f64);
+        }
+    }
+    BatchTrainResult { net, losses }
+}
+
+/// Generate coarse-aligned reference frames for every fine scenario of a
+/// batch, concurrently on the runner's pool: each fine scenario is built
+/// from the registry, warmed up, and resampled onto `coarse_mesh` every
+/// `t_ratio` steps (see
+/// [`make_reference_frames`](super::experiments::corrector2d::make_reference_frames)).
+pub fn scenario_reference_frames(
+    runner: &BatchRunner,
+    fine: &[Box<dyn Scenario>],
+    coarse_mesh: &crate::mesh::Mesh,
+    cfg: &Corrector2dCfg,
+) -> Vec<Vec<VectorField>> {
+    use super::experiments::corrector2d::make_reference_frames;
+    let ctx = runner.ctx();
+    let slots: Vec<Mutex<Option<Vec<VectorField>>>> =
+        (0..fine.len()).map(|_| Mutex::new(None)).collect();
+    ctx.run_tasks(fine.len(), |i| {
+        let mut run = fine[i].build();
+        run.solver.ctx = ctx.clone();
+        let frames = make_reference_frames(&mut run.solver, &mut run.state, coarse_mesh, cfg);
+        *slots[i].lock().unwrap() = Some(frames);
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("frame generation skipped a scenario"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adjoint::{GradientPaths, TapeStrategy};
+    use crate::coordinator::scenario::TaylorGreen;
+
+    fn tiny_cfg(strategy: TapeStrategy) -> Corrector2dCfg {
+        Corrector2dCfg {
+            t_ratio: 1,
+            n_frames: 8,
+            fine_warmup: 2,
+            curriculum: vec![3],
+            opt_steps_per_stage: 2,
+            lr: 1e-3,
+            paths: GradientPaths::NONE,
+            lambda_div: 0.0,
+            output_scale: 0.05,
+            strategy,
+            seed: 0xE2E,
+        }
+    }
+
+    /// Checkpointed episodes must reproduce the eager episode's loss and
+    /// parameter gradients exactly (re-stepping is deterministic).
+    #[test]
+    fn checkpointed_episode_matches_full_bit_for_bit() {
+        let scen = TaylorGreen { n: 8, nu: 0.02, dt: 0.02 };
+        let cfg_full = tiny_cfg(TapeStrategy::Full);
+        let cfg_chk = tiny_cfg(TapeStrategy::Checkpoint { every: 2 });
+        // reference frames: a short rollout of the same flow
+        let mut run = scen.build();
+        let mut frames = vec![run.state.u.clone()];
+        for _ in 0..6 {
+            let src = run.source.clone();
+            run.solver.step(&mut run.state, &src, None);
+            frames.push(run.state.u.clone());
+        }
+        let net = corrector_net(&run.solver.mesh, 7);
+        let mut s1 = scen.build();
+        let (l_full, g_full) =
+            episode(&mut s1.solver, &net, &s1.source, &frames, 0, 5, &cfg_full);
+        let mut s2 = scen.build();
+        let (l_chk, g_chk) =
+            episode(&mut s2.solver, &net, &s2.source, &frames, 0, 5, &cfg_chk);
+        assert_eq!(l_full, l_chk);
+        assert_eq!(g_full, g_chk);
+    }
+
+    /// The same equality on an outflow mesh: the episode's bc
+    /// snapshot/restore copy (see the sync note in `episode`) must keep
+    /// matching `adjoint::Tape`'s on the one mesh class it exists for.
+    #[test]
+    fn checkpointed_episode_matches_full_with_outflow_bcs() {
+        use crate::coordinator::scenario::VortexStreet;
+        let scen = VortexStreet {
+            nx: [4, 3, 6],
+            ny: [4, 3, 4],
+            re: 200.0,
+            dt: 0.05,
+            target_cfl: 0.8,
+        };
+        let mut run = scen.build();
+        let mut frames = vec![run.state.u.clone()];
+        for _ in 0..5 {
+            let src = run.source.clone();
+            run.solver.step(&mut run.state, &src, None);
+            frames.push(run.state.u.clone());
+        }
+        let net = corrector_net(&run.solver.mesh, 11);
+        let mut s1 = scen.build();
+        let (l_full, g_full) = episode(
+            &mut s1.solver,
+            &net,
+            &s1.source,
+            &frames,
+            0,
+            4,
+            &tiny_cfg(TapeStrategy::Full),
+        );
+        let mut s2 = scen.build();
+        let (l_chk, g_chk) = episode(
+            &mut s2.solver,
+            &net,
+            &s2.source,
+            &frames,
+            0,
+            4,
+            &tiny_cfg(TapeStrategy::Checkpoint { every: 2 }),
+        );
+        assert_eq!(l_full, l_chk);
+        assert_eq!(g_full, g_chk);
+    }
+
+    /// A 1-scenario batch equals two optimizer steps of plain episodes, and
+    /// batch training across 2 scenarios runs and returns finite losses.
+    #[test]
+    fn batch_training_runs_across_two_scenarios() {
+        let scens: Vec<Box<dyn Scenario>> = vec![
+            Box::new(TaylorGreen { n: 8, nu: 0.02, dt: 0.02 }),
+            Box::new(TaylorGreen { n: 8, nu: 0.05, dt: 0.02 }),
+        ];
+        let frames: Vec<Vec<VectorField>> = scens
+            .iter()
+            .map(|s| {
+                let mut run = s.build();
+                let mut fs = vec![run.state.u.clone()];
+                for _ in 0..6 {
+                    let src = run.source.clone();
+                    run.solver.step(&mut run.state, &src, None);
+                    fs.push(run.state.u.clone());
+                }
+                fs
+            })
+            .collect();
+        let cfg = tiny_cfg(TapeStrategy::Checkpoint { every: 2 });
+        let runner = BatchRunner::new(0).with_threads(2);
+        let result = train_corrector_batch(&runner, &scens, &frames, &cfg);
+        assert_eq!(result.losses.len(), 2);
+        assert!(result.losses.iter().all(|l| l.is_finite()));
+    }
+}

@@ -5,8 +5,8 @@
 //! by backpropagating an unrolled MSE loss through the PISO solver and the
 //! network (curriculum over the unroll length as in the paper).
 
-use crate::adjoint::{backward_step, GradientPaths};
-use crate::adjoint::rollout::empty_record;
+use crate::adjoint::{GradientPaths, TapeStrategy};
+use crate::coordinator::engine;
 use crate::fvm;
 use crate::mesh::{field, Mesh, VectorField};
 use crate::nn::{Cnn, LayerCfg};
@@ -37,6 +37,9 @@ pub struct Corrector2dCfg {
     /// corrections small relative to the dynamics; the paper clamps the
     /// forcing instead).
     pub output_scale: f64,
+    /// Episode tape memory: eager, or checkpointed with segment recompute
+    /// (bit-for-bit equal gradients; enables long unrolls).
+    pub strategy: TapeStrategy,
     pub seed: u64,
 }
 
@@ -52,6 +55,7 @@ impl Default for Corrector2dCfg {
             paths: GradientPaths::NONE,
             lambda_div: 1e-3,
             output_scale: 0.05,
+            strategy: TapeStrategy::Full,
             seed: 0xC0DE,
         }
     }
@@ -103,90 +107,18 @@ pub fn corrector_net(mesh: &Mesh, seed: u64) -> Cnn {
     )
 }
 
-fn net_input(u: &VectorField) -> Vec<Vec<f64>> {
+/// The 2D corrector's input featurization (shared by training in
+/// [`engine`] and evaluation here — keep the two in lockstep by keeping
+/// one copy).
+pub(crate) fn net_input(u: &VectorField) -> Vec<Vec<f64>> {
     vec![u.comp[0].clone(), u.comp[1].clone()]
 }
 
-/// One unrolled training episode: returns (loss, dparams).
-#[allow(clippy::too_many_arguments)]
-fn episode(
-    solver: &mut PisoSolver,
-    net: &Cnn,
-    frames: &[VectorField],
-    start: usize,
-    unroll: usize,
-    paths: GradientPaths,
-    lambda_div: f64,
-    output_scale: f64,
-) -> (f64, Vec<f64>) {
-    let ncells = solver.mesh.ncells;
-    let mut state = State::zeros(&solver.mesh);
-    state.u = frames[start].clone();
-
-    // forward: record solver tapes + CNN tapes
-    let mut recs = Vec::with_capacity(unroll);
-    let mut net_ins = Vec::with_capacity(unroll);
-    let mut net_tapes = Vec::with_capacity(unroll);
-    let mut sources = Vec::with_capacity(unroll);
-    let mut states = vec![state.clone()];
-    for _ in 0..unroll {
-        let input = net_input(&state.u);
-        let (out, tape) = net.forward(&input);
-        let mut src = VectorField::zeros(ncells);
-        for c in 0..2 {
-            src.comp[c] = out[c].iter().map(|v| output_scale * v).collect();
-        }
-        let mut rec = empty_record();
-        solver.step(&mut state, &src, Some(&mut rec));
-        recs.push(rec);
-        net_ins.push(input);
-        net_tapes.push(tape);
-        sources.push(src);
-        states.push(state.clone());
-    }
-
-    // losses on every step vs the aligned reference frame
-    let mut total_loss = 0.0;
-    let mut dparams = vec![0.0; net.nparams()];
-    let mut du = VectorField::zeros(ncells);
-    let mut dp = vec![0.0; ncells];
-    for t in (0..unroll).rev() {
-        let (l, mut cot) = mse_loss_grad(2, &states[t + 1].u, &frames[start + t + 1]);
-        total_loss += l;
-        cot.axpy(1.0, &du);
-        let g = backward_step(solver, &recs[t], &cot, &dp, paths);
-        // source gradient → CNN (with optional divergence modification)
-        let ds = if lambda_div > 0.0 {
-            crate::train::div_gradient_modification(
-                &solver.ctx,
-                &solver.mesh,
-                &sources[t],
-                &g.dsource,
-                lambda_div,
-            )
-        } else {
-            g.dsource.clone()
-        };
-        let dout: Vec<Vec<f64>> = (0..2)
-            .map(|c| ds.comp[c].iter().map(|v| output_scale * v).collect())
-            .collect();
-        let (dpar, dins) = net.backward(&net_ins[t], &net_tapes[t], &dout);
-        for (a, b) in dparams.iter_mut().zip(&dpar) {
-            *a += b;
-        }
-        // state gradient: solver path + network-input path
-        du = g.du_n;
-        for c in 0..2 {
-            for i in 0..ncells {
-                du.comp[c][i] += dins[c][i];
-            }
-        }
-        dp = g.dp_in;
-    }
-    (total_loss / unroll as f64, dparams)
-}
-
-/// Train a corrector on pre-generated reference frames.
+/// Train a corrector on pre-generated reference frames for one flow. The
+/// unrolled episodes run on the shared engine
+/// ([`engine::episode`]) under `cfg.strategy`'s tape memory model; for
+/// training one network across a *batch* of scenarios per optimizer step
+/// see [`engine::train_corrector_batch`].
 pub fn train_corrector2d(
     solver: &mut PisoSolver,
     frames: &[VectorField],
@@ -196,13 +128,12 @@ pub fn train_corrector2d(
     let mut opt = Adam::new(cfg.lr, net.nparams());
     let mut rng = Rng::new(cfg.seed ^ 0x55);
     let mut losses = Vec::new();
+    let zero_src = VectorField::zeros(solver.mesh.ncells);
     for &unroll in &cfg.curriculum {
         for _ in 0..cfg.opt_steps_per_stage {
             let start = rng.below(frames.len().saturating_sub(unroll + 1));
-            let (loss, dparams) = episode(
-                solver, &net, frames, start, unroll, cfg.paths, cfg.lambda_div,
-                cfg.output_scale,
-            );
+            let (loss, dparams) =
+                engine::episode(solver, &net, &zero_src, frames, start, unroll, cfg);
             let mut params = std::mem::take(&mut net.params);
             opt.step(&mut params, &dparams);
             net.params = params;

@@ -6,9 +6,10 @@
 //! through the full rollout with each of the four gradient-path variants
 //! (Adv+P / Adv / P / none).
 
-use crate::adjoint::{rollout_backward, GradientPaths, RolloutTape};
-use crate::mesh::{gen, Mesh, VectorField};
-use crate::piso::{PisoConfig, PisoSolver, State};
+use crate::adjoint::{rollout_backward, GradientPaths, Tape, TapeStrategy};
+use crate::coordinator::scenario::{gaussian_bump_init, GaussianBox, Scenario};
+use crate::mesh::{Mesh, VectorField};
+use crate::piso::{PisoSolver, State};
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -26,6 +27,9 @@ pub struct GradPathCfg {
     pub theta0: f64,
     pub nu: f64,
     pub dt: f64,
+    /// Rollout tape memory (the long-rollout cases are exactly where
+    /// checkpointing pays).
+    pub strategy: TapeStrategy,
 }
 
 impl Default for GradPathCfg {
@@ -39,6 +43,7 @@ impl Default for GradPathCfg {
             theta0: 2.0,
             nu: 0.01,
             dt: 0.05,
+            strategy: TapeStrategy::Full,
         }
     }
 }
@@ -55,20 +60,17 @@ pub struct GradPathResult {
     pub diverged: bool,
 }
 
-/// The Gaussian initial u-profile of the task.
+/// The Gaussian initial u-profile of the task (the registry scenario's
+/// initializer, re-exported under the historical name).
 pub fn gauss_profile(mesh: &Mesh) -> VectorField {
-    let mut f = VectorField::zeros(mesh.ncells);
-    let (cx, cy, sigma) = (0.5, 0.5, 0.18);
-    for (i, c) in mesh.centers.iter().enumerate() {
-        let r2 = (c[0] - cx).powi(2) + (c[1] - cy).powi(2);
-        f.comp[0][i] = (-r2 / (2.0 * sigma * sigma)).exp();
-    }
-    f
+    gaussian_bump_init(mesh)
 }
 
+/// The E4 flow as a registry scenario (θ stays at the registry default:
+/// the ablation scales the initial profile per optimizer iterate itself,
+/// reusing one solver across iterations).
 fn solver_for(cfg: &GradPathCfg) -> PisoSolver {
-    let mesh = gen::periodic_box2d(18, 16, 1.0, 1.0);
-    PisoSolver::new(mesh, PisoConfig { dt: cfg.dt, ..Default::default() }, cfg.nu)
+    GaussianBox { nu: cfg.nu, dt: cfg.dt, ..Default::default() }.build().solver
 }
 
 /// Run the ablation for one configuration.
@@ -96,7 +98,7 @@ pub fn gradient_path_ablation(cfg: &GradPathCfg) -> GradPathResult {
         let mut state = State::zeros(&solver.mesh);
         state.u = profile.clone();
         state.u.scale(theta);
-        let tape = RolloutTape::record(&mut solver, &mut state, cfg.n_steps, |_, _| {
+        let tape = Tape::record(&mut solver, &mut state, cfg.n_steps, cfg.strategy, |_, _| {
             VectorField::zeros(ncells)
         });
         // L = norm Σ |u_n − u_ref|² ; cotangent 2 norm (u_n − u_ref)
@@ -109,13 +111,19 @@ pub fn gradient_path_ablation(cfg: &GradPathCfg) -> GradPathResult {
                 cot.comp[c][i] = 2.0 * norm * d;
             }
         }
-        let g = rollout_backward(&solver, &tape, cfg.paths, |step, _| {
-            if step + 1 == cfg.n_steps {
-                (cot.clone(), vec![0.0; ncells])
-            } else {
-                (VectorField::zeros(ncells), vec![0.0; ncells])
-            }
-        });
+        let g = rollout_backward(
+            &mut solver,
+            &tape,
+            cfg.paths,
+            |_, _| VectorField::zeros(ncells),
+            |step, _| {
+                if step + 1 == cfg.n_steps {
+                    (cot.clone(), vec![0.0; ncells])
+                } else {
+                    (VectorField::zeros(ncells), vec![0.0; ncells])
+                }
+            },
+        );
         let dtheta: f64 = (0..2)
             .map(|c| {
                 g.du0.comp[c]
@@ -178,6 +186,8 @@ mod tests {
             opt_iters: 40,
             lr: 0.02,
             paths: GradientPaths::NONE,
+            // per-step checkpoints: the degenerate-interval edge case
+            strategy: TapeStrategy::Checkpoint { every: 1 },
             ..Default::default()
         };
         let r = gradient_path_ablation(&cfg);

@@ -4,9 +4,10 @@
 //! gradients backpropagated through the complete rollout (including the
 //! pressure solves).
 
-use crate::adjoint::{rollout_backward, GradientPaths, RolloutTape};
-use crate::mesh::{gen, VectorField};
-use crate::piso::{PisoConfig, PisoSolver, State};
+use crate::adjoint::{rollout_backward, GradientPaths, Tape, TapeStrategy};
+use crate::coordinator::scenario::{LidDrivenCavity, Scenario, ScenarioRun};
+use crate::mesh::VectorField;
+use crate::piso::{PisoSolver, State};
 
 #[derive(Clone, Debug)]
 pub struct CavityOptCfg {
@@ -20,6 +21,8 @@ pub struct CavityOptCfg {
     /// Optimize lid, viscosity, or both jointly (C.22 vs C.23).
     pub opt_lid: bool,
     pub opt_nu: bool,
+    /// Rollout tape memory (checkpointing enables long-horizon variants).
+    pub strategy: TapeStrategy,
 }
 
 impl Default for CavityOptCfg {
@@ -32,6 +35,7 @@ impl Default for CavityOptCfg {
             nu: (5e-3, 1e-3, 2e-4),
             opt_lid: true,
             opt_nu: false,
+            strategy: TapeStrategy::Full,
         }
     }
 }
@@ -44,13 +48,15 @@ pub struct CavityOptResult {
     pub final_loss: f64,
 }
 
+/// The cavity at `(lid, ν)` as a registry scenario (direct ν override; the
+/// C.1 task varies physical parameters, not Reynolds number).
+fn scenario_for(cfg: &CavityOptCfg, lid: f64, nu: f64) -> LidDrivenCavity {
+    LidDrivenCavity { n: cfg.n, dt: 0.05, lid, nu: Some(nu), ..Default::default() }
+}
+
 fn run_forward(cfg: &CavityOptCfg, lid: f64, nu: f64) -> (PisoSolver, State) {
-    let mesh = gen::cavity2d(cfg.n, 1.0, lid, false);
-    let mut solver =
-        PisoSolver::new(mesh, PisoConfig { dt: 0.05, ..Default::default() }, nu);
-    let mut state = State::zeros(&solver.mesh);
-    let src = VectorField::zeros(solver.mesh.ncells);
-    solver.run(&mut state, &src, cfg.steps);
+    let ScenarioRun { mut solver, mut state, source, .. } = scenario_for(cfg, lid, nu).build();
+    solver.run(&mut state, &source, cfg.steps);
     (solver, state)
 }
 
@@ -69,12 +75,9 @@ pub fn optimize_cavity_params(cfg: &CavityOptCfg) -> CavityOptResult {
     let mut nu_history = vec![nu];
 
     for _ in 0..cfg.opt_iters {
-        let mesh = gen::cavity2d(cfg.n, 1.0, lid, false);
-        let ncells = mesh.ncells;
-        let mut solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.05, ..Default::default() }, nu);
-        let mut state = State::zeros(&solver.mesh);
-        let tape = RolloutTape::record(&mut solver, &mut state, cfg.steps, |_, _| {
+        let ScenarioRun { mut solver, mut state, .. } = scenario_for(cfg, lid, nu).build();
+        let ncells = solver.mesh.ncells;
+        let tape = Tape::record(&mut solver, &mut state, cfg.steps, cfg.strategy, |_, _| {
             VectorField::zeros(ncells)
         });
         let norm = 1.0; // sum-based L2 loss (paper Appendix C)
@@ -88,13 +91,19 @@ pub fn optimize_cavity_params(cfg: &CavityOptCfg) -> CavityOptResult {
             }
         }
         losses.push(loss);
-        let g = rollout_backward(&solver, &tape, GradientPaths::FULL, |step, _| {
-            if step + 1 == cfg.steps {
-                (cot.clone(), vec![0.0; ncells])
-            } else {
-                (VectorField::zeros(ncells), vec![0.0; ncells])
-            }
-        });
+        let g = rollout_backward(
+            &mut solver,
+            &tape,
+            GradientPaths::FULL,
+            |_, _| VectorField::zeros(ncells),
+            |step, _| {
+                if step + 1 == cfg.steps {
+                    (cot.clone(), vec![0.0; ncells])
+                } else {
+                    (VectorField::zeros(ncells), vec![0.0; ncells])
+                }
+            },
+        );
         if cfg.opt_lid {
             // lid = bc set 3, x-component
             let dlid: f64 = g.dbc[3].iter().map(|v| v[0]).sum();
@@ -138,6 +147,9 @@ mod tests {
             nu: (5e-3, 1e-3, 2e-4),
             opt_lid: false,
             opt_nu: true,
+            // checkpointed rollout memory: gradients are bit-for-bit the
+            // full tape's, so recovery is unchanged
+            strategy: TapeStrategy::Checkpoint { every: 3 },
         };
         let r = optimize_cavity_params(&cfg);
         let nu = *r.nu_history.last().unwrap();

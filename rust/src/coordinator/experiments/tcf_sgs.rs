@@ -9,11 +9,11 @@
 //! with the fine run of our own solver providing the reference statistics
 //! (the Hoyas–Jiménez role).
 
-use crate::adjoint::rollout::empty_record;
 use crate::adjoint::{backward_step, GradientPaths};
+use crate::coordinator::scenario::{Scenario, ScenarioRun, TurbulentChannel};
 use crate::mesh::{gen, Mesh, VectorField};
 use crate::nn::{Cnn, LayerCfg};
-use crate::piso::{PisoConfig, PisoSolver, State};
+use crate::piso::{PisoSolver, StepRecord};
 use crate::train::{stats_loss_grad, Adam, Optimizer, StatsTarget};
 use crate::util::rng::Rng;
 
@@ -89,14 +89,23 @@ pub fn sgs_input(mesh: &Mesh, u: &VectorField, delta: f64) -> Vec<Vec<f64>> {
     vec![u.comp[0].clone(), u.comp[1].clone(), u.comp[2].clone(), wall]
 }
 
-/// Build the coarse channel solver.
+/// The coarse channel as a registry scenario (init seeded by `seed_salt`
+/// so training / evaluation / pool states draw distinct initial flows).
+pub fn coarse_scenario(cfg: &TcfSgsCfg, seed_salt: u64) -> TurbulentChannel {
+    TurbulentChannel {
+        n: cfg.coarse_n,
+        l: cfg.l,
+        nu: cfg.nu,
+        forcing: cfg.forcing,
+        dt: cfg.dt,
+        perturbation: 0.4,
+        seed: cfg.seed ^ seed_salt,
+    }
+}
+
+/// Build the coarse channel solver (via the scenario registry).
 pub fn coarse_solver(cfg: &TcfSgsCfg) -> PisoSolver {
-    let mesh = gen::channel3d(cfg.coarse_n, cfg.l, 1.08);
-    PisoSolver::new(
-        mesh,
-        PisoConfig { dt: cfg.dt, n_correctors: 2, ..Default::default() },
-        cfg.nu,
-    )
+    coarse_scenario(cfg, 0).build().solver
 }
 
 /// Constant streamwise forcing field.
@@ -130,15 +139,10 @@ pub fn perturbed_channel_init(mesh: &Mesh, ly: f64, amp: f64, seed: u64) -> Vect
 /// channel (the "high-res reference" role of §5.3), resampled to the coarse
 /// wall-normal layers by nearest-layer matching.
 pub fn reference_statistics(cfg: &TcfSgsCfg, fine_n: [usize; 3], steps: usize) -> StatsTarget {
-    let mesh = gen::channel3d(fine_n, cfg.l, 1.08);
-    let mut solver = PisoSolver::new(
-        mesh,
-        PisoConfig { dt: cfg.dt * 0.5, n_correctors: 2, ..Default::default() },
-        cfg.nu,
-    );
-    let mut state = State::zeros(&solver.mesh);
-    state.u = perturbed_channel_init(&solver.mesh, cfg.l[1], 0.4, cfg.seed);
-    let src = forcing_field(&solver.mesh, cfg.forcing);
+    // the fine reference is the same registry scenario at finer resolution
+    // and half the time step (the "high-res reference" role of §5.3)
+    let fine = TurbulentChannel { n: fine_n, dt: cfg.dt * 0.5, ..coarse_scenario(cfg, 0) };
+    let ScenarioRun { mut solver, mut state, source: src, .. } = fine.build();
     // develop, then accumulate
     solver.run(&mut state, &src, steps / 2);
     let mut stats = crate::stats::ChannelStats::new(&solver.mesh, cfg.nu);
@@ -184,17 +188,15 @@ pub fn reference_statistics(cfg: &TcfSgsCfg, fine_n: [usize; 3], steps: usize) -
 
 /// Train the SGS corrector from statistics only (no paired frames).
 pub fn train_tcf_sgs(cfg: &TcfSgsCfg, target: &StatsTarget) -> TcfSgsResult {
-    let mut solver = coarse_solver(cfg);
+    let ScenarioRun { mut solver, state: mut pool_state, source: src_base, .. } =
+        coarse_scenario(cfg, 1).build();
     let ncells = solver.mesh.ncells;
     let delta = cfg.l[1] / 2.0;
     let mut net = sgs_net(&solver.mesh, cfg.seed);
     let mut opt = Adam::new(cfg.lr, net.nparams());
     let mut rng = Rng::new(cfg.seed ^ 0x99);
-    let src_base = forcing_field(&solver.mesh, cfg.forcing);
 
     // starting pool: develop the un-modeled coarse flow
-    let mut pool_state = State::zeros(&solver.mesh);
-    pool_state.u = perturbed_channel_init(&solver.mesh, cfg.l[1], 0.4, cfg.seed ^ 1);
     solver.run(&mut pool_state, &src_base, 30);
 
     let mut losses = Vec::new();
@@ -230,7 +232,7 @@ pub fn train_tcf_sgs(cfg: &TcfSgsCfg, target: &StatsTarget) -> TcfSgsResult {
                     src.comp[c][i] += v;
                 }
             }
-            let mut rec = empty_record();
+            let mut rec = StepRecord::empty();
             solver.step(&mut state, &src, Some(&mut rec));
             recs.push(rec);
             inputs.push(input);
@@ -313,12 +315,10 @@ pub fn eval_sgs(
     target: &StatsTarget,
     steps: usize,
 ) -> Vec<f64> {
-    let mut solver = coarse_solver(cfg);
+    let ScenarioRun { mut solver, mut state, source: src_base, .. } =
+        coarse_scenario(cfg, 7).build();
     let ncells = solver.mesh.ncells;
     let delta = cfg.l[1] / 2.0;
-    let mut state = State::zeros(&solver.mesh);
-    state.u = perturbed_channel_init(&solver.mesh, cfg.l[1], 0.4, cfg.seed ^ 7);
-    let src_base = forcing_field(&solver.mesh, cfg.forcing);
     // develop without any model first so all variants start from the same
     // (un-modeled, statistically wrong) state — the figure-13 protocol
     solver.run(&mut state, &src_base, 30);
@@ -346,10 +346,8 @@ pub fn eval_sgs(
 
 /// Same rollout with the Smagorinsky baseline (eddy viscosity added to ν).
 pub fn eval_smagorinsky(cfg: &TcfSgsCfg, target: &StatsTarget, steps: usize, cs: f64) -> Vec<f64> {
-    let mut solver = coarse_solver(cfg);
-    let mut state = State::zeros(&solver.mesh);
-    state.u = perturbed_channel_init(&solver.mesh, cfg.l[1], 0.4, cfg.seed ^ 7);
-    let src = forcing_field(&solver.mesh, cfg.forcing);
+    let ScenarioRun { mut solver, mut state, source: src, .. } =
+        coarse_scenario(cfg, 7).build();
     solver.run(&mut state, &src, 30);
     let dist = crate::nn::smagorinsky::channel_wall_distance(&solver.mesh, cfg.l[1]);
     let mut out = Vec::with_capacity(steps);

@@ -3,9 +3,14 @@
 //! registry + batched multi-scenario runner ([`scenario`]), and the
 //! reporting layer shared by the CLI and the bench harness.
 
+pub mod engine;
 pub mod experiments;
 pub mod references;
 pub mod scenario;
 
+pub use engine::{train_corrector_batch, BatchTrainResult};
 pub use experiments::*;
-pub use scenario::{builtin_scenarios, scenario_by_kind, BatchResult, BatchRunner, Scenario};
+pub use scenario::{
+    builtin_scenarios, reduce_shared, scenario_by_kind, BatchLoss, BatchResult, BatchRunner,
+    GradBatchResult, Scenario, SharedGrads,
+};

@@ -18,7 +18,16 @@
 //! chunks. Per-scenario results are unchanged by the sharing (each
 //! scenario's kernels see the same context width either way) and come back
 //! in input order.
+//!
+//! Beyond forward advancement, [`BatchRunner::run_gradients`] adds the
+//! record/backward phases of simulation-coupled training: every scenario
+//! records a rollout [`Tape`] (full or checkpointed) and backpropagates a
+//! [`BatchLoss`] through it on the same pool, yielding per-scenario
+//! [`RolloutGrads`] plus, via [`reduce_shared`], batch-reduced gradients
+//! for parameters shared across the batch (ν, source fields, initial
+//! states).
 
+use crate::adjoint::{GradientPaths, RolloutGrads, Tape, TapeStrategy};
 use crate::mesh::{gen, Mesh, VectorField};
 use crate::par::ExecCtx;
 use crate::piso::{PisoConfig, PisoSolver, State, StepStats};
@@ -89,6 +98,57 @@ impl Scenario for TaylorGreen {
     }
 }
 
+/// The 2D Gaussian u-velocity bump of the §4.2 gradient-path task
+/// (centred at (0.5, 0.5), σ = 0.18).
+pub fn gaussian_bump_init(mesh: &Mesh) -> VectorField {
+    let mut f = VectorField::zeros(mesh.ncells);
+    let (cx, cy, sigma) = (0.5, 0.5, 0.18);
+    for (i, c) in mesh.centers.iter().enumerate() {
+        let r2 = (c[0] - cx).powi(2) + (c[1] - cy).powi(2);
+        f.comp[0][i] = (-r2 / (2.0 * sigma * sigma)).exp();
+    }
+    f
+}
+
+/// Periodic box seeded with the scaled Gaussian bump — the E4 gradient-path
+/// ablation flow (paper §4.2, fig. 6 / table 1).
+#[derive(Clone, Debug)]
+pub struct GaussianBox {
+    pub nx: usize,
+    pub ny: usize,
+    pub nu: f64,
+    pub dt: f64,
+    /// Scale θ applied to the bump (the recovered parameter; reference 1.0).
+    pub theta: f64,
+}
+
+impl Default for GaussianBox {
+    fn default() -> Self {
+        GaussianBox { nx: 18, ny: 16, nu: 0.01, dt: 0.05, theta: 1.0 }
+    }
+}
+
+impl Scenario for GaussianBox {
+    fn kind(&self) -> &'static str {
+        "gauss-box"
+    }
+
+    fn label(&self) -> String {
+        format!("gauss-box {}x{} theta={}", self.nx, self.ny, self.theta)
+    }
+
+    fn build(&self) -> ScenarioRun {
+        let mesh = gen::periodic_box2d(self.nx, self.ny, 1.0, 1.0);
+        let solver =
+            PisoSolver::new(mesh, PisoConfig { dt: self.dt, ..Default::default() }, self.nu);
+        let mut state = State::zeros(&solver.mesh);
+        state.u = gaussian_bump_init(&solver.mesh);
+        state.u.scale(self.theta);
+        let source = VectorField::zeros(solver.mesh.ncells);
+        ScenarioRun { label: self.label(), solver, state, source }
+    }
+}
+
 /// Lid-driven cavity at a given Reynolds number (paper Fig 3 / B.16).
 #[derive(Clone, Debug)]
 pub struct LidDrivenCavity {
@@ -96,11 +156,15 @@ pub struct LidDrivenCavity {
     pub re: f64,
     pub dt: f64,
     pub refined: bool,
+    /// Lid velocity (the C.22 direct-optimization parameter).
+    pub lid: f64,
+    /// Direct viscosity override; `None` uses `1/re`.
+    pub nu: Option<f64>,
 }
 
 impl Default for LidDrivenCavity {
     fn default() -> Self {
-        LidDrivenCavity { n: 32, re: 100.0, dt: 0.02, refined: false }
+        LidDrivenCavity { n: 32, re: 100.0, dt: 0.02, refined: false, lid: 1.0, nu: None }
     }
 }
 
@@ -119,11 +183,11 @@ impl Scenario for LidDrivenCavity {
     }
 
     fn build(&self) -> ScenarioRun {
-        let mesh = gen::cavity2d(self.n, 1.0, 1.0, self.refined);
+        let mesh = gen::cavity2d(self.n, 1.0, self.lid, self.refined);
         let solver = PisoSolver::new(
             mesh,
             PisoConfig { dt: self.dt, ..Default::default() },
-            1.0 / self.re,
+            self.nu.unwrap_or(1.0 / self.re),
         );
         let state = State::zeros(&solver.mesh);
         let source = VectorField::zeros(solver.mesh.ncells);
@@ -282,6 +346,7 @@ impl Scenario for VortexStreet {
 pub fn builtin_scenarios() -> Vec<Box<dyn Scenario>> {
     vec![
         Box::new(TaylorGreen::default()),
+        Box::new(GaussianBox::default()),
         Box::new(LidDrivenCavity::default()),
         Box::new(Poiseuille::default()),
         Box::new(TurbulentChannel::default()),
@@ -298,6 +363,21 @@ pub fn scenario_by_kind(kind: &str) -> Option<Box<dyn Scenario>> {
 pub fn cavity_reynolds_sweep(n: usize, res: &[f64]) -> Vec<Box<dyn Scenario>> {
     res.iter()
         .map(|&re| Box::new(LidDrivenCavity { n, re, ..Default::default() }) as Box<dyn Scenario>)
+        .collect()
+}
+
+/// A turbulent-channel viscosity (Re_τ) sweep: one scenario per requested ν.
+pub fn channel_nu_sweep(n: [usize; 3], nus: &[f64]) -> Vec<Box<dyn Scenario>> {
+    nus.iter()
+        .map(|&nu| Box::new(TurbulentChannel { n, nu, ..Default::default() }) as Box<dyn Scenario>)
+        .collect()
+}
+
+/// A Taylor–Green viscosity sweep on a fixed grid (same mesh across the
+/// batch, so per-scenario gradients reduce into shared-parameter gradients).
+pub fn taylor_green_nu_sweep(n: usize, nus: &[f64]) -> Vec<Box<dyn Scenario>> {
+    nus.iter()
+        .map(|&nu| Box::new(TaylorGreen { n, nu, ..Default::default() }) as Box<dyn Scenario>)
         .collect()
 }
 
@@ -351,6 +431,12 @@ impl BatchRunner {
     /// Width of the pool scenarios (and their kernels) run on.
     pub fn threads(&self) -> usize {
         self.ctx.width()
+    }
+
+    /// The runner's execution context (e.g. for embedding the pool in a
+    /// training loop that interleaves its own pool tasks).
+    pub fn ctx(&self) -> &ExecCtx {
+        &self.ctx
     }
 
     /// Build and advance every scenario; results come back in input order.
@@ -414,6 +500,206 @@ impl BatchRunner {
     }
 }
 
+/// Per-step loss for a gradient batch: scalar contribution + cotangent of
+/// scenario `i`'s state after step `step` (return zeros for steps without
+/// loss). Implementations must be `Sync` — one instance serves the whole
+/// batch concurrently.
+pub trait BatchLoss: Sync {
+    fn loss(&self, scenario: usize, step: usize, state: &State) -> f64;
+    fn grad(&self, scenario: usize, step: usize, state: &State) -> (VectorField, Vec<f64>);
+}
+
+/// L_i = Σ_cells |u|² on the final state — a probe loss every scenario
+/// supports without reference data (used by `pict train --probe` and the
+/// gradient smoke paths).
+pub struct TerminalKineticEnergy {
+    /// Index of the last step of the rollout (`steps - 1`).
+    pub final_step: usize,
+}
+
+impl BatchLoss for TerminalKineticEnergy {
+    fn loss(&self, _scenario: usize, step: usize, state: &State) -> f64 {
+        if step != self.final_step {
+            return 0.0;
+        }
+        state.u.comp.iter().map(|c| c.iter().map(|v| v * v).sum::<f64>()).sum()
+    }
+
+    fn grad(&self, _scenario: usize, step: usize, state: &State) -> (VectorField, Vec<f64>) {
+        let ncells = state.u.ncells();
+        let mut du = VectorField::zeros(ncells);
+        if step == self.final_step {
+            for c in 0..3 {
+                for i in 0..ncells {
+                    du.comp[c][i] = 2.0 * state.u.comp[c][i];
+                }
+            }
+        }
+        (du, vec![0.0; state.p.len()])
+    }
+}
+
+/// L_i = Σ_cells |u − target_i|² on the final state (per-scenario targets).
+pub struct TerminalMse {
+    pub final_step: usize,
+    /// One reference velocity field per scenario in the batch.
+    pub targets: Vec<VectorField>,
+}
+
+impl BatchLoss for TerminalMse {
+    fn loss(&self, scenario: usize, step: usize, state: &State) -> f64 {
+        if step != self.final_step {
+            return 0.0;
+        }
+        let t = &self.targets[scenario];
+        state
+            .u
+            .comp
+            .iter()
+            .zip(&t.comp)
+            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>())
+            .sum()
+    }
+
+    fn grad(&self, scenario: usize, step: usize, state: &State) -> (VectorField, Vec<f64>) {
+        let ncells = state.u.ncells();
+        let mut du = VectorField::zeros(ncells);
+        if step == self.final_step {
+            let t = &self.targets[scenario];
+            for c in 0..3 {
+                for i in 0..ncells {
+                    du.comp[c][i] = 2.0 * (state.u.comp[c][i] - t.comp[c][i]);
+                }
+            }
+        }
+        (du, vec![0.0; state.p.len()])
+    }
+}
+
+/// Outcome of one scenario's record+backward pass in a gradient batch.
+pub struct GradBatchResult {
+    pub label: String,
+    /// Final forward state (after all recorded steps).
+    pub state: State,
+    /// Scalar loss accumulated by the [`BatchLoss`] over the rollout.
+    pub loss: f64,
+    pub grads: RolloutGrads,
+    /// Fingerprint of the scenario's mesh geometry (cell count, dimension,
+    /// cell centers) — [`reduce_shared`] only sums field gradients across
+    /// scenarios whose fingerprints match.
+    pub mesh_fp: u64,
+    /// Peak resident f64 count of this scenario's backward sweep.
+    pub peak_resident_f64: usize,
+    /// Wall-clock seconds for build + record + backward.
+    pub wall_s: f64,
+}
+
+/// FNV-1a over the mesh geometry (cell count, dimension, center bits):
+/// scenarios on byte-identical geometry — the precondition for treating
+/// per-cell gradients as gradients of one shared field.
+fn mesh_fingerprint(mesh: &Mesh) -> u64 {
+    const P: u64 = 0x100000001b3;
+    let mut h: u64 = 0xcbf29ce484222325;
+    h = (h ^ mesh.ncells as u64).wrapping_mul(P);
+    h = (h ^ mesh.dim as u64).wrapping_mul(P);
+    for c in &mesh.centers {
+        for x in c {
+            h = (h ^ x.to_bits()).wrapping_mul(P);
+        }
+    }
+    h
+}
+
+/// Batch-reduced gradients for parameters shared across scenarios.
+pub struct SharedGrads {
+    /// Σ_i ∂L/∂ν — viscosity as a shared physical parameter.
+    pub dnu: f64,
+    /// Σ_i ∂L/∂S_t per step when every scenario ran on the same mesh
+    /// geometry and rollout length (a shared source/corrector signal);
+    /// `None` for mixed-mesh or mixed-length batches.
+    pub dsource: Option<Vec<VectorField>>,
+    /// Σ_i ∂L/∂u⁰ under the same mesh condition.
+    pub du0: Option<VectorField>,
+}
+
+/// Reduce per-scenario rollout gradients into shared-parameter gradients.
+pub fn reduce_shared(results: &[GradBatchResult]) -> SharedGrads {
+    let dnu = results.iter().map(|r| r.grads.dnu).sum();
+    // field gradients only reduce across byte-identical mesh geometry
+    // (equal cell counts are not enough: a box and a cavity of the same
+    // size would sum gradients of physically incompatible fields)
+    let same_mesh = !results.is_empty()
+        && results.windows(2).all(|w| {
+            w[0].mesh_fp == w[1].mesh_fp
+                && w[0].grads.dsource.len() == w[1].grads.dsource.len()
+        });
+    if !same_mesh {
+        return SharedGrads { dnu, dsource: None, du0: None };
+    }
+    let mut du0 = results[0].grads.du0.clone();
+    let mut dsource = results[0].grads.dsource.clone();
+    for r in &results[1..] {
+        du0.axpy(1.0, &r.grads.du0);
+        for (a, b) in dsource.iter_mut().zip(&r.grads.dsource) {
+            a.axpy(1.0, b);
+        }
+    }
+    SharedGrads { dnu, dsource: Some(dsource), du0: Some(du0) }
+}
+
+impl BatchRunner {
+    /// The record/backward phases of a training step: build every scenario,
+    /// record a rollout [`Tape`] under `strategy` (each scenario advancing
+    /// with its own source field), and backpropagate `loss` through each
+    /// tape — all scenarios concurrently on the shared pool, results in
+    /// input order. Combine with [`reduce_shared`] for batch gradients of
+    /// shared parameters.
+    pub fn run_gradients(
+        &self,
+        scenarios: &[Box<dyn Scenario>],
+        strategy: TapeStrategy,
+        paths: GradientPaths,
+        loss: &dyn BatchLoss,
+    ) -> Vec<GradBatchResult> {
+        let steps = self.steps;
+        let results: Vec<Mutex<Option<GradBatchResult>>> =
+            (0..scenarios.len()).map(|_| Mutex::new(None)).collect();
+        self.ctx.run_tasks(scenarios.len(), |i| {
+            let t0 = Instant::now();
+            let ScenarioRun { label, mut solver, mut state, source } = scenarios[i].build();
+            solver.ctx = self.ctx.clone();
+            let mesh_fp = mesh_fingerprint(&solver.mesh);
+            // record phase
+            let tape =
+                Tape::record(&mut solver, &mut state, steps, strategy, |_, _| source.clone());
+            // backward phase
+            let mut total = 0.0;
+            let (grads, stats) = tape.backward_with_stats(
+                &mut solver,
+                paths,
+                |_, _| source.clone(),
+                |step, st| {
+                    total += loss.loss(i, step, st);
+                    loss.grad(i, step, st)
+                },
+            );
+            *results[i].lock().unwrap() = Some(GradBatchResult {
+                label,
+                state,
+                loss: total,
+                grads,
+                mesh_fp,
+                peak_resident_f64: stats.peak_resident_f64,
+                wall_s: t0.elapsed().as_secs_f64(),
+            });
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("gradient batch skipped a scenario"))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -463,5 +749,52 @@ mod tests {
         let runner = BatchRunner::new(1);
         let first = runner.advance(runs);
         assert_eq!(first[0].state.step, 1);
+    }
+
+    #[test]
+    fn gradient_batch_produces_grads_per_scenario() {
+        let scenarios = taylor_green_nu_sweep(6, &[0.02, 0.05]);
+        let steps = 3;
+        let runner = BatchRunner::new(steps).with_threads(2);
+        let loss = TerminalKineticEnergy { final_step: steps - 1 };
+        let results = runner.run_gradients(
+            &scenarios,
+            TapeStrategy::Checkpoint { every: 2 },
+            GradientPaths::NONE,
+            &loss,
+        );
+        assert_eq!(results.len(), 2);
+        for r in &results {
+            assert_eq!(r.state.step, steps);
+            assert!(r.loss > 0.0);
+            assert_eq!(r.grads.dsource.len(), steps);
+            let n: f64 = r.grads.du0.comp[0].iter().map(|v| v.abs()).sum();
+            assert!(n.is_finite() && n > 0.0, "{}: no du0 gradient", r.label);
+        }
+        let shared = reduce_shared(&results);
+        assert!(shared.dnu.is_finite());
+        let ds = shared.dsource.expect("same-mesh batch reduces sources");
+        assert_eq!(ds.len(), steps);
+        // reduction really is the sum of the per-scenario fields
+        let want = results[0].grads.dsource[0].comp[0][1] + results[1].grads.dsource[0].comp[0][1];
+        assert_eq!(ds[0].comp[0][1], want);
+
+        // TerminalMse with zero-field targets is the kinetic-energy loss:
+        // identical loss values and cotangents, bit-for-bit
+        let ncells = results[0].state.u.ncells();
+        let mse = TerminalMse {
+            final_step: steps - 1,
+            targets: vec![VectorField::zeros(ncells), VectorField::zeros(ncells)],
+        };
+        let mse_results = runner.run_gradients(
+            &scenarios,
+            TapeStrategy::Checkpoint { every: 2 },
+            GradientPaths::NONE,
+            &mse,
+        );
+        for (a, b) in results.iter().zip(&mse_results) {
+            assert_eq!(a.loss, b.loss, "{}: MSE-vs-zero must equal KE", a.label);
+            assert_eq!(a.grads.du0, b.grads.du0);
+        }
     }
 }

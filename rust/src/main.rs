@@ -88,6 +88,152 @@ fn main() {
                 &rows,
             );
         }
+        Some("train") => {
+            use pict::adjoint::{GradientPaths, TapeStrategy};
+            use pict::coordinator::engine::{scenario_reference_frames, train_corrector_batch};
+            use pict::coordinator::scenario::{
+                reduce_shared, BatchRunner, LidDrivenCavity, Scenario, TaylorGreen,
+                TerminalKineticEnergy,
+            };
+            use pict::coordinator::experiments::Corrector2dCfg;
+            use pict::util::bench::print_table;
+
+            let kind = args.get_or("kind", "cavity");
+            let n = args.usize_or("n", 12);
+            let unroll = args.usize_or("steps", 4).max(1);
+            let every = args.usize_or("every", 0);
+            let threads = args.usize_or("threads", pict::par::env_threads());
+            let strategy = if every == 0 {
+                TapeStrategy::Full
+            } else {
+                TapeStrategy::Checkpoint { every }
+            };
+            let params: Vec<f64> = args
+                .get_or("params", if kind == "cavity" { "100,400" } else { "0.01,0.03" })
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            if params.is_empty() {
+                eprintln!("pict train: --params must be a comma-separated list of numbers");
+                return;
+            }
+            // a coarse scenario per parameter (shared mesh across the
+            // batch) + its 2x-resolution, half-dt fine counterpart
+            let (coarse, fine): (Vec<Box<dyn Scenario>>, Vec<Box<dyn Scenario>>) = match kind
+                .as_str()
+            {
+                "cavity" => params
+                    .iter()
+                    .map(|&re| {
+                        (
+                            Box::new(LidDrivenCavity { n, re, ..Default::default() })
+                                as Box<dyn Scenario>,
+                            Box::new(LidDrivenCavity {
+                                n: 2 * n,
+                                re,
+                                dt: 0.01,
+                                ..Default::default()
+                            }) as Box<dyn Scenario>,
+                        )
+                    })
+                    .unzip(),
+                "taylor-green" => params
+                    .iter()
+                    .map(|&nu| {
+                        (
+                            Box::new(TaylorGreen { n, nu, ..Default::default() })
+                                as Box<dyn Scenario>,
+                            Box::new(TaylorGreen { n: 2 * n, nu, dt: 0.005 })
+                                as Box<dyn Scenario>,
+                        )
+                    })
+                    .unzip(),
+                other => {
+                    eprintln!("pict train: unsupported --kind {other} (cavity | taylor-green)");
+                    return;
+                }
+            };
+            let labels: Vec<String> = coarse.iter().map(|s| s.label()).collect();
+
+            if args.flag("probe") {
+                // gradient probe: record + backward across the batch, no
+                // network — reports per-scenario and batch-reduced grads
+                let steps = args.usize_or("probe-steps", 16).max(1);
+                let runner = BatchRunner::new(steps).with_threads(threads);
+                println!(
+                    "probing {} scenarios x {steps} steps ({}) on {} workers...",
+                    coarse.len(),
+                    strategy.label(),
+                    runner.threads()
+                );
+                let loss = TerminalKineticEnergy { final_step: steps - 1 };
+                let results =
+                    runner.run_gradients(&coarse, strategy, GradientPaths::FULL, &loss);
+                let rows: Vec<Vec<String>> = results
+                    .iter()
+                    .map(|r| {
+                        let g0: f64 = r
+                            .grads
+                            .du0
+                            .comp
+                            .iter()
+                            .map(|c| c.iter().map(|v| v * v).sum::<f64>())
+                            .sum::<f64>()
+                            .sqrt();
+                        vec![
+                            r.label.clone(),
+                            format!("{:.3e}", r.loss),
+                            format!("{g0:.3e}"),
+                            format!("{:.3e}", r.grads.dnu),
+                            format!("{}", r.peak_resident_f64),
+                            format!("{:.2}s", r.wall_s),
+                        ]
+                    })
+                    .collect();
+                print_table(
+                    "gradient batch",
+                    &["scenario", "loss", "|dL/du0|", "dL/dnu", "peak f64", "wall"],
+                    &rows,
+                );
+                let shared = reduce_shared(&results);
+                println!("batch-reduced: dnu = {:.4e}", shared.dnu);
+                return;
+            }
+
+            let cfg = Corrector2dCfg {
+                t_ratio: 2,
+                n_frames: args.usize_or("frames", 20),
+                fine_warmup: args.usize_or("warmup", 10),
+                curriculum: vec![unroll],
+                opt_steps_per_stage: args.usize_or("iters", 10),
+                lr: args.f64_or("lr", 2e-3),
+                paths: GradientPaths::NONE,
+                lambda_div: 1e-3,
+                output_scale: 0.05,
+                strategy,
+                seed: 0x7121A,
+            };
+            let runner = BatchRunner::new(0).with_threads(threads);
+            println!(
+                "training one corrector across {} scenarios ({}), unroll {unroll}, tape {} on {} workers",
+                labels.len(),
+                labels.join(" | "),
+                strategy.label(),
+                runner.threads()
+            );
+            println!("generating {} reference frames per scenario...", cfg.n_frames);
+            let coarse_mesh = coarse[0].build().solver.mesh;
+            let frames = scenario_reference_frames(&runner, &fine, &coarse_mesh, &cfg);
+            println!("batched training ({} optimizer steps)...", cfg.opt_steps_per_stage);
+            let result = train_corrector_batch(&runner, &coarse, &frames, &cfg);
+            let first = result.losses.first().copied().unwrap_or(f64::NAN);
+            let last = result.losses.last().copied().unwrap_or(f64::NAN);
+            println!(
+                "batch-mean episode loss {first:.4e} -> {last:.4e} over {} steps ({} params)",
+                result.losses.len(),
+                result.net.nparams()
+            );
+        }
         Some("cavity") => {
             use pict::coordinator::references::GHIA_RE100_U;
             use pict::mesh::{field, gen, VectorField};
@@ -115,6 +261,9 @@ fn main() {
             println!("  gradpaths [--n 10] [--iters 40] [--lr 0.08]   gradient-path ablation (E4)");
             println!("  cavity [--n 32] [--re 100] [--steps 1200]     lid-driven cavity vs Ghia");
             println!("  batch [--steps 10] [--threads N]              run all registered scenarios on one N-worker pool");
+            println!("  train [--kind cavity] [--params 100,400] [--n 12] [--steps 4]");
+            println!("        [--every K] [--iters 10] [--threads N]  train one corrector across a scenario batch");
+            println!("        [--probe [--probe-steps 16]]            record+backward gradient batch only (no network)");
             println!("  artifacts [--dir artifacts]                   list AOT artifacts (needs --features pjrt)");
             println!("env: PICT_THREADS=<n> sizes the worker pool (default: all cores; read per context, never cached)");
             println!("examples: cargo run --release --example quickstart | train_sgs_tcf | ...");

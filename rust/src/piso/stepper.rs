@@ -55,6 +55,11 @@ impl State {
     pub fn zeros(mesh: &Mesh) -> State {
         State { u: VectorField::zeros(mesh.ncells), p: vec![0.0; mesh.ncells], time: 0.0, step: 0 }
     }
+
+    /// Number of f64 values this state keeps resident (tape memory accounting).
+    pub fn len_f64(&self) -> usize {
+        self.u.comp.iter().map(|c| c.len()).sum::<usize>() + self.p.len()
+    }
 }
 
 /// Per-step diagnostics.
@@ -92,6 +97,51 @@ pub struct StepRecord {
     pub grad_p_in: VectorField,
     pub u_star: VectorField,
     pub correctors: Vec<CorrectorRecord>,
+}
+
+impl StepRecord {
+    /// An unsized record for [`PisoSolver::step`] to fill in.
+    pub fn empty() -> StepRecord {
+        StepRecord {
+            dt: 0.0,
+            u_n: VectorField::zeros(0),
+            p_in: vec![],
+            source: VectorField::zeros(0),
+            c_vals: vec![],
+            a_inv: vec![],
+            pmat_vals: vec![],
+            rhs_base: VectorField::zeros(0),
+            grad_p_in: VectorField::zeros(0),
+            u_star: VectorField::zeros(0),
+            correctors: vec![],
+        }
+    }
+
+    /// Number of f64 values this record keeps resident (tape memory
+    /// accounting; the dominant O(ncells) and O(nnz) buffers).
+    pub fn len_f64(&self) -> usize {
+        let vf = |f: &VectorField| f.comp.iter().map(|c| c.len()).sum::<usize>();
+        vf(&self.u_n)
+            + self.p_in.len()
+            + vf(&self.source)
+            + self.c_vals.len()
+            + self.a_inv.len()
+            + self.pmat_vals.len()
+            + vf(&self.rhs_base)
+            + vf(&self.grad_p_in)
+            + vf(&self.u_star)
+            + self
+                .correctors
+                .iter()
+                .map(|cr| vf(&cr.u_in) + vf(&cr.h) + cr.div.len() + cr.p.len())
+                .sum::<usize>()
+    }
+}
+
+impl Default for StepRecord {
+    fn default() -> Self {
+        StepRecord::empty()
+    }
 }
 
 /// The PISO solver: owns the mesh, viscosity field, reusable matrix
@@ -435,21 +485,10 @@ mod tests {
         let mut state = State::zeros(&solver.mesh);
         state.u.comp[0].iter_mut().enumerate().for_each(|(i, v)| *v = (i as f64 * 0.1).sin());
         let src = VectorField::zeros(solver.mesh.ncells);
-        let mut rec = StepRecord {
-            dt: 0.0,
-            u_n: VectorField::zeros(0),
-            p_in: vec![],
-            source: VectorField::zeros(0),
-            c_vals: vec![],
-            a_inv: vec![],
-            pmat_vals: vec![],
-            rhs_base: VectorField::zeros(0),
-            grad_p_in: VectorField::zeros(0),
-            u_star: VectorField::zeros(0),
-            correctors: vec![],
-        };
+        let mut rec = StepRecord::empty();
         solver.step(&mut state, &src, Some(&mut rec));
         assert_eq!(rec.correctors.len(), 2);
+        assert!(rec.len_f64() > 0);
         assert_eq!(rec.u_n.ncells(), solver.mesh.ncells);
         assert_eq!(rec.c_vals.len(), solver.c.nnz());
         // final corrector output is the state velocity

@@ -5,7 +5,7 @@
 //! steps and the lid-velocity / viscosity gradients used by the direct
 //! optimization experiments (Appendix C).
 
-use pict::adjoint::{backward_step, rollout_backward, GradientPaths, RolloutTape};
+use pict::adjoint::{backward_step, rollout_backward, GradientPaths, Tape, TapeStrategy};
 use pict::mesh::{gen, Mesh, VectorField};
 use pict::piso::{PisoConfig, PisoSolver, State, StepRecord};
 use pict::util::rng::Rng;
@@ -17,22 +17,6 @@ fn tight_cfg(dt: f64) -> PisoConfig {
     cfg.adv_opts.max_iter = 5000;
     cfg.p_opts.max_iter = 20000;
     cfg
-}
-
-fn empty_record() -> StepRecord {
-    StepRecord {
-        dt: 0.0,
-        u_n: VectorField::zeros(0),
-        p_in: vec![],
-        source: VectorField::zeros(0),
-        c_vals: vec![],
-        a_inv: vec![],
-        pmat_vals: vec![],
-        rhs_base: VectorField::zeros(0),
-        grad_p_in: VectorField::zeros(0),
-        u_star: VectorField::zeros(0),
-        correctors: vec![],
-    }
 }
 
 fn random_state(mesh: &Mesh, seed: u64, amp: f64) -> State {
@@ -111,7 +95,7 @@ fn single_step_full_gradcheck_periodic() {
     // analytic gradients
     let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
     let mut state = state0.clone();
-    let mut rec = empty_record();
+    let mut rec = StepRecord::empty();
     solver.step(&mut state, &src, Some(&mut rec));
     let grads = backward_step(&solver, &rec, &loss.wu, &loss.wp, GradientPaths::FULL);
 
@@ -193,7 +177,7 @@ fn single_step_gradcheck_cavity_with_lid_gradient() {
 
     let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
     let mut state = state0.clone();
-    let mut rec = empty_record();
+    let mut rec = StepRecord::empty();
     solver.step(&mut state, &src, Some(&mut rec));
     let grads = backward_step(&solver, &rec, &loss.wu, &loss.wp, GradientPaths::FULL);
 
@@ -260,17 +244,30 @@ fn rollout_gradcheck_initial_scale() {
         loss.eval(&state, 2)
     };
 
-    // analytic: d/dscale = ⟨du0, u_base⟩ at scale=1
+    // analytic: d/dscale = ⟨du0, u_base⟩ at scale=1 (recorded on a
+    // checkpointed tape: its backward is bit-for-bit the full tape's)
     let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
     let mut state = base.clone();
-    let tape = RolloutTape::record(&mut solver, &mut state, 3, |_, _| VectorField::zeros(ncells));
-    let g = rollout_backward(&solver, &tape, GradientPaths::FULL, |step, _| {
-        if step == 2 {
-            (loss.wu.clone(), loss.wp.clone())
-        } else {
-            (VectorField::zeros(ncells), vec![0.0; ncells])
-        }
-    });
+    let tape = Tape::record(
+        &mut solver,
+        &mut state,
+        3,
+        TapeStrategy::Checkpoint { every: 2 },
+        |_, _| VectorField::zeros(ncells),
+    );
+    let g = rollout_backward(
+        &mut solver,
+        &tape,
+        GradientPaths::FULL,
+        |_, _| VectorField::zeros(ncells),
+        |step, _| {
+            if step == 2 {
+                (loss.wu.clone(), loss.wp.clone())
+            } else {
+                (VectorField::zeros(ncells), vec![0.0; ncells])
+            }
+        },
+    );
     let an: f64 = (0..2)
         .map(|c| g.du0.comp[c].iter().zip(&base.u.comp[c]).map(|(a, b)| a * b).sum::<f64>())
         .sum();
@@ -301,11 +298,16 @@ fn approximate_paths_correlate_with_full() {
     let grad_for = |paths: GradientPaths| -> VectorField {
         let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), 0.02);
         let mut state = base.clone();
-        let tape =
-            RolloutTape::record(&mut solver, &mut state, 1, |_, _| VectorField::zeros(ncells));
-        let g = rollout_backward(&solver, &tape, paths, |_, _| {
-            (loss.wu.clone(), loss.wp.clone())
+        let tape = Tape::record(&mut solver, &mut state, 1, TapeStrategy::Full, |_, _| {
+            VectorField::zeros(ncells)
         });
+        let g = rollout_backward(
+            &mut solver,
+            &tape,
+            paths,
+            |_, _| VectorField::zeros(ncells),
+            |_, _| (loss.wu.clone(), loss.wp.clone()),
+        );
         g.du0
     };
     let full = grad_for(GradientPaths::FULL);

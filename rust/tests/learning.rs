@@ -40,6 +40,7 @@ fn corrector_training_beats_no_model_vortex_street() {
         lambda_div: 1e-3,
         output_scale: 0.1,
         seed: 0xC0DE,
+        ..Default::default()
     };
     let mut fine = PisoSolver::new(
         fine_mesh,

@@ -1,0 +1,262 @@
+//! Checkpointed-tape and batched-gradient integration tests (the PR-4
+//! acceptance suite): checkpointed backward == full backward bit-for-bit,
+//! peak tape memory reduced ≥ 4× at n=64 / every=8, batched gradients ==
+//! sequential single-scenario gradients, and a finite-difference gradcheck
+//! of the batch-reduced shared source gradient. Run under PICT_THREADS=1
+//! and =4 in CI (the batch paths must be width-independent).
+
+use pict::adjoint::{GradientPaths, Tape, TapeStrategy};
+use pict::coordinator::scenario::{
+    taylor_green_init, taylor_green_nu_sweep, BatchRunner, Scenario, ScenarioRun,
+    TaylorGreen, TerminalKineticEnergy, VortexStreet,
+};
+use pict::coordinator::reduce_shared;
+use pict::mesh::{gen, VectorField};
+use pict::piso::{PisoConfig, PisoSolver, State};
+
+/// Terminal Σu² cotangent on the last of `n` steps.
+fn ke_loss(
+    ncells: usize,
+    n: usize,
+) -> impl FnMut(usize, &State) -> (VectorField, Vec<f64>) {
+    move |step, st| {
+        let mut du = VectorField::zeros(ncells);
+        if step + 1 == n {
+            for c in 0..3 {
+                for i in 0..ncells {
+                    du.comp[c][i] = 2.0 * st.u.comp[c][i];
+                }
+            }
+        }
+        (du, vec![0.0; ncells])
+    }
+}
+
+fn assert_grads_equal(a: &pict::adjoint::RolloutGrads, b: &pict::adjoint::RolloutGrads) {
+    assert_eq!(a.du0, b.du0, "du0 differs");
+    assert_eq!(a.dp0, b.dp0, "dp0 differs");
+    assert_eq!(a.dnu, b.dnu, "dnu differs");
+    assert_eq!(a.dsource.len(), b.dsource.len());
+    for (t, (x, y)) in a.dsource.iter().zip(&b.dsource).enumerate() {
+        assert_eq!(x, y, "dsource[{t}] differs");
+    }
+    assert_eq!(a.dbc, b.dbc, "dbc differs");
+}
+
+/// Checkpointed backward == full backward, bit-for-bit, on the registry
+/// Taylor–Green flow with full gradient paths.
+#[test]
+fn checkpointed_backward_matches_full_on_taylor_green() {
+    let scen = TaylorGreen { n: 8, nu: 0.02, dt: 0.02 };
+    let n = 10;
+    let run_with = |strategy: TapeStrategy| {
+        let ScenarioRun { mut solver, mut state, source, .. } = scen.build();
+        let ncells = solver.mesh.ncells;
+        let tape =
+            Tape::record(&mut solver, &mut state, n, strategy, |_, _| source.clone());
+        let g = tape.backward(
+            &mut solver,
+            GradientPaths::FULL,
+            |_, _| source.clone(),
+            ke_loss(ncells, n),
+        );
+        (g, state)
+    };
+    let (g_full, s_full) = run_with(TapeStrategy::Full);
+    let (g_chk, s_chk) = run_with(TapeStrategy::Checkpoint { every: 4 });
+    assert_eq!(s_full.u, s_chk.u, "forward trajectory must not depend on the tape");
+    assert_grads_equal(&g_full, &g_chk);
+}
+
+/// Same equality on a multi-block mesh with advective-outflow boundaries
+/// (re-stepping must restore the boundary values the forward saw).
+#[test]
+fn checkpointed_backward_matches_full_with_outflow_bcs() {
+    let scen = VortexStreet {
+        nx: [4, 3, 6],
+        ny: [4, 3, 4],
+        re: 200.0,
+        dt: 0.05,
+        target_cfl: 0.8,
+    };
+    let n = 5;
+    let run_with = |strategy: TapeStrategy| {
+        let ScenarioRun { mut solver, mut state, source, .. } = scen.build();
+        let ncells = solver.mesh.ncells;
+        let tape =
+            Tape::record(&mut solver, &mut state, n, strategy, |_, _| source.clone());
+        let g = tape.backward(
+            &mut solver,
+            GradientPaths::FULL,
+            |_, _| source.clone(),
+            ke_loss(ncells, n),
+        );
+        let bc_after = solver.mesh.bc_values.clone();
+        (g, bc_after)
+    };
+    let (g_full, bc_full) = run_with(TapeStrategy::Full);
+    let (g_chk, bc_chk) = run_with(TapeStrategy::Checkpoint { every: 2 });
+    assert_grads_equal(&g_full, &g_chk);
+    // the backward sweep leaves the solver's boundary state where the
+    // forward put it, under either strategy
+    assert_eq!(bc_full, bc_chk, "backward must not move the boundary state");
+}
+
+/// Acceptance: at n = 64 steps with every = 8, the checkpointed sweep's
+/// peak resident fields are at least 4x below the full tape's.
+#[test]
+fn checkpoint_peak_memory_is_4x_below_full_at_n64() {
+    let scen = TaylorGreen { n: 8, nu: 0.02, dt: 0.01 };
+    let n = 64;
+    let run_with = |strategy: TapeStrategy| {
+        let ScenarioRun { mut solver, mut state, source, .. } = scen.build();
+        let ncells = solver.mesh.ncells;
+        let tape =
+            Tape::record(&mut solver, &mut state, n, strategy, |_, _| source.clone());
+        let resident = tape.resident_f64();
+        let (_, stats) = tape.backward_with_stats(
+            &mut solver,
+            GradientPaths::NONE,
+            |_, _| source.clone(),
+            ke_loss(ncells, n),
+        );
+        (resident, stats.peak_resident_f64)
+    };
+    let (full_resident, full_peak) = run_with(TapeStrategy::Full);
+    let (chk_resident, chk_peak) = run_with(TapeStrategy::Checkpoint { every: 8 });
+    assert_eq!(full_resident, full_peak, "full tape rematerializes nothing");
+    assert!(
+        chk_peak * 4 <= full_peak,
+        "peak fields: checkpoint {chk_peak} vs full {full_peak} (< 4x reduction)"
+    );
+    assert!(chk_resident < chk_peak, "checkpoint peak includes the live segment");
+}
+
+/// A 2-scenario gradient batch (checkpointed, pooled) returns exactly the
+/// gradients of the two single-scenario runs (full tape, serial pool).
+#[test]
+fn batched_gradients_match_sequential_single_scenario_runs() {
+    let steps = 4;
+    let loss = TerminalKineticEnergy { final_step: steps - 1 };
+    let scens = taylor_green_nu_sweep(8, &[0.02, 0.05]);
+    let batch = BatchRunner::new(steps).with_threads(2).run_gradients(
+        &scens,
+        TapeStrategy::Checkpoint { every: 2 },
+        GradientPaths::FULL,
+        &loss,
+    );
+    assert_eq!(batch.len(), 2);
+    for (i, want_nu) in [0.02, 0.05].iter().enumerate() {
+        let single: Vec<Box<dyn Scenario>> =
+            vec![Box::new(TaylorGreen { n: 8, nu: *want_nu, ..Default::default() })];
+        let got = BatchRunner::new(steps).with_threads(1).run_gradients(
+            &single,
+            TapeStrategy::Full,
+            GradientPaths::FULL,
+            &loss,
+        );
+        assert_eq!(batch[i].label, got[0].label);
+        assert_eq!(batch[i].loss, got[0].loss, "loss differs for {}", batch[i].label);
+        assert_eq!(batch[i].state.u, got[0].state.u);
+        assert_grads_equal(&batch[i].grads, &got[0].grads);
+    }
+}
+
+/// Scenario with a shared forcing field and tight solver tolerances, for
+/// finite-difference validation of the batch-reduced source gradient.
+struct ForcedTg {
+    nu: f64,
+    src: VectorField,
+}
+
+const FTG_N: usize = 6;
+
+impl Scenario for ForcedTg {
+    fn kind(&self) -> &'static str {
+        "forced-tg-test"
+    }
+
+    fn label(&self) -> String {
+        format!("forced-tg nu={}", self.nu)
+    }
+
+    fn build(&self) -> ScenarioRun {
+        let mesh = gen::periodic_box2d(FTG_N, FTG_N, 1.0, 1.0);
+        let mut cfg = PisoConfig { dt: 0.04, ..Default::default() };
+        cfg.adv_opts.tol = 1e-13;
+        cfg.adv_opts.max_iter = 5000;
+        cfg.p_opts.tol = 1e-13;
+        cfg.p_opts.max_iter = 20000;
+        let solver = PisoSolver::new(mesh, cfg, self.nu);
+        let mut state = State::zeros(&solver.mesh);
+        state.u = taylor_green_init(&solver.mesh);
+        state.u.scale(0.4);
+        ScenarioRun { label: self.label(), solver, state, source: self.src.clone() }
+    }
+}
+
+/// Gradcheck: the batch-reduced ∂(ΣL_i)/∂S from `reduce_shared` matches
+/// central finite differences of the summed loss under a shared constant
+/// source perturbation.
+#[test]
+fn batch_reduced_source_gradient_matches_finite_differences() {
+    let steps = 2;
+    let ncells = FTG_N * FTG_N;
+    let nus = [0.02, 0.04];
+    let scens_with = |src: &VectorField| -> Vec<Box<dyn Scenario>> {
+        nus.iter()
+            .map(|&nu| Box::new(ForcedTg { nu, src: src.clone() }) as Box<dyn Scenario>)
+            .collect()
+    };
+    let mut src0 = VectorField::zeros(ncells);
+    for i in 0..ncells {
+        src0.comp[0][i] = 0.05 * ((i * 7 % 11) as f64 - 5.0) / 5.0;
+        src0.comp[1][i] = 0.03 * ((i * 5 % 13) as f64 - 6.0) / 6.0;
+    }
+
+    // analytic: batch record/backward, then the shared reduction; the
+    // source is constant over steps, so dL/dS = Σ_t dsource[t]
+    let loss = TerminalKineticEnergy { final_step: steps - 1 };
+    let results = BatchRunner::new(steps).with_threads(2).run_gradients(
+        &scens_with(&src0),
+        TapeStrategy::Checkpoint { every: 1 },
+        GradientPaths::FULL,
+        &loss,
+    );
+    let shared = reduce_shared(&results);
+    let ds = shared.dsource.expect("same-mesh batch");
+    assert_eq!(ds.len(), steps);
+
+    // summed forward loss under a given shared source
+    let total_loss = |src: &VectorField| -> f64 {
+        scens_with(src)
+            .iter()
+            .map(|s| {
+                let ScenarioRun { mut solver, mut state, source, .. } = s.build();
+                for _ in 0..steps {
+                    solver.step(&mut state, &source, None);
+                }
+                state
+                    .u
+                    .comp
+                    .iter()
+                    .map(|c| c.iter().map(|v| v * v).sum::<f64>())
+                    .sum::<f64>()
+            })
+            .sum()
+    };
+
+    let eps = 1e-5;
+    for (comp, cell) in [(0usize, 3usize), (0, 17), (1, 8), (1, 30)] {
+        let mut up = src0.clone();
+        up.comp[comp][cell] += eps;
+        let mut dn = src0.clone();
+        dn.comp[comp][cell] -= eps;
+        let fd = (total_loss(&up) - total_loss(&dn)) / (2.0 * eps);
+        let an: f64 = ds.iter().map(|g| g.comp[comp][cell]).sum();
+        assert!(
+            (fd - an).abs() < 3e-4 * (1.0 + fd.abs()),
+            "dS[{comp}][{cell}]: fd {fd} vs batch-reduced adjoint {an}"
+        );
+    }
+}
