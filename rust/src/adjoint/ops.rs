@@ -108,7 +108,7 @@ pub fn assemble_c_adjoint(
     let mut duc = vec![[0.0f64; 3]; mesh.ncells];
     for cell in 0..mesh.ncells {
         let inv_j = 1.0 / mesh.jac[cell];
-        let k_diag = c.find(cell, cell).expect("diag in C");
+        let k_diag = c.find(cell, cell).expect("assembly puts a diagonal in every C row");
         let d_diag = dc[k_diag];
         for face in 0..2 * mesh.dim {
             let ax = face_axis(face);
@@ -200,7 +200,7 @@ pub fn boundary_flux_adjoint(
 /// layout of `m.vals`, for the *negated* matrix M = −P), accumulate ∂(A⁻¹).
 pub fn assemble_pressure_adjoint(mesh: &Mesh, m: &Csr, dm: &[f64], da_inv: &mut [f64]) {
     for cell in 0..mesh.ncells {
-        let k_diag = m.find(cell, cell).expect("diag in M");
+        let k_diag = m.find(cell, cell).expect("assembly puts a diagonal in every M row");
         let d_diag = dm[k_diag];
         for face in 0..2 * mesh.dim {
             let ax = face_axis(face);

@@ -264,7 +264,7 @@ pub fn backward_step(
 
     // ---- a_inv = 1/diag(C)  ⇒ dC_diag −= a_inv² d_a_inv (A.38-like) ----
     for cell in 0..n {
-        let k = c.find(cell, cell).expect("diag");
+        let k = c.find(cell, cell).expect("assembly puts a diagonal in every C row");
         d_c[k] -= a_inv[cell] * a_inv[cell] * d_a_inv[cell];
     }
 

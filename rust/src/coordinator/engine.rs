@@ -221,9 +221,9 @@ pub fn train_corrector_batch(
         // every scenario must provide the *same* mesh geometry, not merely
         // the same cell count (a periodic box and a cavity of equal size
         // would silently convolve with the wrong neighbor tables)
-        let first = runs[0].lock().unwrap();
+        let first = runs[0].lock().expect("run mutex unpoisoned: pool rethrows worker panics");
         for r in &runs[1..] {
-            let other = r.lock().unwrap();
+            let other = r.lock().expect("run mutex unpoisoned: pool rethrows worker panics");
             assert!(
                 other.solver.mesh.ncells == first.solver.mesh.ncells
                     && other.solver.mesh.dim == first.solver.mesh.dim
@@ -235,7 +235,10 @@ pub fn train_corrector_batch(
         }
     }
 
-    let mut net = corrector_net(&runs[0].lock().unwrap().solver.mesh, cfg.seed);
+    let mut net = corrector_net(
+        &runs[0].lock().expect("run mutex unpoisoned: pool rethrows worker panics").solver.mesh,
+        cfg.seed,
+    );
     let mut opt = Adam::new(cfg.lr, net.nparams());
     let mut rng = Rng::new(cfg.seed ^ 0x55);
     let mut losses = Vec::new();
@@ -255,7 +258,8 @@ pub fn train_corrector_batch(
                 let frames_ref = frames;
                 let starts_ref = &starts;
                 ctx.run_tasks(nscen, |i| {
-                    let mut run = runs[i].lock().unwrap();
+                    let mut run =
+                        runs[i].lock().expect("run mutex held once per task index");
                     let ScenarioRun { ref mut solver, ref source, .. } = *run;
                     let got = episode(
                         solver,
@@ -266,14 +270,18 @@ pub fn train_corrector_batch(
                         unroll,
                         cfg_ref,
                     );
-                    *slots[i].lock().unwrap() = Some(got);
+                    *slots[i].lock().expect("slot mutex held once per task index") = Some(got);
                 });
             }
             // reduce in scenario order (deterministic sum)
             let mut batch_loss = 0.0;
             let mut dparams = vec![0.0; net.nparams()];
             for slot in &slots {
-                let (l, dp) = slot.lock().unwrap().take().expect("episode skipped");
+                let (l, dp) = slot
+                    .lock()
+                    .expect("slot mutex unpoisoned: pool rethrows worker panics")
+                    .take()
+                    .expect("every episode task fills its slot before the batch reduce");
                 batch_loss += l;
                 for (a, b) in dparams.iter_mut().zip(&dp) {
                     *a += b;
@@ -307,11 +315,15 @@ pub fn scenario_reference_frames(
         let mut run = fine[i].build();
         run.solver.ctx = ctx.clone();
         let frames = make_reference_frames(&mut run.solver, &mut run.state, coarse_mesh, cfg);
-        *slots[i].lock().unwrap() = Some(frames);
+        *slots[i].lock().expect("slot mutex held once per task index") = Some(frames);
     });
     slots
         .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("frame generation skipped a scenario"))
+        .map(|m| {
+            m.into_inner()
+                .expect("slot mutex unpoisoned: pool rethrows worker panics")
+                .expect("frame generation skipped a scenario")
+        })
         .collect()
 }
 

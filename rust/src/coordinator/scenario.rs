@@ -448,7 +448,13 @@ impl BatchRunner {
     pub fn advance(&self, runs: Vec<ScenarioRun>) -> Vec<BatchResult> {
         let slots: Vec<Mutex<Option<ScenarioRun>>> =
             runs.into_iter().map(|r| Mutex::new(Some(r))).collect();
-        self.drive(slots.len(), |i| slots[i].lock().unwrap().take().expect("run taken twice"))
+        self.drive(slots.len(), |i| {
+            slots[i]
+                .lock()
+                .expect("slot mutex held once per task index")
+                .take()
+                .expect("each run is taken exactly once, by its own task")
+        })
     }
 
     fn drive<F>(&self, count: usize, make: F) -> Vec<BatchResult>
@@ -480,22 +486,27 @@ impl BatchRunner {
                 max_divergence = max_divergence.max(st.max_divergence);
                 last = st;
             }
-            *results[i].lock().unwrap() = Some(BatchResult {
-                label: run.label,
-                state: run.state,
-                steps,
-                adv_iters,
-                p_iters,
-                adv_residual,
-                p_residual,
-                max_divergence,
-                last,
-                wall_s: t0.elapsed().as_secs_f64(),
-            });
+            *results[i].lock().expect("slot mutex held once per task index") =
+                Some(BatchResult {
+                    label: run.label,
+                    state: run.state,
+                    steps,
+                    adv_iters,
+                    p_iters,
+                    adv_residual,
+                    p_residual,
+                    max_divergence,
+                    last,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                });
         });
         results
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("batch worker skipped a run"))
+            .map(|m| {
+                m.into_inner()
+                    .expect("slot mutex unpoisoned: pool rethrows worker panics")
+                    .expect("batch worker skipped a run")
+            })
             .collect()
     }
 }
@@ -683,19 +694,24 @@ impl BatchRunner {
                     loss.grad(i, step, st)
                 },
             );
-            *results[i].lock().unwrap() = Some(GradBatchResult {
-                label,
-                state,
-                loss: total,
-                grads,
-                mesh_fp,
-                peak_resident_f64: stats.peak_resident_f64,
-                wall_s: t0.elapsed().as_secs_f64(),
-            });
+            *results[i].lock().expect("slot mutex held once per task index") =
+                Some(GradBatchResult {
+                    label,
+                    state,
+                    loss: total,
+                    grads,
+                    mesh_fp,
+                    peak_resident_f64: stats.peak_resident_f64,
+                    wall_s: t0.elapsed().as_secs_f64(),
+                });
         });
         results
             .into_iter()
-            .map(|m| m.into_inner().unwrap().expect("gradient batch skipped a scenario"))
+            .map(|m| {
+                m.into_inner()
+                    .expect("slot mutex unpoisoned: pool rethrows worker panics")
+                    .expect("gradient batch skipped a scenario")
+            })
             .collect()
     }
 }

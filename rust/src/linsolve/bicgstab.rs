@@ -3,7 +3,7 @@
 //! strongly graded meshes).
 
 use super::precond::Preconditioner;
-use super::{SolveOpts, SolveStats};
+use super::{debug_check_finite, SolveOpts, SolveStats};
 use crate::par::ExecCtx;
 use crate::sparse::Csr;
 
@@ -40,6 +40,8 @@ pub fn bicgstab(
     let r0 = r.clone();
     let bnorm = norm2(b).max(1e-300);
     let mut res = norm2(&r) / bnorm;
+    debug_check_finite("bicgstab", "rhs b", 0, res, b);
+    debug_check_finite("bicgstab", "residual r", 0, res, &r);
     if res < opts.tol {
         return SolveStats { iterations: 0, residual: res, converged: true };
     }
@@ -73,6 +75,7 @@ pub fn bicgstab(
         // s = r - alpha v   (reuse r)
         axpy(-alpha, &v, &mut r);
         res = norm2(&r) / bnorm;
+        debug_check_finite("bicgstab", "intermediate residual s", it, res, &r);
         if res < opts.tol {
             axpy(alpha, &phat, x);
             return SolveStats { iterations: it, residual: res, converged: true };
@@ -89,6 +92,7 @@ pub fn bicgstab(
         axpy(omega, &shat, x);
         axpy(-omega, &t, &mut r);
         res = norm2(&r) / bnorm;
+        debug_check_finite("bicgstab", "residual r", it, res, &r);
         if res < opts.tol {
             return SolveStats { iterations: it, residual: res, converged: true };
         }
@@ -174,6 +178,18 @@ mod tests {
             st_j.iterations
         );
         assert!(a.residual_norm(&x2, &b) < 1e-6);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite")]
+    fn debug_guard_trips_on_poisoned_rhs() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let a = random_dd(12, &mut rng);
+        let mut b = rng.normal_vec(12);
+        b[7] = f64::INFINITY;
+        let mut x = vec![0.0; 12];
+        bicgstab(&ExecCtx::serial(), &a, &b, &mut x, &Identity, SolveOpts::default());
     }
 
     #[test]

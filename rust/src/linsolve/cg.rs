@@ -6,7 +6,7 @@
 //! deflation of the constant vector).
 
 use super::precond::Preconditioner;
-use super::{SolveOpts, SolveStats};
+use super::{debug_check_finite, SolveOpts, SolveStats};
 use crate::par::ExecCtx;
 use crate::sparse::Csr;
 
@@ -65,6 +65,8 @@ pub fn cg(
     let mut ap = vec![0.0; n];
 
     let mut res = norm2(&r) / bnorm;
+    debug_check_finite("cg", "rhs b", 0, res, &b);
+    debug_check_finite("cg", "residual r", 0, res, &r);
     if res < opts.tol {
         return SolveStats { iterations: 0, residual: res, converged: true };
     }
@@ -82,6 +84,7 @@ pub fn cg(
         axpy(alpha, &p, x);
         axpy(-alpha, &ap, &mut r);
         res = norm2(&r) / bnorm;
+        debug_check_finite("cg", "residual r", it, res, &r);
         if res < opts.tol {
             if project_nullspace {
                 remove_mean(x);
@@ -195,6 +198,17 @@ mod tests {
         for (u, v) in x1.iter().zip(&x2) {
             assert!((u - v).abs() < 1e-8);
         }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite")]
+    fn debug_guard_trips_on_poisoned_rhs() {
+        let a = poisson1d(10);
+        let mut b = vec![1.0; 10];
+        b[3] = f64::NAN;
+        let mut x = vec![0.0; 10];
+        cg(&ExecCtx::serial(), &a, &b, &mut x, &Identity, false, SolveOpts::default());
     }
 
     #[test]

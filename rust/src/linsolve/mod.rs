@@ -36,6 +36,30 @@ impl Default for SolveOpts {
     }
 }
 
+/// Debug-build guard against silent NaN/Inf contamination of a Krylov
+/// iteration. A single non-finite entry in the RHS or an overflowing
+/// iterate otherwise propagates through every dot product and poisons the
+/// solution (and, downstream, the adjoint tape) without any solver ever
+/// failing — the residual just goes NaN and the `< tol` test is quietly
+/// false forever. In debug builds this panics naming the solver, the
+/// vector, the iteration, and the current residual; release builds compile
+/// it away to nothing.
+#[inline]
+pub(crate) fn debug_check_finite(solver: &str, what: &str, iteration: usize, residual: f64, v: &[f64]) {
+    #[cfg(debug_assertions)]
+    if let Some(i) = v.iter().position(|x| !x.is_finite()) {
+        panic!(
+            "{solver}: non-finite {what}[{i}] = {} at iteration {iteration} \
+             (residual {residual:.3e}) — poisoned input or diverging iteration",
+            v[i]
+        );
+    }
+    #[cfg(not(debug_assertions))]
+    {
+        let _ = (solver, what, iteration, residual, v);
+    }
+}
+
 // BLAS-1 primitives and SpMV come from the caller's
 // [`ExecCtx`](crate::par::ExecCtx): both solvers take the context
 // explicitly, so the Krylov loop, its preconditioner applies, and every

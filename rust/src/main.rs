@@ -25,9 +25,9 @@ fn main() {
                     "{:<6} loss {:.2e} -> {:.2e}, theta {:.4}, {:.2}s{}",
                     r.label,
                     r.losses[0],
-                    r.losses.last().unwrap(),
+                    r.losses.last().expect("ablation records one loss per iteration"),
                     r.final_theta,
-                    r.times.last().unwrap(),
+                    r.times.last().expect("ablation records one time per iteration"),
                     if r.diverged { " [DIVERGED]" } else { "" }
                 );
             }

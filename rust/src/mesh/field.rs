@@ -108,7 +108,7 @@ pub fn sample_idw(mesh: &Mesh, field: &[f64], p: [f64; 3]) -> f64 {
             let d = (c[0] - p[0]).powi(2) + (c[1] - p[1]).powi(2) + (c[2] - p[2]).powi(2);
             if d < best[3].0 {
                 best[3] = (d, b.offset + l);
-                best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                best.sort_by(|a, b| a.0.total_cmp(&b.0));
             }
         }
     }

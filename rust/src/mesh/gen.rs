@@ -36,7 +36,7 @@ pub fn graded_coords_both(n: usize, lo: f64, l: f64, ratio: f64) -> Vec<f64> {
         acc += s / total * l;
         xs.push(lo + acc);
     }
-    *xs.last_mut().unwrap() = lo + l; // avoid fp drift
+    *xs.last_mut().expect("coords start with the pushed lo entry") = lo + l; // avoid fp drift
     xs
 }
 
@@ -53,7 +53,7 @@ pub fn graded_coords_one(n: usize, lo: f64, l: f64, ratio: f64, toward_lo: bool)
         acc += s / total * l;
         xs.push(lo + acc);
     }
-    *xs.last_mut().unwrap() = lo + l;
+    *xs.last_mut().expect("coords start with the pushed lo entry") = lo + l;
     xs
 }
 

@@ -38,7 +38,9 @@
 //! a 3-scenario batch on 16 cores keeps the remaining cores busy with
 //! kernel chunks instead of idling them.
 
+pub mod model;
 pub mod pool;
+pub(crate) mod shim;
 
 pub use pool::Pool;
 
@@ -596,5 +598,42 @@ mod tests {
     #[test]
     fn env_threads_is_at_least_one() {
         assert!(env_threads() >= 1);
+    }
+
+    #[test]
+    fn miri_disjoint_mut_halves_do_not_alias() {
+        // Fast Miri target for DisjointMut: two pool tasks write disjoint
+        // halves of one buffer through the raw-pointer accessors.
+        let mut buf = vec![0.0f64; 16];
+        {
+            let dm = DisjointMut::new(&mut buf);
+            let ctx = ExecCtx::with_threads(2);
+            ctx.run_tasks(2, |t| {
+                // SAFETY: the two tasks write disjoint halves
+                let half = unsafe { dm.range(8 * t..8 * (t + 1)) };
+                for (i, v) in half.iter_mut().enumerate() {
+                    *v = (8 * t + i) as f64;
+                }
+            });
+        }
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f64);
+        }
+    }
+
+    #[test]
+    fn miri_matvec_chunks_sound_at_forced_width() {
+        // Forced 2-way row partition on a small system: the DisjointMut row
+        // ranges and the erased task borrow must pass Miri's aliasing
+        // checks and still be bit-for-bit serial.
+        let mut rng = Rng::new(0x31AB);
+        let a = random_csr(12, 0.4, &mut rng);
+        let x = rng.normal_vec(12);
+        let mut y_serial = vec![0.0; 12];
+        a.matvec(&x, &mut y_serial);
+        let ctx = ExecCtx::with_threads(2);
+        let mut y_par = vec![0.0; 12];
+        ctx.matvec_chunks(&a, &x, &mut y_par, 2);
+        assert_eq!(y_serial, y_par);
     }
 }

@@ -16,10 +16,13 @@
 //! is busy: tasks never block on anything but their own nested jobs, so the
 //! wait graph stays acyclic.
 
+// Sync primitives come through the `shim` re-exports: plain `std::sync` in
+// ordinary builds, the instrumented model wrappers under `--cfg loom` (see
+// `par::model`) — same source, both worlds.
+use super::shim::atomic::{AtomicUsize, Ordering};
+use super::shim::thread::{self, JoinHandle};
+use super::shim::{Arc, Condvar, Mutex, OnceLock};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread::JoinHandle;
 
 /// Erased reference to a job's task function. [`Pool::run`] blocks until
 /// every task has finished before returning, so the pointee outlives every
@@ -60,7 +63,8 @@ impl Job {
             let flag = TaskFlagGuard::enter();
             if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(t)))
             {
-                let mut slot = self.panic.lock().unwrap();
+                let mut slot =
+                    self.panic.lock().expect("pool mutexes: no code panics while holding them");
                 if slot.is_none() {
                     *slot = Some(payload);
                 }
@@ -69,7 +73,8 @@ impl Job {
             if self.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
                 // last finisher: take the lock so the notify cannot race
                 // between the waiter's predicate check and its wait()
-                let _guard = self.done.lock().unwrap();
+                let _guard =
+                    self.done.lock().expect("pool mutexes: no code panics while holding them");
                 self.done_cv.notify_all();
             }
         }
@@ -80,9 +85,12 @@ impl Job {
     }
 
     fn wait(&self) {
-        let mut guard = self.done.lock().unwrap();
+        let mut guard = self.done.lock().expect("pool mutexes: no code panics while holding them");
         while self.pending.load(Ordering::SeqCst) != 0 {
-            guard = self.done_cv.wait(guard).unwrap();
+            guard = self
+                .done_cv
+                .wait(guard)
+                .expect("pool mutexes: no code panics while holding them");
         }
     }
 }
@@ -124,7 +132,7 @@ impl Drop for TaskFlagGuard {
 }
 
 fn worker_loop(inner: &PoolInner) {
-    let mut gate = inner.gate.lock().unwrap();
+    let mut gate = inner.gate.lock().expect("pool mutexes: no code panics while holding them");
     loop {
         if gate.shutdown {
             return;
@@ -139,9 +147,17 @@ fn worker_loop(inner: &PoolInner) {
                 let job = job.clone();
                 drop(gate);
                 job.help();
-                gate = inner.gate.lock().unwrap();
+                gate = inner
+                    .gate
+                    .lock()
+                    .expect("pool mutexes: no code panics while holding them");
             }
-            None => gate = inner.work_cv.wait(gate).unwrap(),
+            None => {
+                gate = inner
+                    .work_cv
+                    .wait(gate)
+                    .expect("pool mutexes: no code panics while holding them");
+            }
         }
     }
 }
@@ -171,10 +187,11 @@ impl Pool {
                 gate: Mutex::new(Gate { queue: VecDeque::new(), shutdown: false }),
                 work_cv: Condvar::new(),
             });
-            let mut handles = self.handles.lock().unwrap();
+            let mut handles =
+                self.handles.lock().expect("pool mutexes: no code panics while holding them");
             for i in 0..self.width - 1 {
                 let worker = inner.clone();
-                let handle = std::thread::Builder::new()
+                let handle = thread::Builder::new()
                     .name(format!("pict-par-{i}"))
                     .spawn(move || worker_loop(&worker))
                     .expect("failed to spawn pool worker");
@@ -220,7 +237,8 @@ impl Pool {
             done_cv: Condvar::new(),
         });
         {
-            let mut gate = inner.gate.lock().unwrap();
+            let mut gate =
+                inner.gate.lock().expect("pool mutexes: no code panics while holding them");
             if IN_POOL_TASK.with(|w| w.get()) {
                 gate.queue.push_front(job.clone());
             } else {
@@ -237,7 +255,9 @@ impl Pool {
         }
         job.help();
         job.wait();
-        if let Some(payload) = job.panic.lock().unwrap().take() {
+        let payload =
+            job.panic.lock().expect("pool mutexes: no code panics while holding them").take();
+        if let Some(payload) = payload {
             std::panic::resume_unwind(payload);
         }
     }
@@ -246,9 +266,17 @@ impl Pool {
 impl Drop for Pool {
     fn drop(&mut self) {
         if let Some(inner) = self.inner.get() {
-            inner.gate.lock().unwrap().shutdown = true;
+            inner
+                .gate
+                .lock()
+                .expect("pool mutexes: no code panics while holding them")
+                .shutdown = true;
             inner.work_cv.notify_all();
-            for handle in self.handles.get_mut().unwrap().drain(..) {
+            let handles = self
+                .handles
+                .get_mut()
+                .expect("pool mutexes: no code panics while holding them");
+            for handle in handles.drain(..) {
                 let _ = handle.join();
             }
         }
@@ -331,5 +359,135 @@ mod tests {
             sum.fetch_add(t, Ordering::SeqCst);
         });
         assert_eq!(sum.load(Ordering::SeqCst), 6);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // 50 contended rounds: correct but too slow under Miri
+    fn stress_panicking_tasks_under_contention() {
+        // Repeated rounds of a panic-injecting job racing a clean job from
+        // another submitter: each panic must reach exactly its own
+        // submitter, the clean job must be unaffected, and no worker may
+        // hang or die — the pool must stay fully serviceable afterwards.
+        let pool = Pool::new(4);
+        for round in 0..50usize {
+            std::thread::scope(|s| {
+                let pool = &pool;
+                s.spawn(move || {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        pool.run(32, &|t| {
+                            if t % 7 == round % 7 {
+                                panic!("injected failure");
+                            }
+                        });
+                    }));
+                    assert!(result.is_err(), "round {round}: panic must propagate");
+                });
+                s.spawn(move || {
+                    let sum = AtomicUsize::new(0);
+                    pool.run(32, &|t| {
+                        sum.fetch_add(t, Ordering::SeqCst);
+                    });
+                    assert_eq!(sum.load(Ordering::SeqCst), 32 * 31 / 2, "round {round}");
+                });
+            });
+        }
+        // every worker still answers after 50 poisoned rounds
+        let hits: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), &|t| {
+            hits[t].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn miri_erased_taskref_borrow_is_sound() {
+        // Fast Miri target: the lifetime-erased TaskRef dereference and the
+        // claim-counter handshake, at a size Miri finishes quickly.
+        let pool = Pool::new(2);
+        let data: Vec<usize> = (0..8).collect();
+        let out: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(out.len(), &|t| {
+            out[t].store(data[t] * 3 + 1, Ordering::SeqCst);
+        });
+        for (t, o) in out.iter().enumerate() {
+            assert_eq!(o.load(Ordering::SeqCst), t * 3 + 1);
+        }
+    }
+}
+
+// The pool's concurrency protocol model-checked under perturbed schedules:
+// build and run with RUSTFLAGS="--cfg loom" so `shim` swaps the sync
+// primitives for the instrumented wrappers in `par::model`. Covers the four
+// contract-critical behaviors: condvar parking/wakeup, shared-counter task
+// claiming, reentrant nested submission, and panic propagation.
+#[cfg(all(test, loom))]
+mod loom_model {
+    use super::*;
+    use crate::par::model::model;
+
+    #[test]
+    fn loom_condvar_parking_and_wakeup() {
+        // Back-to-back jobs force workers through the full park/wake cycle
+        // between jobs; a lost wakeup deadlocks and trips the watchdog.
+        model("condvar-parking", || {
+            let pool = Pool::new(3);
+            for _ in 0..3 {
+                let hits: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(hits.len(), &|t| {
+                    hits[t].fetch_add(1, Ordering::SeqCst);
+                });
+                assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+            }
+        });
+    }
+
+    #[test]
+    fn loom_shared_counter_claims_every_task_exactly_once() {
+        model("task-claiming", || {
+            let pool = Pool::new(4);
+            let hits: Vec<AtomicUsize> = (0..16).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(hits.len(), &|t| {
+                hits[t].fetch_add(1, Ordering::SeqCst);
+            });
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "task {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn loom_reentrant_nested_submission_completes() {
+        model("nested-submission", || {
+            let pool = Pool::new(3);
+            let total = AtomicUsize::new(0);
+            pool.run(3, &|_outer| {
+                pool.run(4, &|inner| {
+                    total.fetch_add(inner + 1, Ordering::SeqCst);
+                });
+            });
+            assert_eq!(total.load(Ordering::SeqCst), 3 * 10);
+        });
+    }
+
+    #[test]
+    fn loom_panic_propagation_leaves_no_hung_worker() {
+        model("panic-propagation", || {
+            let pool = Pool::new(2);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(6, &|t| {
+                    if t == 2 {
+                        panic!("boom");
+                    }
+                });
+            }));
+            let payload = result.expect_err("panic must reach the submitter");
+            assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+            // pool (and its workers) must remain serviceable
+            let sum = AtomicUsize::new(0);
+            pool.run(4, &|t| {
+                sum.fetch_add(t, Ordering::SeqCst);
+            });
+            assert_eq!(sum.load(Ordering::SeqCst), 6);
+        });
     }
 }

@@ -1,0 +1,29 @@
+//! cfg-switched sync primitives for the pool.
+//!
+//! Default builds re-export `std::sync` so [`pool`](super::pool) compiles
+//! to exactly the code it always did. Under `RUSTFLAGS="--cfg loom"` the
+//! same names resolve to the instrumented wrappers in [`model`](super::model),
+//! which inject schedule perturbation points at every lock acquisition,
+//! condvar wait, and atomic RMW — the pool's source is identical in both
+//! worlds, so what the model checks is what ships.
+//!
+//! `Arc` and `OnceLock` are deliberately not instrumented: the pool uses
+//! them only for refcounted ownership and once-only lazy spawn, whose
+//! interleavings are not interesting to perturb. The contended state the
+//! model explores lives entirely behind `Mutex`/`Condvar`/`AtomicUsize`.
+
+#[cfg(not(loom))]
+pub(crate) use std::sync::atomic;
+#[cfg(not(loom))]
+pub(crate) use std::sync::{Condvar, Mutex};
+#[cfg(not(loom))]
+pub(crate) use std::thread;
+
+#[cfg(loom)]
+pub(crate) use super::model::sync::atomic;
+#[cfg(loom)]
+pub(crate) use super::model::sync::{Condvar, Mutex};
+#[cfg(loom)]
+pub(crate) use super::model::thread;
+
+pub(crate) use std::sync::{Arc, OnceLock};

@@ -179,7 +179,7 @@ impl ArtifactSet {
             let exe = self.client.compile(&comp)?;
             self.compiled.insert(entry.to_string(), Executable { meta, exe });
         }
-        Ok(self.compiled.get(entry).unwrap())
+        Ok(self.compiled.get(entry).expect("inserted above when absent"))
     }
 }
 

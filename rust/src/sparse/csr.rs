@@ -111,7 +111,8 @@ impl Csr {
     pub fn matvec(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.n);
         assert_eq!(y.len(), self.n);
-        assert_eq!(*self.row_ptr.last().unwrap(), self.col_idx.len());
+        let last = *self.row_ptr.last().expect("row_ptr has n+1 entries by construction");
+        assert_eq!(last, self.col_idx.len());
         for r in 0..self.n {
             let mut acc = 0.0;
             // SAFETY: row_ptr is monotone with last == nnz (asserted above)
@@ -234,6 +235,22 @@ mod tests {
     #[test]
     fn diagonal_extraction() {
         assert_eq!(example().diagonal(), vec![2.0, 3.0, 5.0]);
+    }
+
+    #[test]
+    fn miri_unchecked_matvec_stays_in_bounds() {
+        // Fast Miri target for the get_unchecked hot loop: every index the
+        // unsafe block touches is validated by the constructors, and the
+        // result must equal a fully checked dense multiply.
+        let a = example();
+        let x = [0.5, -1.5, 2.0];
+        let mut y = [0.0; 3];
+        a.matvec(&x, &mut y);
+        let dense = a.to_dense();
+        for r in 0..3 {
+            let want: f64 = (0..3).map(|c| dense[r][c] * x[c]).sum();
+            assert!((y[r] - want).abs() < 1e-15, "{} vs {want}", y[r]);
+        }
     }
 
     #[test]

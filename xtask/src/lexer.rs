@@ -1,0 +1,367 @@
+//! Minimal Rust token scanner for the lint pass.
+//!
+//! `syn` cannot be vendored into the offline build, so the lint rules run on
+//! this hand-rolled lexer instead of a real AST. It only needs to be precise
+//! about the things that make naive `grep`-style linting wrong: comments
+//! (line, nested block, doc), string/char literals (including raw strings
+//! and escapes), and lifetimes vs char literals. Everything else is emitted
+//! as identifiers and punctuation with 1-based line numbers, which is enough
+//! for the path/method-call patterns the rules match.
+
+/// One lexed token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    /// String literal (normal, raw, or byte); payload is the raw contents
+    /// between the delimiters, escapes untouched.
+    Str(String),
+    /// Char or byte-char literal.
+    Char,
+    Num,
+    Lifetime,
+    /// The `::` path separator (collapsed into one token for rule matching).
+    PathSep,
+    Punct(char),
+    /// Comment including its delimiters (`// …`, `/* … */`, doc forms).
+    Comment(String),
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub tok: Tok,
+    /// 1-based line of the token's first character.
+    pub line: usize,
+    /// 1-based line of the token's last character (differs from `line` only
+    /// for block comments and multi-line strings).
+    pub end_line: usize,
+}
+
+impl Token {
+    pub fn ident(&self) -> Option<&str> {
+        match &self.tok {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.tok == Tok::Punct(c)
+    }
+}
+
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { chars: src.chars().collect(), pos: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    pos: usize,
+    line: usize,
+    out: Vec<Token>,
+}
+
+impl Lexer {
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.pos + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.pos).copied();
+        if let Some(c) = c {
+            self.pos += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, tok: Tok, line: usize) {
+        self.out.push(Token { tok, line, end_line: self.line });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while let Some(c) = self.peek(0) {
+            let start = self.line;
+            match c {
+                c if c.is_whitespace() => {
+                    self.bump();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(start),
+                '/' if self.peek(1) == Some('*') => self.block_comment(start),
+                '"' => {
+                    self.bump();
+                    let s = self.string_body();
+                    self.push(Tok::Str(s), start);
+                }
+                '\'' => self.char_or_lifetime(start),
+                c if c.is_ascii_digit() => self.number(start),
+                c if c == '_' || c.is_alphabetic() => self.ident_or_prefixed(start),
+                ':' if self.peek(1) == Some(':') => {
+                    self.bump();
+                    self.bump();
+                    self.push(Tok::PathSep, start);
+                }
+                c => {
+                    self.bump();
+                    self.push(Tok::Punct(c), start);
+                }
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self, start: usize) {
+        let mut text = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            text.push(c);
+            self.bump();
+        }
+        self.push(Tok::Comment(text), start);
+    }
+
+    fn block_comment(&mut self, start: usize) {
+        let mut text = String::new();
+        let mut depth = 0usize;
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                text.push_str("/*");
+                self.bump();
+                self.bump();
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                text.push_str("*/");
+                self.bump();
+                self.bump();
+                if depth == 0 {
+                    break;
+                }
+            } else {
+                text.push(c);
+                self.bump();
+            }
+        }
+        self.push(Tok::Comment(text), start);
+    }
+
+    /// Body of a normal (escaped) string; the opening `"` is consumed.
+    fn string_body(&mut self) -> String {
+        let mut s = String::new();
+        while let Some(c) = self.bump() {
+            match c {
+                '"' => break,
+                '\\' => {
+                    s.push('\\');
+                    if let Some(e) = self.bump() {
+                        s.push(e);
+                    }
+                }
+                c => s.push(c),
+            }
+        }
+        s
+    }
+
+    /// Raw string after the `r`/`br` prefix: `#…#"` then contents until
+    /// `"#…#` with the same hash count.
+    fn raw_string_body(&mut self) -> String {
+        let mut hashes = 0usize;
+        while self.peek(0) == Some('#') {
+            hashes += 1;
+            self.bump();
+        }
+        self.bump(); // opening quote
+        let mut s = String::new();
+        'outer: while let Some(c) = self.bump() {
+            if c == '"' {
+                for a in 0..hashes {
+                    if self.peek(a) != Some('#') {
+                        s.push('"');
+                        continue 'outer;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            s.push(c);
+        }
+        s
+    }
+
+    fn char_or_lifetime(&mut self, start: usize) {
+        self.bump(); // the opening quote
+        match (self.peek(0), self.peek(1)) {
+            // lifetime: 'ident not closed by a quote ('a, 'static — but 'a'
+            // with a closing quote is a char)
+            (Some(c), after) if (c == '_' || c.is_alphabetic()) && after != Some('\'') => {
+                while let Some(c) = self.peek(0) {
+                    if c == '_' || c.is_alphanumeric() {
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                self.push(Tok::Lifetime, start);
+            }
+            // char literal, escaped or plain: consume to the closing quote
+            _ => {
+                while let Some(c) = self.bump() {
+                    match c {
+                        '\\' => {
+                            self.bump();
+                        }
+                        '\'' => break,
+                        _ => {}
+                    }
+                }
+                self.push(Tok::Char, start);
+            }
+        }
+    }
+
+    fn number(&mut self, start: usize) {
+        while let Some(c) = self.peek(0) {
+            if c.is_ascii_alphanumeric() || c == '_' {
+                self.bump();
+            } else if c == '.' && self.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false) {
+                // decimal point only when followed by a digit, so `0..n`
+                // range syntax is left as two `.` puncts
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        self.push(Tok::Num, start);
+    }
+
+    fn ident_or_prefixed(&mut self, start: usize) {
+        let mut name = String::new();
+        while let Some(c) = self.peek(0) {
+            if c == '_' || c.is_alphanumeric() {
+                name.push(c);
+                self.bump();
+            } else {
+                break;
+            }
+        }
+        // string/char-literal prefixes
+        match (name.as_str(), self.peek(0)) {
+            ("r" | "br", Some('"')) => {
+                let s = self.raw_string_body();
+                self.push(Tok::Str(s), start);
+            }
+            ("r" | "br", Some('#')) => {
+                // raw string r#"…"# — or a raw identifier r#keyword
+                let mut a = 0usize;
+                while self.peek(a) == Some('#') {
+                    a += 1;
+                }
+                if self.peek(a) == Some('"') {
+                    let s = self.raw_string_body();
+                    self.push(Tok::Str(s), start);
+                } else {
+                    self.bump(); // the #
+                    self.ident_or_prefixed(start);
+                }
+            }
+            ("b", Some('"')) => {
+                self.bump();
+                let s = self.string_body();
+                self.push(Tok::Str(s), start);
+            }
+            ("b", Some('\'')) => {
+                self.char_or_lifetime(start);
+                // re-tag: a byte char is a char literal even though
+                // char_or_lifetime pushed it already
+            }
+            _ => self.push(Tok::Ident(name), start),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| t.ident().map(|s| s.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_hide_code() {
+        let src = r##"
+            // thread::spawn in a comment
+            /* unwrap() in /* a nested */ block */
+            let s = "thread::spawn(unwrap())";
+            let r = r#"env::var("X")"#;
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"spawn".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"unwrap".to_string()), "{ids:?}");
+        assert!(!ids.contains(&"var".to_string()), "{ids:?}");
+        assert!(ids.contains(&"let".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) -> char { 'x' }");
+        let lifetimes = toks.iter().filter(|t| t.tok == Tok::Lifetime).count();
+        let chars = toks.iter().filter(|t| t.tok == Tok::Char).count();
+        assert_eq!(lifetimes, 2);
+        assert_eq!(chars, 1);
+        // the identifiers survive
+        let ids = toks.iter().filter_map(|t| t.ident()).collect::<Vec<_>>();
+        assert!(ids.contains(&"str"));
+    }
+
+    #[test]
+    fn path_sep_is_one_token() {
+        let toks = lex("std::thread::spawn");
+        let kinds: Vec<&Tok> = toks.iter().map(|t| &t.tok).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                &Tok::Ident("std".into()),
+                &Tok::PathSep,
+                &Tok::Ident("thread".into()),
+                &Tok::PathSep,
+                &Tok::Ident("spawn".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn ranges_are_not_floats() {
+        let toks = lex("for i in 0..n { a[i] = 1.5; }");
+        let puncts = toks.iter().filter(|t| t.is_punct('.')).count();
+        assert_eq!(puncts, 2, "the `..` of the range must remain two puncts");
+    }
+
+    #[test]
+    fn line_numbers_track_block_comments() {
+        let src = "a\n/* one\ntwo\nthree */\nunsafe";
+        let toks = lex(src);
+        let c = toks.iter().find(|t| matches!(t.tok, Tok::Comment(_))).expect("comment token");
+        assert_eq!((c.line, c.end_line), (2, 4));
+        let u = toks.iter().find(|t| t.ident() == Some("unsafe")).expect("unsafe token");
+        assert_eq!(u.line, 5);
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let toks = lex(r#"let s = "a\"b"; let t = 'c';"#);
+        let strs = toks.iter().filter(|t| matches!(t.tok, Tok::Str(_))).count();
+        assert_eq!(strs, 1);
+        let ids = toks.iter().filter_map(|t| t.ident()).collect::<Vec<_>>();
+        assert_eq!(ids, vec!["let", "s", "let", "t"]);
+    }
+}

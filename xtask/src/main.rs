@@ -1,0 +1,81 @@
+//! Repo tooling entry point (cargo-xtask pattern).
+//!
+//! `cargo run -p xtask -- lint [--root <dir>]` runs the determinism &
+//! concurrency contract lint over `rust/src` and exits nonzero if any rule
+//! fires. The same pass is wired into the default test suite
+//! (`rules::tests::repo_rust_src_is_lint_clean`) and CI.
+
+mod lexer;
+mod rules;
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(&args[1..]),
+        Some(other) => {
+            eprintln!("unknown xtask subcommand `{other}`");
+            usage();
+            ExitCode::from(2)
+        }
+        None => {
+            usage();
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn usage() {
+    eprintln!("usage: cargo run -p xtask -- lint [--root <workspace-root>]");
+}
+
+fn lint(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => {
+                eprintln!("unknown lint flag `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    // default: the workspace root is one level above this crate
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("xtask sits one level under the workspace root")
+            .to_path_buf()
+    });
+    let src_root = root.join("rust").join("src");
+    match rules::lint_tree(&src_root) {
+        Ok((nfiles, violations)) => {
+            if violations.is_empty() {
+                println!("xtask lint: {nfiles} files clean under {}", src_root.display());
+                ExitCode::SUCCESS
+            } else {
+                for v in &violations {
+                    println!("{v}");
+                }
+                println!(
+                    "xtask lint: {} violation(s) across {nfiles} files",
+                    violations.len()
+                );
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("xtask lint: cannot walk {}: {e}", src_root.display());
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,618 @@
+//! The project-invariant lint rules.
+//!
+//! PICT's training contract is *bit-for-bit*: pool kernels equal serial,
+//! checkpointed gradients equal full-tape gradients. Those guarantees are
+//! properties of code discipline — all parallelism flows through
+//! [`ExecCtx`], reductions combine partials in fixed chunk order, numeric
+//! paths never iterate hash containers — and this pass makes the discipline
+//! machine-checked instead of review-checked. Each rule below names the
+//! invariant it protects; the fixture tests in this file prove every rule
+//! fires on a seeded violation (no rule is vacuously green).
+
+use crate::lexer::{lex, Tok, Token};
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to `rust/src`.
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rust/src/{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Modules whose per-element arithmetic feeds gradients: hash-order
+/// iteration or ad-hoc cross-thread state here breaks the bit-for-bit
+/// determinism contract.
+const NUMERIC_MODULES: &[&str] =
+    &["sparse/", "linsolve/", "fvm/", "piso/", "adjoint/", "stats/", "nn/", "train/", "mesh/"];
+
+/// Identifiers that mean "hash-ordered container".
+const HASH_IDENTS: &[&str] = &["HashMap", "HashSet", "hash_map", "hash_set"];
+
+/// Sync primitives that enable ad-hoc (claim-order, hence nondeterministic)
+/// parallel reductions when used outside `par`'s fixed-chunk helpers.
+const SYNC_IDENTS: &[&str] = &[
+    "Mutex",
+    "RwLock",
+    "Condvar",
+    "AtomicBool",
+    "AtomicU32",
+    "AtomicU64",
+    "AtomicUsize",
+    "AtomicI32",
+    "AtomicI64",
+    "AtomicIsize",
+    "AtomicPtr",
+    "mpsc",
+];
+
+fn in_module(file: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| file.starts_with(p))
+}
+
+/// Lint one file; `file` is the path relative to `rust/src` with `/`
+/// separators (e.g. `linsolve/cg.rs`).
+pub fn check_file(file: &str, src: &str) -> Vec<Violation> {
+    let tokens = lex(src);
+    // comments feed only the SAFETY rule; rules that match token sequences
+    // run on the comment-free stream. Contiguous `//` lines form one logical
+    // comment (a SAFETY argument often spans several lines, with the keyword
+    // on the first), so adjacent comment tokens are merged into runs.
+    let mut comments: Vec<(usize, usize, bool)> = Vec::new();
+    for t in &tokens {
+        if let Tok::Comment(text) = &t.tok {
+            let safety = text.contains("SAFETY") || text.contains("# Safety");
+            match comments.last_mut() {
+                Some((_, end, has_safety)) if t.line <= *end + 1 => {
+                    *end = t.end_line.max(*end);
+                    *has_safety |= safety;
+                }
+                _ => comments.push((t.line, t.end_line, safety)),
+            }
+        }
+    }
+    let code: Vec<Token> =
+        tokens.into_iter().filter(|t| !matches!(t.tok, Tok::Comment(_))).collect();
+    let test = test_mask(&code);
+
+    let mut out = Vec::new();
+    rule_thread(file, &code, &test, &mut out);
+    rule_pool_construction(file, &code, &test, &mut out);
+    rule_env(file, &code, &test, &mut out);
+    rule_hash_iteration(file, &code, &test, &mut out);
+    rule_adhoc_sync(file, &code, &test, &mut out);
+    rule_unwrap(file, &code, &test, &mut out);
+    rule_expect_message(file, &code, &test, &mut out);
+    rule_unsafe_safety(file, &code, &comments, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out.dedup_by(|a, b| a.line == b.line && a.rule == b.rule);
+    out
+}
+
+/// Mark every token belonging to a `#[test]`- or `#[cfg(test)]`-attributed
+/// item (including the whole `#[cfg(test)] mod tests { … }` body). The lint
+/// rules police shipped solver code; tests are free to unwrap, spawn
+/// helper threads, and so on.
+fn test_mask(code: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut i = 0;
+    while i < code.len() {
+        if !(code[i].is_punct('#') && code.get(i + 1).map(|t| t.is_punct('[')).unwrap_or(false)) {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        let mut j = i + 2;
+        let mut depth = 1usize; // the opening [
+        let mut idents: Vec<&str> = Vec::new();
+        while j < code.len() && depth > 0 {
+            match &code[j].tok {
+                Tok::Punct('[') => depth += 1,
+                Tok::Punct(']') => depth -= 1,
+                Tok::Ident(s) => idents.push(s),
+                _ => {}
+            }
+            j += 1;
+        }
+        let is_test_attr = match idents.first() {
+            Some(&"test") => true,
+            Some(&"cfg") => idents.iter().any(|s| *s == "test"),
+            _ => false,
+        };
+        if !is_test_attr {
+            i = j;
+            continue;
+        }
+        // skip further attributes stacked on the same item
+        let mut k = j;
+        while k < code.len()
+            && code[k].is_punct('#')
+            && code.get(k + 1).map(|t| t.is_punct('[')).unwrap_or(false)
+        {
+            let mut d = 0usize;
+            k += 1;
+            while k < code.len() {
+                if code[k].is_punct('[') {
+                    d += 1;
+                }
+                if code[k].is_punct(']') {
+                    d -= 1;
+                    if d == 0 {
+                        k += 1;
+                        break;
+                    }
+                }
+                k += 1;
+            }
+        }
+        // consume the attributed item: ends at `;` at bracket depth 0
+        // (use/const/extern items) or at the `}` closing its first
+        // depth-0 `{` (fn/mod/impl bodies)
+        let mut d = 0i64;
+        let mut body_seen = false;
+        while k < code.len() {
+            match &code[k].tok {
+                Tok::Punct('{') => {
+                    d += 1;
+                    body_seen = true;
+                }
+                Tok::Punct('(') | Tok::Punct('[') => d += 1,
+                Tok::Punct('}') | Tok::Punct(')') | Tok::Punct(']') => {
+                    d -= 1;
+                    if body_seen && d == 0 {
+                        k += 1;
+                        break;
+                    }
+                }
+                Tok::Punct(';') if d == 0 => {
+                    k += 1;
+                    break;
+                }
+                _ => {}
+            }
+            k += 1;
+        }
+        for m in mask.iter_mut().take(k.min(code.len())).skip(attr_start) {
+            *m = true;
+        }
+        i = k;
+    }
+    mask
+}
+
+/// All parallelism flows through `par::ExecCtx` — raw thread creation
+/// anywhere else bypasses the width/determinism contract (and the loom
+/// model, which only covers `par::Pool`).
+fn rule_thread(file: &str, code: &[Token], test: &[bool], out: &mut Vec<Violation>) {
+    if in_module(file, &["par/"]) {
+        return;
+    }
+    for (i, t) in code.iter().enumerate() {
+        if test[i] || t.ident() != Some("thread") {
+            continue;
+        }
+        let after_std = i >= 2
+            && code[i - 1].tok == Tok::PathSep
+            && code[i - 2].ident() == Some("std");
+        let calls_primitive = code.get(i + 1).map(|t| t.tok == Tok::PathSep).unwrap_or(false)
+            && matches!(
+                code.get(i + 2).and_then(|t| t.ident()),
+                Some("spawn" | "scope" | "Builder")
+            );
+        if after_std || calls_primitive {
+            out.push(Violation {
+                file: file.to_string(),
+                line: t.line,
+                rule: "thread-outside-par",
+                msg: "raw std::thread use outside par/: all parallelism must flow through \
+                      par::ExecCtx (run_tasks/run_chunks) so pool width, determinism, and \
+                      panic propagation stay under the one modeled implementation"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// `Pool::new` outside `par/` creates a second pool per call site;
+/// `ExecCtx::with_threads` / `from_env` are the sanctioned constructors so
+/// every layer shares (and threads through) one pool handle.
+fn rule_pool_construction(file: &str, code: &[Token], test: &[bool], out: &mut Vec<Violation>) {
+    if in_module(file, &["par/"]) {
+        return;
+    }
+    for (i, t) in code.iter().enumerate() {
+        if test[i] || t.ident() != Some("Pool") {
+            continue;
+        }
+        if code.get(i + 1).map(|t| t.tok == Tok::PathSep).unwrap_or(false)
+            && code.get(i + 2).and_then(|t| t.ident()) == Some("new")
+        {
+            out.push(Violation {
+                file: file.to_string(),
+                line: t.line,
+                rule: "pool-outside-par",
+                msg: "direct Pool construction outside par/: build an ExecCtx \
+                      (with_threads/from_env) and pass it down instead"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Environment reads concentrate in `util` and the single documented
+/// `par::env_threads` (`PICT_THREADS`): scattered `env::var` calls are how
+/// hidden global state sneaks back into kernels whose results must be a
+/// function of the ExecCtx alone.
+fn rule_env(file: &str, code: &[Token], test: &[bool], out: &mut Vec<Violation>) {
+    if in_module(file, &["util/"]) {
+        return;
+    }
+    // par/mod.rs owns exactly one sanctioned read: env_threads()
+    let budget = if file == "par/mod.rs" { 1usize } else { 0 };
+    let mut seen = 0usize;
+    for (i, t) in code.iter().enumerate() {
+        if test[i] || t.ident() != Some("env") {
+            continue;
+        }
+        if code.get(i + 1).map(|t| t.tok == Tok::PathSep).unwrap_or(false)
+            && code.get(i + 2).and_then(|t| t.ident()) == Some("var")
+        {
+            seen += 1;
+            if seen > budget {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "env-outside-util",
+                    msg: "env::var outside util/ (and the single par::env_threads read): \
+                          solver behavior must be a function of explicit config + ExecCtx, \
+                          not ambient process state"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Hash iteration order varies across runs/platforms; in modules whose
+/// loops feed residuals or gradients that breaks bit-for-bit
+/// reproducibility. Use BTreeMap/BTreeSet or index-keyed Vecs.
+fn rule_hash_iteration(file: &str, code: &[Token], test: &[bool], out: &mut Vec<Violation>) {
+    if !in_module(file, NUMERIC_MODULES) {
+        return;
+    }
+    for (i, t) in code.iter().enumerate() {
+        if test[i] {
+            continue;
+        }
+        if let Some(id) = t.ident() {
+            if HASH_IDENTS.contains(&id) {
+                out.push(Violation {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "hash-order-in-numeric",
+                    msg: format!(
+                        "{id} in a numeric module: hash iteration order is unstable and \
+                         breaks bit-for-bit gradients — use BTreeMap/BTreeSet or an \
+                         index-keyed Vec"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Parallel float reductions must go through `par`'s fixed-chunk helpers
+/// (ExecCtx::dot / run_chunks + DisjointMut slots combined in chunk order).
+/// Raw sync primitives in numeric modules are the building blocks of
+/// claim-order reductions, which are deterministic only by luck.
+fn rule_adhoc_sync(file: &str, code: &[Token], test: &[bool], out: &mut Vec<Violation>) {
+    if !in_module(file, NUMERIC_MODULES) {
+        return;
+    }
+    for (i, t) in code.iter().enumerate() {
+        if test[i] {
+            continue;
+        }
+        let hit = match t.ident() {
+            Some(id) if SYNC_IDENTS.contains(&id) => true,
+            Some("sync") => {
+                i >= 2
+                    && code[i - 1].tok == Tok::PathSep
+                    && code[i - 2].ident() == Some("std")
+            }
+            _ => false,
+        };
+        if hit {
+            out.push(Violation {
+                file: file.to_string(),
+                line: t.line,
+                rule: "adhoc-sync-in-numeric",
+                msg: "sync primitive in a numeric module: parallel reductions must use \
+                      par's fixed-chunk deterministic helpers (ExecCtx::dot/run_chunks \
+                      with per-chunk slots combined in chunk order), never ad-hoc \
+                      shared-state accumulation"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Solver-core code paths surface failures as typed errors or panics with
+/// invariant messages; a bare `unwrap()` turns a physics/config bug into
+/// an anonymous `Option::unwrap` line number.
+fn rule_unwrap(file: &str, code: &[Token], test: &[bool], out: &mut Vec<Violation>) {
+    if in_module(file, &["util/"]) {
+        return;
+    }
+    for (i, t) in code.iter().enumerate() {
+        if test[i] || !t.is_punct('.') {
+            continue;
+        }
+        if code.get(i + 1).and_then(|t| t.ident()) == Some("unwrap")
+            && code.get(i + 2).map(|t| t.is_punct('(')).unwrap_or(false)
+            && code.get(i + 3).map(|t| t.is_punct(')')).unwrap_or(false)
+        {
+            out.push(Violation {
+                file: file.to_string(),
+                line: t.line,
+                rule: "unwrap-in-core",
+                msg: "bare unwrap() in solver-core code: return a typed error or use \
+                      expect(\"<invariant that makes this infallible>\")"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// `expect` is the sanctioned unwrap — but only with a literal message long
+/// enough to state the invariant being relied on.
+fn rule_expect_message(file: &str, code: &[Token], test: &[bool], out: &mut Vec<Violation>) {
+    if in_module(file, &["util/"]) {
+        return;
+    }
+    for (i, t) in code.iter().enumerate() {
+        if test[i] || !t.is_punct('.') {
+            continue;
+        }
+        if code.get(i + 1).and_then(|t| t.ident()) != Some("expect")
+            || !code.get(i + 2).map(|t| t.is_punct('(')).unwrap_or(false)
+        {
+            continue;
+        }
+        let ok = matches!(code.get(i + 3), Some(Token { tok: Tok::Str(s), .. }) if s.len() >= 10);
+        if !ok {
+            out.push(Violation {
+                file: file.to_string(),
+                line: t.line,
+                rule: "expect-message",
+                msg: "expect() needs a string literal (>= 10 chars) naming the invariant \
+                      that makes the failure impossible"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Every `unsafe` (block, fn, impl) must be justified by a `// SAFETY:`
+/// comment (or a `/// # Safety` doc section) ending within the 3 lines
+/// above it — the audit trail Miri/TSan runs are cross-checked against.
+fn rule_unsafe_safety(
+    file: &str,
+    code: &[Token],
+    comments: &[(usize, usize, bool)],
+    out: &mut Vec<Violation>,
+) {
+    for t in code {
+        if t.ident() != Some("unsafe") {
+            continue;
+        }
+        let justified = comments.iter().any(|&(start, end, has_safety)| {
+            has_safety && end + 3 >= t.line && start <= t.line
+        });
+        if !justified {
+            out.push(Violation {
+                file: file.to_string(),
+                line: t.line,
+                rule: "unsafe-needs-safety-comment",
+                msg: "unsafe without a `// SAFETY:` comment within the 3 preceding lines: \
+                      state the aliasing/lifetime argument the compiler cannot check"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Lint every `.rs` file under `src_root` (rust/src), returning all
+/// violations in deterministic (path, line) order.
+pub fn lint_tree(src_root: &Path) -> std::io::Result<(usize, Vec<Violation>)> {
+    let mut files = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(src_root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(path)?;
+        out.extend(check_file(&rel, &src));
+    }
+    Ok((files.len(), out))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_hit(file: &str, src: &str) -> Vec<&'static str> {
+        check_file(file, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    // --- each rule fires on a seeded violation ---
+
+    #[test]
+    fn thread_rule_fires_outside_par() {
+        let src = "pub fn f() { std::thread::spawn(|| {}); }";
+        assert_eq!(rules_hit("fvm/assemble.rs", src), vec!["thread-outside-par"]);
+        // and on the use-imported form
+        let src2 = "use std::thread;\nfn g() { thread::scope(|s| {}); }";
+        assert!(rules_hit("piso/stepper.rs", src2).contains(&"thread-outside-par"));
+    }
+
+    #[test]
+    fn thread_rule_allows_par_and_tests() {
+        let src = "pub fn f() { std::thread::spawn(|| {}); }";
+        assert!(rules_hit("par/pool.rs", src).is_empty());
+        let test_src = "#[cfg(test)]\nmod tests { fn f() { std::thread::spawn(|| {}); } }";
+        assert!(rules_hit("fvm/assemble.rs", test_src).is_empty());
+    }
+
+    #[test]
+    fn pool_rule_fires_outside_par() {
+        let src = "fn f() { let p = Pool::new(4); }";
+        assert_eq!(rules_hit("coordinator/engine.rs", src), vec!["pool-outside-par"]);
+        assert!(rules_hit("par/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn env_rule_fires_outside_util_and_budgets_par_mod() {
+        let src = "fn f() -> bool { std::env::var(\"X\").is_ok() }";
+        assert_eq!(rules_hit("piso/stepper.rs", src), vec!["env-outside-util"]);
+        assert!(rules_hit("util/cli.rs", src).is_empty());
+        // par/mod.rs: the single env_threads read is sanctioned, a second is not
+        assert!(rules_hit("par/mod.rs", src).is_empty());
+        let two = "fn a() -> bool { std::env::var(\"X\").is_ok() }\n\
+                   fn b() -> bool { std::env::var(\"Y\").is_ok() }";
+        assert_eq!(rules_hit("par/mod.rs", two), vec!["env-outside-util"]);
+    }
+
+    #[test]
+    fn hash_rule_fires_in_numeric_modules_only() {
+        let src = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, f64>) {}";
+        let hits = rules_hit("linsolve/precond.rs", src);
+        assert!(hits.iter().all(|r| *r == "hash-order-in-numeric"), "{hits:?}");
+        assert!(!hits.is_empty());
+        // coordinator/util are outside the numeric set
+        assert!(rules_hit("coordinator/scenario.rs", src).is_empty());
+    }
+
+    #[test]
+    fn sync_rule_fires_in_numeric_modules_only() {
+        let src = "use std::sync::Mutex;\nfn f() { let m = Mutex::new(0.0f64); }";
+        let hits = rules_hit("adjoint/tape.rs", src);
+        assert!(hits.contains(&"adhoc-sync-in-numeric"), "{hits:?}");
+        // par and coordinator own the sanctioned uses
+        assert!(rules_hit("par/pool.rs", src).is_empty());
+        assert!(rules_hit("coordinator/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_rule_fires_and_spares_tests_and_util() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        assert_eq!(rules_hit("mesh/gen.rs", src), vec!["unwrap-in-core"]);
+        assert!(rules_hit("util/json.rs", src).is_empty());
+        let test_src = "#[test]\nfn t() { Some(1).unwrap(); }";
+        assert!(rules_hit("mesh/gen.rs", test_src).is_empty());
+        // unwrap_or and friends are fine
+        let src2 = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0) }";
+        assert!(rules_hit("mesh/gen.rs", src2).is_empty());
+    }
+
+    #[test]
+    fn expect_rule_requires_informative_literal() {
+        let short = "fn f(x: Option<u32>) -> u32 { x.expect(\"diag\") }";
+        assert_eq!(rules_hit("adjoint/ops.rs", short), vec!["expect-message"]);
+        let nonliteral = "fn f(x: Option<u32>, m: &str) -> u32 { x.expect(m) }";
+        assert_eq!(rules_hit("adjoint/ops.rs", nonliteral), vec!["expect-message"]);
+        let good = "fn f(x: Option<u32>) -> u32 { x.expect(\"diagonal present: every \
+                    assembled row carries its cell's own coefficient\") }";
+        assert!(rules_hit("adjoint/ops.rs", good).is_empty());
+    }
+
+    #[test]
+    fn unsafe_rule_wants_nearby_safety_comment() {
+        let bare = "fn f(p: *const u32) -> u32 { unsafe { *p } }";
+        assert_eq!(rules_hit("sparse/csr.rs", bare), vec!["unsafe-needs-safety-comment"]);
+        let justified = "fn f(p: *const u32) -> u32 {\n    // SAFETY: caller passes a \
+                         valid, aligned pointer\n    unsafe { *p }\n}";
+        assert!(rules_hit("sparse/csr.rs", justified).is_empty());
+        let doc = "/// # Safety\n/// `p` must be valid.\npub unsafe fn f(p: *const u32) \
+                   -> u32 { *p }";
+        assert!(rules_hit("sparse/csr.rs", doc).is_empty());
+        // a SAFETY comment too far above does not count
+        let far = "// SAFETY: stale justification\nfn a() {}\nfn b() {}\nfn c() {}\n\
+                   fn f(p: *const u32) -> u32 { unsafe { *p } }";
+        assert_eq!(rules_hit("sparse/csr.rs", far), vec!["unsafe-needs-safety-comment"]);
+        // contiguous `//` lines are one comment: a multi-line SAFETY argument
+        // counts from its *last* line even when the keyword is on the first
+        let run = "fn f(p: *const u32) -> u32 {\n\
+                   // SAFETY: the pointer is valid because the caller\n\
+                   // constructed it from a live &u32 two frames up and\n\
+                   // nothing frees it before we return; alignment comes\n\
+                   // from the reference it was cast from, and the read\n\
+                   // does not outlive the borrow.\n\
+                   unsafe { *p }\n}";
+        assert!(rules_hit("sparse/csr.rs", run).is_empty());
+        // ...but a gap of blank/code lines breaks the run
+        let broken = "// SAFETY: detached justification\n\nfn a() {}\nfn b() {}\n\
+                      fn f(p: *const u32) -> u32 { unsafe { *p } }";
+        assert_eq!(rules_hit("sparse/csr.rs", broken), vec!["unsafe-needs-safety-comment"]);
+    }
+
+    #[test]
+    fn comments_and_strings_never_trip_rules() {
+        let src = "// std::thread::spawn, env::var, HashMap, unwrap()\n\
+                   fn f() -> &'static str { \"std::thread::spawn(HashMap.unwrap())\" }";
+        assert!(rules_hit("fvm/assemble.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_mod_masks_its_whole_body() {
+        let src = "fn shipped(x: Option<u32>) -> u32 { x.expect(\"value present by \
+                   construction\") }\n\
+                   #[cfg(test)]\nmod tests {\n  use std::sync::Mutex;\n  #[test]\n  fn t() \
+                   { let _ = Some(1).unwrap(); std::thread::spawn(|| {}); }\n}";
+        assert!(rules_hit("adjoint/rollout.rs", src).is_empty());
+    }
+
+    // --- the real tree stays clean (the CI acceptance gate, enforced from
+    // the default `cargo test` run as well) ---
+
+    #[test]
+    fn repo_rust_src_is_lint_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("xtask sits one level under the workspace root")
+            .join("rust")
+            .join("src");
+        let (nfiles, violations) =
+            lint_tree(&root).expect("rust/src must be readable from the xtask test");
+        assert!(nfiles > 30, "expected the full solver tree, found {nfiles} files");
+        assert!(
+            violations.is_empty(),
+            "rust/src has lint violations:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
