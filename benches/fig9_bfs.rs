@@ -6,6 +6,7 @@ use pict::adjoint::GradientPaths;
 use pict::coordinator::experiments::corrector2d::*;
 use pict::fvm;
 use pict::mesh::{field, gen};
+use pict::par::ExecCtx;
 use pict::piso::{PisoConfig, PisoSolver, State};
 use pict::util::bench::{print_table, write_report};
 use pict::util::json::Json;
@@ -46,6 +47,7 @@ fn main() {
             mesh,
             PisoConfig { dt: 0.05, target_cfl: Some(0.7), use_ilu: true, ..Default::default() },
             nu,
+            ExecCtx::from_env(),
         );
         let mut state = State::zeros(&solver.mesh);
         let src = pict::mesh::VectorField::zeros(solver.mesh.ncells);
@@ -91,7 +93,12 @@ fn main() {
         ..Default::default()
     };
     let mk = |mesh: pict::mesh::Mesh, dt: f64| {
-        PisoSolver::new(mesh, PisoConfig { dt, use_ilu: true, ..Default::default() }, nu)
+        PisoSolver::new(
+            mesh,
+            PisoConfig { dt, use_ilu: true, ..Default::default() },
+            nu,
+            ExecCtx::from_env(),
+        )
     };
     let mut fine = mk(gen::bfs(&fine_bfs), 0.04);
     let mut fstate = State::zeros(&fine.mesh);

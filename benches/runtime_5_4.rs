@@ -73,8 +73,12 @@ fn main() {
         use pict::piso::{PisoConfig, PisoSolver};
         let (ny, nx) = (16usize, 18);
         let mesh = gen::periodic_box2d(nx, ny, 1.0, 1.0);
-        let mut solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.01, ..Default::default() }, 0.02);
+        let mut solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: 0.01, ..Default::default() },
+            0.02,
+            pict::par::ExecCtx::from_env(),
+        );
         let mut state = State::zeros(&solver.mesh);
         for (i, c) in solver.mesh.centers.iter().enumerate() {
             state.u.comp[0][i] = (6.28 * c[1]).cos() * 0.5;

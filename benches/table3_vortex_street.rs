@@ -7,6 +7,7 @@
 use pict::adjoint::GradientPaths;
 use pict::coordinator::experiments::corrector2d::*;
 use pict::mesh::gen;
+use pict::par::ExecCtx;
 use pict::piso::{PisoConfig, PisoSolver, State};
 use pict::util::bench::{print_table, write_report};
 use pict::util::json::Json;
@@ -18,7 +19,12 @@ fn main() {
     let nu = vs.u_in * vs.obs_h / 400.0;
     let coarse_mesh = gen::vortex_street(&vs);
     let mk = |mesh: pict::mesh::Mesh, dt: f64| {
-        PisoSolver::new(mesh, PisoConfig { dt, use_ilu: true, ..Default::default() }, nu)
+        PisoSolver::new(
+            mesh,
+            PisoConfig { dt, use_ilu: true, ..Default::default() },
+            nu,
+            ExecCtx::from_env(),
+        )
     };
     let base_cfg = Corrector2dCfg {
         t_ratio: 2,

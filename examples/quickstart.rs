@@ -3,6 +3,7 @@
 
 use pict::adjoint::{rollout_backward, GradientPaths, Tape, TapeStrategy};
 use pict::mesh::{gen, VectorField};
+use pict::par::ExecCtx;
 use pict::piso::{PisoConfig, PisoSolver, State};
 
 fn main() {
@@ -11,8 +12,12 @@ fn main() {
     let mesh = gen::periodic_box2d(32, 32, 1.0, 1.0);
 
     // 2. solver: PISO with two pressure correctors, ν = 0.01
-    let mut solver =
-        PisoSolver::new(mesh, PisoConfig { dt: 0.01, ..Default::default() }, 0.01);
+    let mut solver = PisoSolver::new(
+        mesh,
+        PisoConfig { dt: 0.01, ..Default::default() },
+        0.01,
+        ExecCtx::from_env(),
+    );
 
     // 3. initial state: a Taylor–Green vortex (shared scenario helper)
     let mut state = State::zeros(&solver.mesh);

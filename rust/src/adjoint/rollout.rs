@@ -47,13 +47,18 @@ mod tests {
     use super::*;
     use crate::adjoint::TapeStrategy;
     use crate::mesh::gen;
+    use crate::par::ExecCtx;
     use crate::piso::PisoConfig;
 
     #[test]
     fn rollout_backward_accumulates_per_step_sources() {
         let mesh = gen::periodic_box2d(6, 6, 1.0, 1.0);
-        let mut solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.02, ..Default::default() }, 0.05);
+        let mut solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: 0.02, ..Default::default() },
+            0.05,
+            ExecCtx::from_env(),
+        );
         let mut state = State::zeros(&solver.mesh);
         for (i, c) in solver.mesh.centers.iter().enumerate() {
             state.u.comp[0][i] = (6.28 * c[1]).sin() * 0.4;

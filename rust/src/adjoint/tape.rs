@@ -159,7 +159,7 @@ impl Tape {
             .bc_snaps
             .iter()
             .map(|snap| snap.iter().map(|b| 3 * b.vel.len()).sum::<usize>())
-            .sum();
+            .sum::<usize>();
         self.records.iter().map(|r| r.len_f64()).sum::<usize>()
             + self.states.iter().map(|s| s.len_f64()).sum::<usize>()
             + self.final_state.as_ref().map_or(0, |s| s.len_f64())
@@ -343,12 +343,17 @@ impl SweepAcc {
 mod tests {
     use super::*;
     use crate::mesh::gen;
+    use crate::par::ExecCtx;
     use crate::piso::PisoConfig;
 
     fn tg_setup(n: usize) -> (PisoSolver, State) {
         let mesh = gen::periodic_box2d(n, n, 1.0, 1.0);
-        let solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.02, ..Default::default() }, 0.05);
+        let solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: 0.02, ..Default::default() },
+            0.05,
+            ExecCtx::from_env(),
+        );
         let mut state = State::zeros(&solver.mesh);
         for (i, c) in solver.mesh.centers.iter().enumerate() {
             state.u.comp[0][i] = (6.28 * c[1]).sin();

@@ -89,8 +89,12 @@ impl Scenario for TaylorGreen {
 
     fn build(&self) -> ScenarioRun {
         let mesh = gen::periodic_box2d(self.n, self.n, 1.0, 1.0);
-        let solver =
-            PisoSolver::new(mesh, PisoConfig { dt: self.dt, ..Default::default() }, self.nu);
+        let solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: self.dt, ..Default::default() },
+            self.nu,
+            ExecCtx::from_env(),
+        );
         let mut state = State::zeros(&solver.mesh);
         state.u = taylor_green_init(&solver.mesh);
         let source = VectorField::zeros(solver.mesh.ncells);
@@ -139,8 +143,12 @@ impl Scenario for GaussianBox {
 
     fn build(&self) -> ScenarioRun {
         let mesh = gen::periodic_box2d(self.nx, self.ny, 1.0, 1.0);
-        let solver =
-            PisoSolver::new(mesh, PisoConfig { dt: self.dt, ..Default::default() }, self.nu);
+        let solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: self.dt, ..Default::default() },
+            self.nu,
+            ExecCtx::from_env(),
+        );
         let mut state = State::zeros(&solver.mesh);
         state.u = gaussian_bump_init(&solver.mesh);
         state.u.scale(self.theta);
@@ -188,6 +196,7 @@ impl Scenario for LidDrivenCavity {
             mesh,
             PisoConfig { dt: self.dt, ..Default::default() },
             self.nu.unwrap_or(1.0 / self.re),
+            ExecCtx::from_env(),
         );
         let state = State::zeros(&solver.mesh);
         let source = VectorField::zeros(solver.mesh.ncells);
@@ -228,8 +237,12 @@ impl Scenario for Poiseuille {
 
     fn build(&self) -> ScenarioRun {
         let mesh = gen::channel2d(self.nx, self.ny, 1.0, 1.0, self.wall_ratio, self.refined);
-        let solver =
-            PisoSolver::new(mesh, PisoConfig { dt: self.dt, ..Default::default() }, 1.0);
+        let solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: self.dt, ..Default::default() },
+            1.0,
+            ExecCtx::from_env(),
+        );
         let state = State::zeros(&solver.mesh);
         let mut source = VectorField::zeros(solver.mesh.ncells);
         source.comp[0].iter_mut().for_each(|v| *v = 1.0);
@@ -275,8 +288,12 @@ impl Scenario for TurbulentChannel {
     fn build(&self) -> ScenarioRun {
         use super::experiments::tcf_sgs::{forcing_field, perturbed_channel_init};
         let mesh = gen::channel3d(self.n, self.l, 1.08);
-        let solver =
-            PisoSolver::new(mesh, PisoConfig { dt: self.dt, ..Default::default() }, self.nu);
+        let solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: self.dt, ..Default::default() },
+            self.nu,
+            ExecCtx::from_env(),
+        );
         let mut state = State::zeros(&solver.mesh);
         state.u = perturbed_channel_init(&solver.mesh, self.l[1], self.perturbation, self.seed);
         let source = forcing_field(&solver.mesh, self.forcing);
@@ -332,6 +349,7 @@ impl Scenario for VortexStreet {
                 ..Default::default()
             },
             nu,
+            ExecCtx::from_env(),
         );
         let mut state = State::zeros(&solver.mesh);
         for (i, c) in solver.mesh.centers.iter().enumerate() {

@@ -29,7 +29,7 @@ pub use pressure::{
 /// structure.
 #[inline]
 pub(crate) fn row_entry(cols: &[u32], row: usize, col: usize) -> usize {
-    cols.binary_search(&(col as u32))
+    cols.binary_search(&crate::util::det::index_u32(col))
         .unwrap_or_else(|_| panic!("entry ({row},{col}) not in CSR structure"))
 }
 

@@ -11,7 +11,7 @@ use crate::par::ExecCtx;
 use crate::sparse::Csr;
 
 fn remove_mean(v: &mut [f64]) {
-    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    let mean = crate::util::det::mean(v);
     v.iter_mut().for_each(|x| *x -= mean);
 }
 

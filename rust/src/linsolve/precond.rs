@@ -111,7 +111,7 @@ impl LevelSchedule {
         let mut rows = vec![0u32; n];
         for i in 0..n {
             let l = level[i] as usize;
-            rows[cursor[l]] = i as u32;
+            rows[cursor[l]] = crate::util::det::index_u32(i);
             cursor[l] += 1;
         }
         let max_rows =

@@ -236,18 +236,21 @@ fn main() {
         }
         Some("cavity") => {
             use pict::coordinator::references::GHIA_RE100_U;
-            use pict::mesh::{field, gen, VectorField};
-            use pict::piso::{PisoConfig, PisoSolver, State};
+            use pict::coordinator::scenario::{LidDrivenCavity, Scenario};
+            use pict::mesh::field;
             let n = args.usize_or("n", 32);
-            let mesh = gen::cavity2d(n, 1.0, 1.0, args.flag("refined"));
-            let mut solver = PisoSolver::new(
-                mesh,
-                PisoConfig { dt: 0.02, ..Default::default() },
-                1.0 / args.f64_or("re", 100.0),
-            );
-            let mut state = State::zeros(&solver.mesh);
-            let src = VectorField::zeros(solver.mesh.ncells);
-            solver.run(&mut state, &src, args.usize_or("steps", 1200));
+            // build through the scenario registry: it owns the ExecCtx so
+            // the CLI never forks its own pool topology
+            let run = LidDrivenCavity {
+                n,
+                re: args.f64_or("re", 100.0),
+                refined: args.flag("refined"),
+                ..Default::default()
+            }
+            .build();
+            let mut solver = run.solver;
+            let mut state = run.state;
+            solver.run(&mut state, &run.source, args.usize_or("steps", 1200));
             let mut worst = 0.0f64;
             for (y, u_ref) in GHIA_RE100_U {
                 let u = field::sample_idw(&solver.mesh, &state.u.comp[0], [0.5, y, 0.5]);

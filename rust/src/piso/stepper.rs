@@ -79,22 +79,23 @@ pub struct CorrectorRecord {
     /// Velocity entering this corrector (u* or u**).
     pub u_in: VectorField,
     pub h: VectorField,
-    pub div: Vec<f64>,
     pub p: Vec<f64>,
 }
 
-/// Full DtO tape of one PISO step (everything the backward pass reads).
+/// DtO tape of one PISO step — exactly what the backward pass reads, and
+/// nothing more. Every field here is resident once per step on the tape
+/// (O(n) copies on a full tape), so the pairing between this struct and
+/// `adjoint::backward_step` is enforced by the analyze gate: a field the
+/// backward sweep never reads is dead checkpoint weight and gets flagged.
+/// Inputs the sweep can recompute (u^n/Δt, ∇p^n, the assembled RHS) are
+/// deliberately *not* stored — the adjoint rebuilds their cotangents from
+/// the matrices and corrector intermediates below.
 #[derive(Clone, Debug)]
 pub struct StepRecord {
     pub dt: f64,
-    pub u_n: VectorField,
-    pub p_in: Vec<f64>,
-    pub source: VectorField,
     pub c_vals: Vec<f64>,
     pub a_inv: Vec<f64>,
     pub pmat_vals: Vec<f64>,
-    pub rhs_base: VectorField,
-    pub grad_p_in: VectorField,
     pub u_star: VectorField,
     pub correctors: Vec<CorrectorRecord>,
 }
@@ -104,14 +105,9 @@ impl StepRecord {
     pub fn empty() -> StepRecord {
         StepRecord {
             dt: 0.0,
-            u_n: VectorField::zeros(0),
-            p_in: vec![],
-            source: VectorField::zeros(0),
             c_vals: vec![],
             a_inv: vec![],
             pmat_vals: vec![],
-            rhs_base: VectorField::zeros(0),
-            grad_p_in: VectorField::zeros(0),
             u_star: VectorField::zeros(0),
             correctors: vec![],
         }
@@ -121,19 +117,14 @@ impl StepRecord {
     /// accounting; the dominant O(ncells) and O(nnz) buffers).
     pub fn len_f64(&self) -> usize {
         let vf = |f: &VectorField| f.comp.iter().map(|c| c.len()).sum::<usize>();
-        vf(&self.u_n)
-            + self.p_in.len()
-            + vf(&self.source)
-            + self.c_vals.len()
+        self.c_vals.len()
             + self.a_inv.len()
             + self.pmat_vals.len()
-            + vf(&self.rhs_base)
-            + vf(&self.grad_p_in)
             + vf(&self.u_star)
             + self
                 .correctors
                 .iter()
-                .map(|cr| vf(&cr.u_in) + vf(&cr.h) + cr.div.len() + cr.p.len())
+                .map(|cr| vf(&cr.u_in) + vf(&cr.h) + cr.p.len())
                 .sum::<usize>()
     }
 }
@@ -156,22 +147,29 @@ pub struct PisoSolver {
     pub pmat: Csr,
     /// Execution context threaded through assembly, Krylov solves, and
     /// preconditioner applies (and reused by the adjoint for the transposed
-    /// solves). Constructors default to [`ExecCtx::from_env`]; embedders
-    /// sharing one pool across solvers (e.g. the batch runner) swap in a
-    /// clone of theirs via [`PisoSolver::with_ctx`].
+    /// solves). Constructors take it explicitly: contexts are only built at
+    /// entry points (`par/`, `coordinator/` — the analyze gate enforces
+    /// this), so a whole run shares one pool topology instead of each
+    /// solver forking its own. Embedders sharing one pool across solvers
+    /// (e.g. the batch runner) swap in a clone via [`PisoSolver::with_ctx`].
     pub ctx: ExecCtx,
 }
 
 impl PisoSolver {
-    pub fn new(mesh: Mesh, cfg: PisoConfig, nu_uniform: f64) -> PisoSolver {
+    pub fn new(mesh: Mesh, cfg: PisoConfig, nu_uniform: f64, ctx: ExecCtx) -> PisoSolver {
         let nu = vec![nu_uniform; mesh.ncells];
-        PisoSolver::with_viscosity_field(mesh, cfg, nu)
+        PisoSolver::with_viscosity_field(mesh, cfg, nu, ctx)
     }
 
-    pub fn with_viscosity_field(mesh: Mesh, cfg: PisoConfig, nu: Vec<f64>) -> PisoSolver {
+    pub fn with_viscosity_field(
+        mesh: Mesh,
+        cfg: PisoConfig,
+        nu: Vec<f64>,
+        ctx: ExecCtx,
+    ) -> PisoSolver {
         let c = fvm::c_structure(&mesh);
         let pmat = fvm::pressure_structure(&mesh);
-        PisoSolver { mesh, cfg, nu, c, pmat, ctx: ExecCtx::from_env() }
+        PisoSolver { mesh, cfg, nu, c, pmat, ctx }
     }
 
     /// Replace the execution context (builder-style), sharing its pool.
@@ -302,7 +300,7 @@ impl PisoSolver {
                     u_next.comp[comp][cell] -= a_inv[cell] * gp.comp[comp][cell];
                 }
             }
-            records.push(CorrectorRecord { u_in: u_cur.clone(), h, div, p: p.clone() });
+            records.push(CorrectorRecord { u_in: u_cur.clone(), h, p: p.clone() });
             u_cur = u_next;
             p_new = p;
         }
@@ -310,14 +308,9 @@ impl PisoSolver {
         if let Some(rec) = record.take() {
             *rec = StepRecord {
                 dt,
-                u_n: state.u.clone(),
-                p_in: state.p.clone(),
-                source: source.clone(),
                 c_vals: self.c.vals.clone(),
                 a_inv: a_inv.clone(),
                 pmat_vals: self.pmat.vals.clone(),
-                rhs_base: rhs_base.clone(),
-                grad_p_in,
                 u_star,
                 correctors: records,
             };
@@ -424,7 +417,7 @@ mod tests {
     #[test]
     fn step_preserves_divergence_free() {
         let mesh = gen::periodic_box2d(16, 16, 1.0, 1.0);
-        let mut solver = PisoSolver::new(mesh, PisoConfig::default(), 0.01);
+        let mut solver = PisoSolver::new(mesh, PisoConfig::default(), 0.01, ExecCtx::from_env());
         let mut state = State::zeros(&solver.mesh);
         // Taylor-Green-like initial velocity (divergence free)
         let tau = 2.0 * std::f64::consts::PI;
@@ -455,6 +448,7 @@ mod tests {
             mesh,
             PisoConfig { dt: 2e-3, n_correctors: 2, ..Default::default() },
             nu,
+            ExecCtx::from_env(),
         );
         let mut state = State::zeros(&solver.mesh);
         let tau = 2.0 * std::f64::consts::PI;
@@ -481,7 +475,7 @@ mod tests {
     #[test]
     fn record_captures_intermediates() {
         let mesh = gen::periodic_box2d(8, 8, 1.0, 1.0);
-        let mut solver = PisoSolver::new(mesh, PisoConfig::default(), 0.01);
+        let mut solver = PisoSolver::new(mesh, PisoConfig::default(), 0.01, ExecCtx::from_env());
         let mut state = State::zeros(&solver.mesh);
         state.u.comp[0].iter_mut().enumerate().for_each(|(i, v)| *v = (i as f64 * 0.1).sin());
         let src = VectorField::zeros(solver.mesh.ncells);
@@ -489,7 +483,7 @@ mod tests {
         solver.step(&mut state, &src, Some(&mut rec));
         assert_eq!(rec.correctors.len(), 2);
         assert!(rec.len_f64() > 0);
-        assert_eq!(rec.u_n.ncells(), solver.mesh.ncells);
+        assert_eq!(rec.u_star.ncells(), solver.mesh.ncells);
         assert_eq!(rec.c_vals.len(), solver.c.nnz());
         // final corrector output is the state velocity
         let last = rec.correctors.last().unwrap();
@@ -507,6 +501,7 @@ mod tests {
             mesh,
             PisoConfig { dt: 1.0, target_cfl: Some(0.8), ..Default::default() },
             0.01,
+            ExecCtx::from_env(),
         );
         let mut u = VectorField::zeros(solver.mesh.ncells);
         u.comp[0].iter_mut().for_each(|v| *v = 2.0);

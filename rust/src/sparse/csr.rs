@@ -5,6 +5,8 @@
 //! built once and the values are rewritten each step. Rows are kept sorted
 //! by column which ILU(0) relies on.
 
+use crate::util::det;
+
 #[derive(Clone, Debug)]
 pub struct Csr {
     pub n: usize,
@@ -48,7 +50,7 @@ impl Csr {
                     v += row[j].1;
                     j += 1;
                 }
-                col_idx.push(c as u32);
+                col_idx.push(det::index_u32(c));
                 vals.push(v);
                 i = j;
             }
@@ -66,12 +68,14 @@ impl Csr {
         let mut col_idx = Vec::new();
         row_ptr.push(0);
         for (r, cols) in columns.iter().enumerate() {
+            // ALLOC: symbolic construction runs once per mesh, not per step —
+            // the scratch copy here is setup cost, not a solver hot path
             let mut sorted = cols.clone();
             sorted.sort_unstable();
             sorted.dedup();
             for c in sorted {
                 assert!(c < n, "column {c} in row {r} out of bounds for {n}x{n} structure");
-                col_idx.push(c as u32);
+                col_idx.push(det::index_u32(c));
             }
             row_ptr.push(col_idx.len());
         }
@@ -89,7 +93,7 @@ impl Csr {
         let lo = self.row_ptr[r];
         let hi = self.row_ptr[r + 1];
         let row = &self.col_idx[lo..hi];
-        row.binary_search(&(c as u32)).ok().map(|k| lo + k)
+        row.binary_search(&det::index_u32(c)).ok().map(|k| lo + k)
     }
 
     /// Add `v` to entry (r, c); panics if the entry is not in the structure.
@@ -170,11 +174,7 @@ impl Csr {
     pub fn residual_norm(&self, x: &[f64], b: &[f64]) -> f64 {
         let mut ax = vec![0.0; self.n];
         self.matvec(x, &mut ax);
-        ax.iter()
-            .zip(b)
-            .map(|(a, bi)| (bi - a) * (bi - a))
-            .sum::<f64>()
-            .sqrt()
+        det::sum_by(self.n, |i| (b[i] - ax[i]) * (b[i] - ax[i])).sqrt()
     }
 
     /// Dense representation (tests only; O(n²) memory).

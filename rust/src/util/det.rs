@@ -1,0 +1,86 @@
+//! Blessed deterministic reduction and narrowing helpers.
+//!
+//! The analyze pass (`cargo run -p xtask -- analyze`) forbids raw float
+//! `.sum()` / float-seeded `fold` and lossy `as` casts in the kernel
+//! modules (`sparse/`, `linsolve/`, `fvm/`, `adjoint/`): float addition is
+//! not associative, so a reduction whose combine order is an
+//! iterator-implementation detail can drift between builds, and a silent
+//! narrowing cast truncates instead of failing. Kernel code routes those
+//! operations through this module (or `ExecCtx::dot` for pooled
+//! reductions), where the order is fixed — a serial left fold in index
+//! order, the same order `std`'s `Iterator::sum` uses today but guaranteed
+//! by contract here rather than by implementation accident.
+
+/// Sum in index order (serial left fold). Deterministic by construction.
+pub fn sum(v: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for &x in v {
+        acc += x;
+    }
+    acc
+}
+
+/// Sum `f(0) + f(1) + … + f(n-1)` in index order.
+pub fn sum_by(n: usize, f: impl Fn(usize) -> f64) -> f64 {
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += f(i);
+    }
+    acc
+}
+
+/// Mean in index order; 0 for an empty slice.
+pub fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    sum(v) / v.len() as f64
+}
+
+/// Euclidean norm with the same fixed summation order.
+pub fn norm2(v: &[f64]) -> f64 {
+    sum_by(v.len(), |i| v[i] * v[i]).sqrt()
+}
+
+/// Narrow an index to `u32`, debug-asserting the range instead of silently
+/// truncating (CSR column indices are `u32`; a >4G-cell mesh must fail
+/// loudly, not corrupt the structure).
+#[inline]
+pub fn index_u32(i: usize) -> u32 {
+    debug_assert!(i <= u32::MAX as usize, "index {i} exceeds u32 range");
+    i as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_matches_manual_left_fold() {
+        let v = [0.1, 0.2, 0.3, 1e16, -1e16, 0.4];
+        let mut acc = 0.0;
+        for &x in &v {
+            acc += x;
+        }
+        // bit-for-bit, not approximately: the order is the contract
+        assert_eq!(sum(&v), acc);
+        assert_eq!(sum_by(v.len(), |i| v[i]), acc);
+    }
+
+    #[test]
+    fn mean_of_empty_is_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+    }
+
+    #[test]
+    fn norm2_simple() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn index_narrowing_roundtrips() {
+        assert_eq!(index_u32(0), 0);
+        assert_eq!(index_u32(u32::MAX as usize), u32::MAX);
+    }
+}

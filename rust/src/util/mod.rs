@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod det;
 pub mod json;
 pub mod prop;
 pub mod rng;

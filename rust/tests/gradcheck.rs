@@ -7,6 +7,7 @@
 
 use pict::adjoint::{backward_step, rollout_backward, GradientPaths, Tape, TapeStrategy};
 use pict::mesh::{gen, Mesh, VectorField};
+use pict::par::ExecCtx;
 use pict::piso::{PisoConfig, PisoSolver, State, StepRecord};
 use pict::util::rng::Rng;
 
@@ -66,7 +67,7 @@ fn forward_loss(
     src: &VectorField,
     loss: &Loss,
 ) -> f64 {
-    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu, ExecCtx::from_env());
     let mut state = State::zeros(mesh);
     state.u = u0.clone();
     state.p = p0.to_vec();
@@ -93,7 +94,7 @@ fn single_step_full_gradcheck_periodic() {
     let loss = Loss::new(&mesh, 9);
 
     // analytic gradients
-    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu, ExecCtx::from_env());
     let mut state = state0.clone();
     let mut rec = StepRecord::empty();
     solver.step(&mut state, &src, Some(&mut rec));
@@ -175,7 +176,7 @@ fn single_step_gradcheck_cavity_with_lid_gradient() {
     let src = VectorField::zeros(mesh.ncells);
     let loss = Loss::new(&mesh, 4);
 
-    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu, ExecCtx::from_env());
     let mut state = state0.clone();
     let mut rec = StepRecord::empty();
     solver.step(&mut state, &src, Some(&mut rec));
@@ -207,7 +208,7 @@ fn single_step_gradcheck_cavity_with_lid_gradient() {
                 for v in mesh2.bc_values[3].vel.iter_mut() {
                     v[0] = lid;
                 }
-                let mut solver = PisoSolver::new(mesh2.clone(), cfg.clone(), nu);
+                let mut solver = PisoSolver::new(mesh2.clone(), cfg.clone(), nu, ExecCtx::from_env());
                 let mut st = State::zeros(&mesh2);
                 st.u = state0.u.clone();
                 st.p = state0.p.clone();
@@ -236,7 +237,7 @@ fn rollout_gradcheck_initial_scale() {
     let loss = Loss::new(&mesh, 8);
 
     let run = |scale: f64| -> f64 {
-        let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+        let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu, ExecCtx::from_env());
         let mut state = base.clone();
         state.u.scale(scale);
         let src = VectorField::zeros(ncells);
@@ -246,7 +247,7 @@ fn rollout_gradcheck_initial_scale() {
 
     // analytic: d/dscale = ⟨du0, u_base⟩ at scale=1 (recorded on a
     // checkpointed tape: its backward is bit-for-bit the full tape's)
-    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu);
+    let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), nu, ExecCtx::from_env());
     let mut state = base.clone();
     let tape = Tape::record(
         &mut solver,
@@ -296,7 +297,7 @@ fn approximate_paths_correlate_with_full() {
     loss.wp.iter_mut().for_each(|w| *w = 0.0);
 
     let grad_for = |paths: GradientPaths| -> VectorField {
-        let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), 0.02);
+        let mut solver = PisoSolver::new(mesh.clone(), cfg.clone(), 0.02, ExecCtx::from_env());
         let mut state = base.clone();
         let tape = Tape::record(&mut solver, &mut state, 1, TapeStrategy::Full, |_, _| {
             VectorField::zeros(ncells)

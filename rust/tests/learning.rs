@@ -11,6 +11,7 @@ use pict::coordinator::experiments::tcf_sgs::{
     eval_sgs, reference_statistics, train_tcf_sgs, TcfSgsCfg,
 };
 use pict::mesh::gen;
+use pict::par::ExecCtx;
 use pict::piso::{PisoConfig, PisoSolver, State};
 
 /// E5-style corrector on a tiny vortex-street: training loss drops and the
@@ -46,6 +47,7 @@ fn corrector_training_beats_no_model_vortex_street() {
         fine_mesh,
         PisoConfig { dt: 0.04, use_ilu: true, ..Default::default() },
         nu,
+        ExecCtx::from_env(),
     );
     let mut fine_state = State::zeros(&fine.mesh);
     let frames = make_reference_frames(&mut fine, &mut fine_state, &coarse_mesh, &cfg);
@@ -54,6 +56,7 @@ fn corrector_training_beats_no_model_vortex_street() {
         coarse_mesh.clone(),
         PisoConfig { dt: 0.08, use_ilu: true, ..Default::default() },
         nu,
+        ExecCtx::from_env(),
     );
     let (net, losses) = train_corrector2d(&mut coarse, &frames, &cfg);
     assert!(losses.iter().all(|l| l.is_finite()), "training stayed stable");
@@ -64,12 +67,14 @@ fn corrector_training_beats_no_model_vortex_street() {
         coarse_mesh.clone(),
         PisoConfig { dt: 0.08, use_ilu: true, ..Default::default() },
         nu,
+        ExecCtx::from_env(),
     );
     let base = evaluate_corrector(&mut s1, None, cfg.output_scale, &frames, &checkpoints);
     let mut s2 = PisoSolver::new(
         coarse_mesh,
         PisoConfig { dt: 0.08, use_ilu: true, ..Default::default() },
         nu,
+        ExecCtx::from_env(),
     );
     let nn = evaluate_corrector(&mut s2, Some(&net), cfg.output_scale, &frames, &checkpoints);
     // NN beats baseline in MSE and vorticity correlation at every

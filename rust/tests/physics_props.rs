@@ -4,6 +4,7 @@
 
 use pict::fvm;
 use pict::mesh::{gen, VectorField};
+use pict::par::ExecCtx;
 use pict::piso::{PisoConfig, PisoSolver, State};
 use pict::util::prop::Prop;
 use pict::util::rng::Rng;
@@ -39,7 +40,7 @@ fn momentum_conservation_periodic() {
         // conservation is exact up to the Krylov tolerance — tighten it
         cfg.adv_opts.tol = 1e-12;
         cfg.p_opts.tol = 1e-12;
-        let mut solver = PisoSolver::new(mesh, cfg, nu);
+        let mut solver = PisoSolver::new(mesh, cfg, nu, ExecCtx::from_env());
         let mut state = State::zeros(&solver.mesh);
         state.u = random_div_free(&solver.mesh, rng, 2);
         let mom0: f64 = (0..solver.mesh.ncells)
@@ -66,8 +67,12 @@ fn energy_decay_unforced() {
     Prop::new(5, 0x202).check("energy", |rng, _| {
         let mesh = gen::periodic_box2d(12, 12, 1.0, 1.0);
         let nu = rng.range(0.005, 0.05);
-        let mut solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.01, ..Default::default() }, nu);
+        let mut solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: 0.01, ..Default::default() },
+            nu,
+            ExecCtx::from_env(),
+        );
         let mut state = State::zeros(&solver.mesh);
         state.u = random_div_free(&solver.mesh, rng, 3);
         let src = VectorField::zeros(solver.mesh.ncells);
@@ -91,8 +96,8 @@ fn energy_decay_unforced() {
 #[test]
 fn pressure_shift_invariance() {
     let mesh = gen::cavity2d(10, 1.0, 1.0, false);
-    let mut s1 = PisoSolver::new(mesh.clone(), PisoConfig::default(), 0.01);
-    let mut s2 = PisoSolver::new(mesh, PisoConfig::default(), 0.01);
+    let mut s1 = PisoSolver::new(mesh.clone(), PisoConfig::default(), 0.01, ExecCtx::from_env());
+    let mut s2 = PisoSolver::new(mesh, PisoConfig::default(), 0.01, ExecCtx::from_env());
     let mut a = State::zeros(&s1.mesh);
     let mut b = State::zeros(&s2.mesh);
     b.p.iter_mut().for_each(|p| *p += 37.5);
@@ -130,8 +135,12 @@ fn translation_equivariance_periodic() {
         g
     };
     let run = |u_init: VectorField| -> VectorField {
-        let mut solver =
-            PisoSolver::new(mesh.clone(), PisoConfig { dt: 0.02, ..Default::default() }, 0.01);
+        let mut solver = PisoSolver::new(
+            mesh.clone(),
+            PisoConfig { dt: 0.02, ..Default::default() },
+            0.01,
+            ExecCtx::from_env(),
+        );
         let mut st = State::zeros(&solver.mesh);
         st.u = u_init;
         let src = VectorField::zeros(solver.mesh.ncells);
@@ -157,6 +166,7 @@ fn cavity3d_z_symmetry_and_center_slice() {
         mesh,
         PisoConfig { dt: 0.03, ..Default::default() },
         0.02, // Re = 50: fast convergence
+        ExecCtx::from_env(),
     );
     let mut state = State::zeros(&solver.mesh);
     let src = VectorField::zeros(solver.mesh.ncells);
@@ -185,8 +195,12 @@ fn cavity3d_z_symmetry_and_center_slice() {
 fn per_step_divergence_bounded() {
     Prop::new(4, 0x303).check("div", |rng, _| {
         let mesh = gen::channel2d(10, 10, 1.0, 1.0, 1.1, rng.uniform() < 0.5);
-        let mut solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.02, ..Default::default() }, 0.02);
+        let mut solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: 0.02, ..Default::default() },
+            0.02,
+            ExecCtx::from_env(),
+        );
         let mut state = State::zeros(&solver.mesh);
         state.u = random_div_free(&solver.mesh, rng, 2);
         let src = VectorField::zeros(solver.mesh.ncells);
@@ -206,7 +220,7 @@ fn per_step_divergence_bounded() {
 #[test]
 fn global_continuity_closed_domain() {
     let mesh = gen::cavity2d(12, 1.0, 1.0, true);
-    let mut solver = PisoSolver::new(mesh, PisoConfig::default(), 0.01);
+    let mut solver = PisoSolver::new(mesh, PisoConfig::default(), 0.01, ExecCtx::from_env());
     let mut state = State::zeros(&solver.mesh);
     let src = VectorField::zeros(solver.mesh.ncells);
     solver.run(&mut state, &src, 10);

@@ -12,6 +12,7 @@ use pict::coordinator::scenario::{
 };
 use pict::coordinator::reduce_shared;
 use pict::mesh::{gen, VectorField};
+use pict::par::ExecCtx;
 use pict::piso::{PisoConfig, PisoSolver, State};
 
 /// Terminal Σu² cotangent on the last of `n` steps.
@@ -187,7 +188,7 @@ impl Scenario for ForcedTg {
         cfg.adv_opts.max_iter = 5000;
         cfg.p_opts.tol = 1e-13;
         cfg.p_opts.max_iter = 20000;
-        let solver = PisoSolver::new(mesh, cfg, self.nu);
+        let solver = PisoSolver::new(mesh, cfg, self.nu, ExecCtx::from_env());
         let mut state = State::zeros(&solver.mesh);
         state.u = taylor_green_init(&solver.mesh);
         state.u.scale(0.4);

@@ -5,6 +5,7 @@
 
 use pict::fvm;
 use pict::mesh::{field, gen, VectorField};
+use pict::par::ExecCtx;
 use pict::piso::{PisoConfig, PisoSolver, State};
 
 /// B.1: Poiseuille flow u(y) = G/(2ν) y(1−y) with G=ν=1 ⇒ u_max = 0.125.
@@ -16,6 +17,7 @@ fn poiseuille_matches_analytic() {
             mesh,
             PisoConfig { dt: 0.05, n_correctors: 2, ..Default::default() },
             1.0,
+            ExecCtx::from_env(),
         );
         let mut state = State::zeros(&solver.mesh);
         let mut src = VectorField::zeros(solver.mesh.ncells);
@@ -50,6 +52,7 @@ fn poiseuille_on_distorted_grid() {
             mesh,
             PisoConfig { dt: 0.02, n_correctors: 2, n_nonorth: 1, ..Default::default() },
             0.01,
+            ExecCtx::from_env(),
         );
         let mut state = State::zeros(&solver.mesh);
         let src = VectorField::zeros(solver.mesh.ncells);
@@ -88,6 +91,7 @@ fn cavity_re100_vs_ghia() {
         mesh,
         PisoConfig { dt: 0.02, n_correctors: 2, ..Default::default() },
         0.01, // Re = U L / ν = 100
+        ExecCtx::from_env(),
     );
     let mut state = State::zeros(&solver.mesh);
     let src = VectorField::zeros(solver.mesh.ncells);
@@ -106,8 +110,12 @@ fn cavity_re100_vs_ghia() {
 #[test]
 fn two_block_channel_matches_single_block() {
     let run = |mesh: pict::mesh::Mesh| {
-        let mut solver =
-            PisoSolver::new(mesh, PisoConfig { dt: 0.05, ..Default::default() }, 1.0);
+        let mut solver = PisoSolver::new(
+            mesh,
+            PisoConfig { dt: 0.05, ..Default::default() },
+            1.0,
+            ExecCtx::from_env(),
+        );
         let mut state = State::zeros(&solver.mesh);
         let mut src = VectorField::zeros(solver.mesh.ncells);
         src.comp[0].iter_mut().for_each(|v| *v = 1.0);
@@ -142,6 +150,7 @@ fn bfs_smoke_run_with_outflow() {
         mesh,
         PisoConfig { dt: 0.02, target_cfl: Some(0.8), use_ilu: true, ..Default::default() },
         nu,
+        ExecCtx::from_env(),
     );
     let mut state = State::zeros(&solver.mesh);
     let src = VectorField::zeros(solver.mesh.ncells);
@@ -173,6 +182,7 @@ fn vortex_street_smoke_run() {
         mesh,
         PisoConfig { dt: 0.05, target_cfl: Some(0.8), use_ilu: true, ..Default::default() },
         nu,
+        ExecCtx::from_env(),
     );
     let mut state = State::zeros(&solver.mesh);
     let src = VectorField::zeros(solver.mesh.ncells);

@@ -1,0 +1,83 @@
+//! Rules `execctx-construction` and `execctx-unused-param`.
+//!
+//! The threading contract (PR 3) is that exactly one `ExecCtx` flows down
+//! from the entry point: construction belongs to `par/` (the implementation)
+//! and `coordinator/` (the composition root). A constructor call anywhere
+//! else forks the pool topology — two pools, double width, nondeterministic
+//! interleaving with the batch runner.
+//!
+//! The dual failure mode is a fn that *accepts* `&ExecCtx` but ignores it:
+//! the signature claims pool participation while the body runs serial (or
+//! builds its own context), so callers reasonably assume work they hand it
+//! lands on the shared pool. Either use the parameter, forward it, or
+//! underscore-prefix it where a trait signature forces the argument.
+
+use crate::rules::{in_module, Violation, NUMERIC_MODULES};
+use crate::symbols::SymbolTable;
+
+/// Modules allowed to construct `ExecCtx`: the implementation and the
+/// composition root.
+const CONSTRUCTION_ALLOWED: &[&str] = &["par/", "coordinator/"];
+
+pub fn check(table: &SymbolTable, out: &mut Vec<Violation>) {
+    for f in &table.files {
+        let code = &f.code;
+        // --- construction sites ---
+        if !in_module(&f.path, CONSTRUCTION_ALLOWED) {
+            for (i, t) in code.iter().enumerate() {
+                if f.test[i] || t.ident() != Some("ExecCtx") {
+                    continue;
+                }
+                let is_ctor = code.get(i + 1).map(|n| n.tok == crate::lexer::Tok::PathSep).unwrap_or(false)
+                    && code.get(i + 2).and_then(|n| n.ident()).is_some()
+                    && code.get(i + 3).map(|n| n.is_punct('(')).unwrap_or(false);
+                if is_ctor {
+                    out.push(Violation {
+                        file: f.path.clone(),
+                        line: t.line,
+                        rule: "execctx-construction",
+                        msg: "ExecCtx constructed outside par/ and coordinator/: accept a \
+                              ctx (or &ExecCtx) from the caller so the whole run shares \
+                              one pool instead of forking topology per call site"
+                            .to_string(),
+                    });
+                }
+            }
+        }
+        // --- unused &ExecCtx params in solver-core fns ---
+        if !in_module(&f.path, NUMERIC_MODULES) {
+            continue;
+        }
+        for item in &f.parsed.fns {
+            let Some((bs, be)) = item.body else { continue };
+            if f.test[bs] {
+                continue;
+            }
+            for p in &item.params {
+                if p.name == "self"
+                    || p.name.starts_with('_')
+                    || !p.ty_idents.iter().any(|t| t == "ExecCtx")
+                {
+                    continue;
+                }
+                let used = code[bs..=be.min(code.len() - 1)]
+                    .iter()
+                    .any(|t| t.ident() == Some(p.name.as_str()));
+                if !used {
+                    out.push(Violation {
+                        file: f.path.clone(),
+                        line: item.line,
+                        rule: "execctx-unused-param",
+                        msg: format!(
+                            "fn `{}` accepts `{}: &ExecCtx` but never uses or forwards it: \
+                             the signature promises pool participation the body does not \
+                             deliver — use it, drop it, or rename to `_{}` where a trait \
+                             signature forces the argument",
+                            item.name, p.name, p.name
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}

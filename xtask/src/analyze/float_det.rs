@@ -1,0 +1,157 @@
+//! Rules `float-reduction` and `lossy-cast`.
+//!
+//! Float addition is not associative, so any reduction whose combine order
+//! is an iterator-implementation detail (`.sum()`, a `fold` seeded with a
+//! float) can drift between serial and pool execution — exactly the drift
+//! the bit-for-bit contract forbids. In the kernel modules (`sparse/`,
+//! `linsolve/`, `fvm/`, `adjoint/`) reductions must go through the blessed
+//! helpers (`ExecCtx::dot`, `util::det::{sum, sum_by, norm2}`) whose
+//! combine order is fixed by construction. Integer `.sum::<usize>()` and
+//! friends stay legal — integer addition is associative.
+//!
+//! Lossy `as` casts are the second drift channel: a silent `usize as u32`
+//! truncates on >4G-cell meshes, `f64 as f32` rounds. Narrowing must go
+//! through `util::det::index_u32` (debug-asserted) or carry an explicit
+//! justification in code review; widening (`as f64`, `as usize`, `as u64`,
+//! `as i64`) is always exact for our index/value domains.
+
+use crate::lexer::Tok;
+use crate::rules::{in_module, Violation};
+use crate::symbols::SymbolTable;
+
+/// Modules under the float-determinism contract. `piso/` is deliberately
+/// absent: the stepper's `fold(0.0, f64::max)` CFL scan is order-independent
+/// (max is associative and commutative).
+const FLOAT_MODULES: &[&str] = &["sparse/", "linsolve/", "fvm/", "adjoint/"];
+
+/// Integer element types for which `.sum::<T>()` is associative and legal.
+const INT_TYPES: &[&str] =
+    &["usize", "u128", "u64", "u32", "u16", "u8", "isize", "i128", "i64", "i32", "i16", "i8"];
+
+/// Cast targets that can truncate or round our index/value domains.
+const LOSSY_TARGETS: &[&str] = &["f32", "u32", "i32", "u16", "i16", "u8", "i8"];
+
+pub fn check(table: &SymbolTable, out: &mut Vec<Violation>) {
+    for f in &table.files {
+        if !in_module(&f.path, FLOAT_MODULES) {
+            continue;
+        }
+        let code = &f.code;
+        for (i, t) in code.iter().enumerate() {
+            if f.test[i] {
+                continue;
+            }
+            // --- `as <lossy type>` ---
+            if t.ident() == Some("as") {
+                if let Some(target) = code.get(i + 1).and_then(|n| n.ident()) {
+                    if LOSSY_TARGETS.contains(&target) {
+                        out.push(Violation {
+                            file: f.path.clone(),
+                            line: t.line,
+                            rule: "lossy-cast",
+                            msg: format!(
+                                "lossy `as {target}` in a kernel module: narrowing must go \
+                                 through util::det (index_u32 debug-asserts the range) so \
+                                 truncation on large meshes fails loudly instead of \
+                                 corrupting indices"
+                            ),
+                        });
+                    }
+                }
+                continue;
+            }
+            if !t.is_punct('.') {
+                continue;
+            }
+            match code.get(i + 1).and_then(|n| n.ident()) {
+                // --- `.sum()` / `.sum::<T>()` ---
+                Some("sum") => {
+                    let bare = code.get(i + 2).map(|n| n.is_punct('(')).unwrap_or(false);
+                    let turbofish_float = code.get(i + 2).map(|n| n.tok == Tok::PathSep).unwrap_or(false)
+                        && code.get(i + 3).map(|n| n.is_punct('<')).unwrap_or(false)
+                        && code
+                            .get(i + 4)
+                            .and_then(|n| n.ident())
+                            .map(|ty| !INT_TYPES.contains(&ty))
+                            .unwrap_or(false);
+                    if bare || turbofish_float {
+                        out.push(Violation {
+                            file: f.path.clone(),
+                            line: t.line,
+                            rule: "float-reduction",
+                            msg: "iterator .sum() over floats in a kernel module: combine \
+                                  order is an implementation detail — use util::det::sum / \
+                                  sum_by (serial, index order) or ExecCtx::dot (fixed \
+                                  chunk order)"
+                                .to_string(),
+                        });
+                    }
+                }
+                // --- `.fold(<float literal>, …)` ---
+                Some("fold") => {
+                    if !code.get(i + 2).map(|n| n.is_punct('(')).unwrap_or(false) {
+                        continue;
+                    }
+                    let mut j = i + 3;
+                    if code.get(j).map(|n| n.is_punct('-')).unwrap_or(false) {
+                        j += 1;
+                    }
+                    let seed_is_float = matches!(
+                        code.get(j).map(|n| &n.tok),
+                        Some(Tok::Num(text)) if is_float_literal(text)
+                    );
+                    if seed_is_float {
+                        out.push(Violation {
+                            file: f.path.clone(),
+                            line: t.line,
+                            rule: "float-reduction",
+                            msg: "float-seeded fold in a kernel module: if this is a sum, \
+                                  use util::det::sum_by; if the combine is associative \
+                                  (min/max), seed it through util::det or document why \
+                                  order cannot matter"
+                                .to_string(),
+                        });
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Whether a numeric-literal token text denotes a float. Integer suffixes
+/// are checked first because `0usize` contains an `e`.
+fn is_float_literal(text: &str) -> bool {
+    if text.starts_with("0x")
+        || text.starts_with("0X")
+        || text.starts_with("0o")
+        || text.starts_with("0O")
+        || text.starts_with("0b")
+        || text.starts_with("0B")
+    {
+        return false;
+    }
+    if INT_TYPES.iter().any(|s| text.ends_with(s)) {
+        return false;
+    }
+    text.contains('.')
+        || text.ends_with("f32")
+        || text.ends_with("f64")
+        || text.contains('e')
+        || text.contains('E')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn float_literal_classification() {
+        for float in ["1.0", "0.5f64", "1e10", "1.5e-3", "2E+7", "3f32"] {
+            assert!(is_float_literal(float), "{float}");
+        }
+        for int in ["0", "42", "0usize", "7u32", "0x1e", "0b101", "10_000", "3i64"] {
+            assert!(!is_float_literal(int), "{int}");
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Rule `hot-loop-alloc`: kernel inner loops must not allocate.
+//!
+//! The solver's per-step cost is dominated by the sparse kernels and the
+//! Krylov iterations; an allocation inside those loops turns an O(nnz)
+//! sweep into an allocator benchmark and (worse) makes runtime depend on
+//! heap state. Scratch buffers are sized once per solve and reused —
+//! `dd.fill(0.0)` inside the loop, `vec![0.0; n]` above it.
+//!
+//! The rule flags `Vec::new` / `Vec::with_capacity` / `vec![…]` /
+//! `.collect(…)` / `.clone(…)` inside any loop body of the kernel files,
+//! unless an `// ALLOC:` comment within 3 lines justifies it. On top of the
+//! syntactic check, the call graph propagates one level: a loop-body call
+//! that resolves uniquely to a kernel-file fn whose body allocates is
+//! flagged at the call site (the allocation is per-iteration even though
+//! the `vec!` sits elsewhere). Ambiguous names do not propagate — the
+//! graph is conservative by design.
+
+use crate::callgraph::CallGraph;
+use crate::lexer::Tok;
+use crate::rules::Violation;
+use crate::symbols::{SourceFile, SymbolTable};
+
+/// The hot files: sparse matvec/transpose, Krylov iterations,
+/// preconditioner applies, and FVM assembly.
+const KERNEL_FILES: &[&str] = &[
+    "sparse/csr.rs",
+    "linsolve/cg.rs",
+    "linsolve/bicgstab.rs",
+    "linsolve/precond.rs",
+    "fvm/assemble.rs",
+];
+
+pub fn check(table: &SymbolTable, graph: &CallGraph, out: &mut Vec<Violation>) {
+    let kernel_idx: Vec<usize> = table
+        .files
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| KERNEL_FILES.contains(&f.path.as_str()))
+        .map(|(i, _)| i)
+        .collect();
+    for &fi in &kernel_idx {
+        let f = &table.files[fi];
+        // --- direct allocations inside loop bodies ---
+        for (i, t) in f.code.iter().enumerate() {
+            if f.test[i] || !f.parsed.in_loop(i) {
+                continue;
+            }
+            if let Some(what) = alloc_at(f, i) {
+                if !f.alloc_justified(t.line) {
+                    out.push(Violation {
+                        file: f.path.clone(),
+                        line: t.line,
+                        rule: "hot-loop-alloc",
+                        msg: format!(
+                            "{what} inside a kernel loop: hoist the buffer out of the loop \
+                             and reuse it (fill/copy_from_slice), or justify with an \
+                             `// ALLOC:` comment within 3 lines"
+                        ),
+                    });
+                }
+            }
+        }
+        // --- one-level call-graph propagation ---
+        for loop_range in &f.parsed.loops {
+            for site in graph.sites_in(fi, *loop_range) {
+                if f.test[site.token] || f.alloc_justified(site.line) {
+                    continue;
+                }
+                let Some((tf, tn)) = site.target else { continue };
+                if !kernel_idx.contains(&tf) {
+                    continue;
+                }
+                let callee_file = &table.files[tf];
+                let callee = &callee_file.parsed.fns[tn];
+                if let Some(alloc_line) = fn_allocates(callee_file, callee) {
+                    out.push(Violation {
+                        file: f.path.clone(),
+                        line: site.line,
+                        rule: "hot-loop-alloc",
+                        msg: format!(
+                            "call to `{}` inside a kernel loop allocates per iteration \
+                             ({}:{} allocates): hoist the buffer to the caller or \
+                             justify with `// ALLOC:`",
+                            site.callee, callee_file.path, alloc_line
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// If token `i` starts an allocation pattern, a short description of it.
+fn alloc_at(f: &SourceFile, i: usize) -> Option<&'static str> {
+    let code = &f.code;
+    match &code[i].tok {
+        Tok::Ident(s) if s == "Vec" => {
+            let ctor = code.get(i + 1).map(|n| n.tok == Tok::PathSep).unwrap_or(false)
+                && matches!(code.get(i + 2).and_then(|n| n.ident()), Some("new" | "with_capacity"));
+            ctor.then_some("Vec construction")
+        }
+        Tok::Ident(s) if s == "vec" => {
+            code.get(i + 1).map(|n| n.is_punct('!')).unwrap_or(false).then_some("vec![…]")
+        }
+        Tok::Punct('.') => match code.get(i + 1).and_then(|n| n.ident()) {
+            Some("collect") => Some(".collect()"),
+            Some("clone") if code.get(i + 2).map(|n| n.is_punct('(')).unwrap_or(false) => {
+                Some(".clone()")
+            }
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// First unjustified allocation line in a fn body (test code excluded).
+fn fn_allocates(f: &SourceFile, item: &crate::parse::FnItem) -> Option<usize> {
+    let (bs, be) = item.body?;
+    for i in bs..=be.min(f.code.len() - 1) {
+        if f.test[i] {
+            continue;
+        }
+        if alloc_at(f, i).is_some() && !f.alloc_justified(f.code[i].line) {
+            return Some(f.code[i].line);
+        }
+    }
+    None
+}

@@ -1,0 +1,180 @@
+//! Rule `adjoint-pairing`: forward/backward tape payloads must stay paired.
+//!
+//! The checkpointed-adjoint contract is that every field a `*Record` struct
+//! carries is (a) actually filled by the forward step and (b) actually
+//! consumed by the backward sweep. A field that fails (a) is dead weight in
+//! every checkpoint; a field that fails (b) is worse — it silently rots
+//! until someone resurrects it with stale semantics. This rule extracts the
+//! record structs declared in `piso/stepper.rs`, computes the forward
+//! write-set (struct literals and `.field =` assignments in stepper fns)
+//! and the backward read-set (`.field` accesses in `adjoint/step.rs` +
+//! `adjoint/tape.rs`), and reports any declared field missing from either.
+//!
+//! Approximations, by construction:
+//! - zero-fill constructors (`empty`, `default`) and size accounting
+//!   (`len_f64`) do not count as forward writes — they touch every field
+//!   whether it is live or not;
+//! - `validate*` fns do not count as backward reads — entry validation
+//!   touches fields without consuming their values;
+//! - reads match on the field *name*, so an unrelated `.dt` access in the
+//!   adjoint also satisfies `StepRecord::dt`. Record fields are named
+//!   distinctively enough that this has not mattered; keep it that way.
+
+use crate::lexer::Tok;
+use crate::rules::Violation;
+use crate::symbols::{SourceFile, SymbolTable};
+use std::collections::BTreeSet;
+
+const FORWARD_FILE: &str = "piso/stepper.rs";
+const BACKWARD_FILES: &[&str] = &["adjoint/step.rs", "adjoint/tape.rs"];
+/// Fns whose field mentions are bookkeeping, not forward writes.
+const NON_WRITE_FNS: &[&str] = &["empty", "default", "len_f64"];
+
+pub fn check(table: &SymbolTable, out: &mut Vec<Violation>) {
+    let Some(fwd) = table.file(FORWARD_FILE) else { return };
+    // the record structs under contract: every `*Record` in the stepper
+    let records: Vec<_> =
+        fwd.parsed.structs.iter().filter(|s| s.name.ends_with("Record")).collect();
+    if records.is_empty() {
+        return;
+    }
+    let declared: Vec<(&str, usize)> = records
+        .iter()
+        .flat_map(|s| s.fields.iter().map(|(f, line)| (f.as_str(), *line)))
+        .collect();
+    let field_names: BTreeSet<&str> = declared.iter().map(|&(f, _)| f).collect();
+
+    let written = forward_writes(fwd, &records, &field_names);
+    let mut read = BTreeSet::new();
+    for path in BACKWARD_FILES {
+        if let Some(f) = table.file(path) {
+            backward_reads(f, &field_names, &mut read);
+        }
+    }
+
+    for &(field, line) in &declared {
+        if !written.contains(field) {
+            out.push(Violation {
+                file: FORWARD_FILE.to_string(),
+                line,
+                rule: "adjoint-pairing",
+                msg: format!(
+                    "record field `{field}` is declared but never written by the forward \
+                     step: delete it or fill it where the tape entry is built"
+                ),
+            });
+        } else if !read.contains(field) {
+            out.push(Violation {
+                file: FORWARD_FILE.to_string(),
+                line,
+                rule: "adjoint-pairing",
+                msg: format!(
+                    "record field `{field}` is written by the forward step but never read \
+                     by the backward sweep (adjoint/step.rs, adjoint/tape.rs): it bloats \
+                     every checkpoint — delete it or consume it in backward_step"
+                ),
+            });
+        }
+    }
+}
+
+/// Fields written by non-test stepper fns (excluding zero-fill/bookkeeping
+/// fns): struct-literal fields plus `.field =` assignments.
+fn forward_writes<'a>(
+    f: &SourceFile,
+    records: &[&crate::parse::StructItem],
+    fields: &BTreeSet<&'a str>,
+) -> BTreeSet<String> {
+    let record_names: BTreeSet<&str> = records.iter().map(|s| s.name.as_str()).collect();
+    let code = &f.code;
+    let mut written = BTreeSet::new();
+    for (i, t) in code.iter().enumerate() {
+        if f.test[i] {
+            continue;
+        }
+        let Some(enclosing) = f.parsed.enclosing_fn(i) else { continue };
+        if NON_WRITE_FNS.contains(&enclosing.name.as_str()) {
+            continue;
+        }
+        // `.field = value` assignment (but not `==` comparison)
+        if t.is_punct('.') {
+            if let Some(name) = code.get(i + 1).and_then(|n| n.ident()) {
+                if fields.contains(name)
+                    && code.get(i + 2).map(|n| n.is_punct('=')).unwrap_or(false)
+                    && !code.get(i + 3).map(|n| n.is_punct('=')).unwrap_or(false)
+                {
+                    written.insert(name.to_string());
+                }
+            }
+            continue;
+        }
+        // `RecordName { field: …, shorthand, … }` struct literal
+        let Some(name) = t.ident() else { continue };
+        if !record_names.contains(name)
+            || !code.get(i + 1).map(|n| n.is_punct('{')).unwrap_or(false)
+        {
+            continue;
+        }
+        literal_fields(f, i + 1, fields, &mut written);
+    }
+    written
+}
+
+/// Field names initialized by the struct literal whose `{` is at `open`:
+/// idents at brace depth 1 (paren/bracket depth 0) preceded by `{`/`,` and
+/// followed by `:` (explicit), `,` or `}` (shorthand).
+fn literal_fields(
+    f: &SourceFile,
+    open: usize,
+    fields: &BTreeSet<&str>,
+    written: &mut BTreeSet<String>,
+) {
+    let code = &f.code;
+    let mut brace = 0i64;
+    let mut inner = 0i64; // parens + brackets inside the literal
+    for k in open..code.len() {
+        match &code[k].tok {
+            Tok::Punct('{') => brace += 1,
+            Tok::Punct('}') => {
+                brace -= 1;
+                if brace == 0 {
+                    return;
+                }
+            }
+            Tok::Punct('(' | '[') => inner += 1,
+            Tok::Punct(')' | ']') => inner -= 1,
+            Tok::Ident(name) if brace == 1 && inner == 0 && fields.contains(name.as_str()) => {
+                let before = k >= 1
+                    && (code[k - 1].is_punct('{') || code[k - 1].is_punct(','));
+                let after = matches!(
+                    code.get(k + 1).map(|n| &n.tok),
+                    Some(Tok::Punct(':' | ',' | '}'))
+                );
+                if before && after {
+                    written.insert(name.clone());
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// `.field` accesses in non-test, non-`validate*` fns.
+fn backward_reads(f: &SourceFile, fields: &BTreeSet<&str>, read: &mut BTreeSet<String>) {
+    let code = &f.code;
+    for (i, t) in code.iter().enumerate() {
+        if f.test[i] || !t.is_punct('.') {
+            continue;
+        }
+        let Some(name) = code.get(i + 1).and_then(|n| n.ident()) else { continue };
+        if !fields.contains(name) {
+            continue;
+        }
+        if let Some(enclosing) = f.parsed.enclosing_fn(i) {
+            if enclosing.name.starts_with("validate") {
+                continue;
+            }
+        }
+        read.insert(name.to_string());
+    }
+}

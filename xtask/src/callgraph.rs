@@ -1,0 +1,170 @@
+//! Approximate call graph over the symbol table.
+//!
+//! Call sites are syntactic: an identifier directly followed by `(` that is
+//! neither a keyword, a macro invocation (`name!`), nor a declaration
+//! (`fn name(`). Resolution is by name — same-file fns win, otherwise a
+//! *unique* global candidate resolves and ambiguous names stay unresolved.
+//! That keeps the graph conservative: the hot-path allocation rule only
+//! propagates through edges it is sure about, so an ambiguous name can hide
+//! an allocation but never invent one.
+
+use crate::symbols::{SourceFile, SymbolTable};
+
+/// Idents that look like calls (`if (…)`, `match (…)`) but are control flow.
+const KEYWORDS: &[&str] = &[
+    "return", "match", "if", "while", "for", "loop", "in", "as", "let", "else", "move", "break",
+    "continue",
+];
+
+/// One syntactic call site.
+#[derive(Debug, Clone)]
+pub struct CallSite {
+    /// Index into `SymbolTable::files` of the calling file.
+    pub file: usize,
+    /// Token index of the callee identifier in that file's `code`.
+    pub token: usize,
+    pub callee: String,
+    pub line: usize,
+    /// `true` for `.name(…)` method syntax (receiver type unknown, so
+    /// method calls only resolve when the name is globally unique).
+    pub method: bool,
+    /// Resolved target as `(file index, fn index)`; `None` when the name
+    /// matched zero or several candidate fns.
+    pub target: Option<(usize, usize)>,
+}
+
+pub struct CallGraph {
+    pub sites: Vec<CallSite>,
+}
+
+impl CallGraph {
+    pub fn build(table: &SymbolTable) -> CallGraph {
+        // name → [(file, fn)] across the whole tree
+        let mut by_name: std::collections::BTreeMap<&str, Vec<(usize, usize)>> =
+            std::collections::BTreeMap::new();
+        for (fi, f) in table.files.iter().enumerate() {
+            for (ni, item) in f.parsed.fns.iter().enumerate() {
+                by_name.entry(item.name.as_str()).or_default().push((fi, ni));
+            }
+        }
+        let mut sites = Vec::new();
+        for (fi, f) in table.files.iter().enumerate() {
+            collect_sites(fi, f, &by_name, &mut sites);
+        }
+        CallGraph { sites }
+    }
+
+    /// Call sites whose token index lies inside the given fn body.
+    pub fn sites_in<'a>(
+        &'a self,
+        file: usize,
+        body: (usize, usize),
+    ) -> impl Iterator<Item = &'a CallSite> {
+        self.sites
+            .iter()
+            .filter(move |s| s.file == file && body.0 <= s.token && s.token <= body.1)
+    }
+}
+
+fn collect_sites(
+    fi: usize,
+    f: &SourceFile,
+    by_name: &std::collections::BTreeMap<&str, Vec<(usize, usize)>>,
+    out: &mut Vec<CallSite>,
+) {
+    let code = &f.code;
+    for (i, t) in code.iter().enumerate() {
+        let Some(name) = t.ident() else { continue };
+        if KEYWORDS.contains(&name) {
+            continue;
+        }
+        if !code.get(i + 1).map(|n| n.is_punct('(')).unwrap_or(false) {
+            continue;
+        }
+        // declarations are not calls
+        if i >= 1 && code[i - 1].ident() == Some("fn") {
+            continue;
+        }
+        let method = i >= 1 && code[i - 1].is_punct('.');
+        // resolve: same-file fn by name first, else a unique global match
+        let candidates = by_name.get(name).map(Vec::as_slice).unwrap_or(&[]);
+        let local: Vec<&(usize, usize)> = candidates.iter().filter(|&&(cf, _)| cf == fi).collect();
+        let target = match (local.as_slice(), candidates) {
+            ([one], _) => Some(**one),
+            ([], [one]) => Some(*one),
+            _ => None,
+        };
+        out.push(CallSite { file: fi, token: i, callee: name.to_string(), line: t.line, method, target });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::symbols::SymbolTable;
+
+    fn table(files: &[(&str, &str)]) -> SymbolTable {
+        SymbolTable::build(
+            files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect(),
+        )
+    }
+
+    #[test]
+    fn calls_resolve_same_file_first() {
+        let t = table(&[(
+            "a.rs",
+            "fn helper(x: f64) -> f64 { x }\nfn driver(x: f64) -> f64 { helper(x) }",
+        )]);
+        let g = CallGraph::build(&t);
+        let call = g.sites.iter().find(|s| s.callee == "helper").expect("call site");
+        assert_eq!(call.target, Some((0, 0)));
+        assert!(!call.method);
+    }
+
+    #[test]
+    fn unique_cross_file_calls_resolve() {
+        let t = table(&[
+            ("a.rs", "pub fn kernel(n: usize) -> usize { n }"),
+            ("b.rs", "fn run(n: usize) -> usize { kernel(n) }"),
+        ]);
+        let g = CallGraph::build(&t);
+        let call = g.sites.iter().find(|s| s.callee == "kernel").expect("call site");
+        assert_eq!(call.target, Some((0, 0)));
+    }
+
+    #[test]
+    fn ambiguous_names_stay_unresolved() {
+        let t = table(&[
+            ("a.rs", "pub fn apply(n: usize) -> usize { n }"),
+            ("b.rs", "pub fn apply(n: usize) -> usize { n + 1 }"),
+            ("c.rs", "fn run(n: usize) -> usize { apply(n) }"),
+        ]);
+        let g = CallGraph::build(&t);
+        let call = g.sites.iter().find(|s| s.callee == "apply").expect("call site");
+        assert_eq!(call.target, None, "two candidates: must not guess");
+    }
+
+    #[test]
+    fn keywords_macros_and_declarations_are_not_calls() {
+        let t = table(&[(
+            "a.rs",
+            "fn f(n: usize) -> usize { if (n > 0) { return (n); } vec![0; n].len() }",
+        )]);
+        let g = CallGraph::build(&t);
+        assert!(
+            g.sites.iter().all(|s| s.callee != "if" && s.callee != "return" && s.callee != "vec"),
+            "{:?}",
+            g.sites.iter().map(|s| s.callee.as_str()).collect::<Vec<_>>()
+        );
+        // the fn declaration itself is not a site
+        assert!(g.sites.iter().all(|s| s.callee != "f"));
+    }
+
+    #[test]
+    fn method_calls_are_flagged() {
+        let t = table(&[("a.rs", "fn f(v: &[f64]) -> usize { v.len() }")]);
+        let g = CallGraph::build(&t);
+        let call = g.sites.iter().find(|s| s.callee == "len").expect("method site");
+        assert!(call.method);
+    }
+}

@@ -17,7 +17,10 @@ pub enum Tok {
     Str(String),
     /// Char or byte-char literal.
     Char,
-    Num,
+    /// Numeric literal; payload is the literal text (digits, `_`, radix
+    /// prefix, exponent, suffix) so rules can tell float from integer
+    /// literals (e.g. the float-determinism `fold` seed check).
+    Num(String),
     Lifetime,
     /// The `::` path separator (collapsed into one token for rule matching).
     PathSep,
@@ -226,18 +229,39 @@ impl Lexer {
     }
 
     fn number(&mut self, start: usize) {
+        let mut text = String::new();
+        // a digit run lexed right after a `.` is a tuple index (`t.0.1`):
+        // it never absorbs a further decimal point of its own
+        let after_dot = matches!(self.out.last(), Some(Token { tok: Tok::Punct('.'), .. }));
+        let radix_prefix = self.peek(0) == Some('0')
+            && matches!(self.peek(1), Some('x' | 'X' | 'o' | 'O' | 'b' | 'B'));
         while let Some(c) = self.peek(0) {
             if c.is_ascii_alphanumeric() || c == '_' {
+                text.push(c);
                 self.bump();
-            } else if c == '.' && self.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false) {
+            } else if c == '.'
+                && !after_dot
+                && !text.contains('.')
+                && self.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false)
+            {
                 // decimal point only when followed by a digit, so `0..n`
                 // range syntax is left as two `.` puncts
+                text.push(c);
+                self.bump();
+            } else if (c == '+' || c == '-')
+                && !radix_prefix
+                && matches!(text.chars().last(), Some('e' | 'E'))
+                && self.peek(1).map(|d| d.is_ascii_digit()).unwrap_or(false)
+            {
+                // signed exponent: `1.5e-3` is one literal (`0x1e - 3` is
+                // not: hex digits never grow an exponent)
+                text.push(c);
                 self.bump();
             } else {
                 break;
             }
         }
-        self.push(Tok::Num, start);
+        self.push(Tok::Num(text), start);
     }
 
     fn ident_or_prefixed(&mut self, start: usize) {
@@ -252,11 +276,11 @@ impl Lexer {
         }
         // string/char-literal prefixes
         match (name.as_str(), self.peek(0)) {
-            ("r" | "br", Some('"')) => {
+            ("r" | "br" | "cr", Some('"')) => {
                 let s = self.raw_string_body();
                 self.push(Tok::Str(s), start);
             }
-            ("r" | "br", Some('#')) => {
+            ("r" | "br" | "cr", Some('#')) => {
                 // raw string r#"…"# — or a raw identifier r#keyword
                 let mut a = 0usize;
                 while self.peek(a) == Some('#') {
@@ -270,7 +294,7 @@ impl Lexer {
                     self.ident_or_prefixed(start);
                 }
             }
-            ("b", Some('"')) => {
+            ("b" | "c", Some('"')) => {
                 self.bump();
                 let s = self.string_body();
                 self.push(Tok::Str(s), start);
@@ -354,6 +378,87 @@ mod tests {
         assert_eq!((c.line, c.end_line), (2, 4));
         let u = toks.iter().find(|t| t.ident() == Some("unsafe")).expect("unsafe token");
         assert_eq!(u.line, 5);
+    }
+
+    #[test]
+    fn raw_strings_respect_hash_counts() {
+        // a `"#` inside an `r##"…"##` body must not close the literal
+        let src = r####"let a = r##"x "# y"##; let b = unwrap;"####;
+        let toks = lex(src);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, vec![r##"x "# y"##]);
+        // the identifier after the literal is real code again
+        let ids: Vec<&str> = toks.iter().filter_map(|t| t.ident()).collect();
+        assert_eq!(ids, vec!["let", "a", "let", "b", "unwrap"]);
+    }
+
+    #[test]
+    fn raw_string_spans_track_lines() {
+        let src = "r#\"one\ntwo\nthree\"#\nunsafe";
+        let toks = lex(src);
+        let s = toks.iter().find(|t| matches!(t.tok, Tok::Str(_))).expect("raw string token");
+        assert_eq!((s.line, s.end_line), (1, 3));
+        let u = toks.iter().find(|t| t.ident() == Some("unsafe")).expect("unsafe token");
+        assert_eq!(u.line, 4);
+    }
+
+    #[test]
+    fn nested_block_comments_close_at_matching_depth() {
+        // the inner `*/`s must not end the outer comment — only the one
+        // matching the outermost `/*` does, at the right end line
+        let src = "/* a /* b\n/* c */ d */ e */\nfn after() {}";
+        let toks = lex(src);
+        let c = toks.iter().find(|t| matches!(t.tok, Tok::Comment(_))).expect("comment token");
+        assert_eq!((c.line, c.end_line), (1, 2));
+        let ids: Vec<&str> = toks.iter().filter_map(|t| t.ident()).collect();
+        assert_eq!(ids, vec!["fn", "after"]);
+        let f = toks.iter().find(|t| t.ident() == Some("fn")).expect("fn token");
+        assert_eq!(f.line, 3);
+    }
+
+    #[test]
+    fn byte_and_raw_byte_literals() {
+        let toks = lex(r##"let x = b"bytes"; let y = br#"raw"#; let z = b'q';"##);
+        let strs = toks.iter().filter(|t| matches!(t.tok, Tok::Str(_))).count();
+        assert_eq!(strs, 2);
+        let chars = toks.iter().filter(|t| matches!(t.tok, Tok::Char)).count();
+        assert_eq!(chars, 1);
+        let ids: Vec<&str> = toks.iter().filter_map(|t| t.ident()).collect();
+        assert_eq!(ids, vec!["let", "x", "let", "y", "let", "z"]);
+    }
+
+    #[test]
+    fn tuple_access_is_not_a_float() {
+        let toks = lex("let v = t.0.1;");
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Num(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["0", "1"], "tuple indices must stay separate integer tokens");
+        let dots = toks.iter().filter(|t| t.is_punct('.')).count();
+        assert_eq!(dots, 2);
+    }
+
+    #[test]
+    fn exponent_floats_are_one_token() {
+        let toks = lex("let a = 1.5e-3; let b = 2E+7; let c = 0x1e - 3; let d = 1e10;");
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Num(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, vec!["1.5e-3", "2E+7", "0x1e", "3", "1e10"]);
     }
 
     #[test]

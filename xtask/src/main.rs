@@ -2,11 +2,19 @@
 //!
 //! `cargo run -p xtask -- lint [--root <dir>]` runs the determinism &
 //! concurrency contract lint over `rust/src` and exits nonzero if any rule
-//! fires. The same pass is wired into the default test suite
-//! (`rules::tests::repo_rust_src_is_lint_clean`) and CI.
+//! fires. `cargo run -p xtask -- analyze [--root <dir>] [--json]` runs the
+//! semantic analyzer (parser + symbol table + call graph + the
+//! adjoint-pairing / ExecCtx-flow / float-determinism / hot-allocation
+//! rules); `--json` emits the machine-readable report CI archives as an
+//! artifact. Both passes are also wired into the default test suite
+//! (`repo_rust_src_is_lint_clean`, `repo_rust_src_is_analyze_clean`).
 
+mod analyze;
+mod callgraph;
 mod lexer;
+mod parse;
 mod rules;
+mod symbols;
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -15,6 +23,7 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("lint") => lint(&args[1..]),
+        Some("analyze") => analyze_cmd(&args[1..]),
         Some(other) => {
             eprintln!("unknown xtask subcommand `{other}`");
             usage();
@@ -28,7 +37,20 @@ fn main() -> ExitCode {
 }
 
 fn usage() {
-    eprintln!("usage: cargo run -p xtask -- lint [--root <workspace-root>]");
+    eprintln!(
+        "usage: cargo run -p xtask -- lint [--root <workspace-root>]\n       \
+         cargo run -p xtask -- analyze [--root <workspace-root>] [--json]"
+    );
+}
+
+/// `--root` defaults to the workspace root one level above this crate.
+fn resolve_root(root: Option<PathBuf>) -> PathBuf {
+    root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("xtask sits one level under the workspace root")
+            .to_path_buf()
+    })
 }
 
 fn lint(args: &[String]) -> ExitCode {
@@ -49,14 +71,7 @@ fn lint(args: &[String]) -> ExitCode {
             }
         }
     }
-    // default: the workspace root is one level above this crate
-    let root = root.unwrap_or_else(|| {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-            .parent()
-            .expect("xtask sits one level under the workspace root")
-            .to_path_buf()
-    });
-    let src_root = root.join("rust").join("src");
+    let src_root = resolve_root(root).join("rust").join("src");
     match rules::lint_tree(&src_root) {
         Ok((nfiles, violations)) => {
             if violations.is_empty() {
@@ -75,6 +90,59 @@ fn lint(args: &[String]) -> ExitCode {
         }
         Err(e) => {
             eprintln!("xtask lint: cannot walk {}: {e}", src_root.display());
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn analyze_cmd(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut json = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(p) => root = Some(PathBuf::from(p)),
+                None => {
+                    eprintln!("--root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--json" => json = true,
+            other => {
+                eprintln!("unknown analyze flag `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let src_root = resolve_root(root).join("rust").join("src");
+    match analyze::analyze_tree(&src_root) {
+        Ok(report) => {
+            if json {
+                print!("{}", analyze::to_json(&report));
+            } else if report.violations.is_empty() {
+                println!(
+                    "xtask analyze: {} files clean under {} ({} fns, {} call sites, {} resolved)",
+                    report.files,
+                    src_root.display(),
+                    report.fns,
+                    report.call_sites,
+                    report.resolved_edges
+                );
+            } else {
+                for v in &report.violations {
+                    println!("{v}");
+                }
+                println!(
+                    "xtask analyze: {} violation(s) across {} files",
+                    report.violations.len(),
+                    report.files
+                );
+            }
+            if report.violations.is_empty() { ExitCode::SUCCESS } else { ExitCode::FAILURE }
+        }
+        Err(e) => {
+            eprintln!("xtask analyze: cannot walk {}: {e}", src_root.display());
             ExitCode::from(2)
         }
     }

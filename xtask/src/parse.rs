@@ -1,0 +1,507 @@
+//! Item-level recursive-descent parse over the lexer's token stream.
+//!
+//! The analyze pass needs more structure than the token-pattern lint rules:
+//! which fn a token belongs to, what parameters a fn takes, which fields a
+//! struct declares, where loop bodies begin and end. This parser recovers
+//! exactly that — items, fn signatures, struct fields, use-trees, and
+//! loop/block extents — without attempting a full expression grammar. It is
+//! approximate by design (no type inference, no macro expansion); every
+//! consumer documents how it copes with the approximation.
+//!
+//! All token indices below refer to the *comment-free* stream the caller
+//! passes in (comments are stripped before parsing so indices line up with
+//! the rule masks).
+
+use crate::lexer::{Tok, Token};
+
+/// One `name: Type` function parameter (patterns collapse to their last
+/// binding ident; `self` receivers get the name `self` and no type idents).
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub name: String,
+    /// Identifiers appearing in the parameter's type, in order
+    /// (`&mut par::ExecCtx` → `["par", "ExecCtx"]`).
+    pub ty_idents: Vec<String>,
+}
+
+/// A `fn` item (free fn, method, or bodyless trait declaration).
+#[derive(Debug, Clone)]
+pub struct FnItem {
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub line: usize,
+    pub params: Vec<Param>,
+    /// Inclusive token-index range of the body `{ … }` braces; `None` for
+    /// trait-method declarations without a default body.
+    pub body: Option<(usize, usize)>,
+}
+
+impl FnItem {
+    /// Whether token index `i` falls inside this fn's body.
+    pub fn contains(&self, i: usize) -> bool {
+        self.body.map(|(s, e)| s <= i && i <= e).unwrap_or(false)
+    }
+}
+
+/// A `struct` item with named fields (tuple/unit structs keep an empty
+/// field list).
+#[derive(Debug, Clone)]
+pub struct StructItem {
+    pub name: String,
+    pub line: usize,
+    /// `(field name, 1-based line)` in declaration order.
+    pub fields: Vec<(String, usize)>,
+}
+
+/// Everything the analyzer extracts from one file.
+#[derive(Debug, Default)]
+pub struct ParsedFile {
+    pub fns: Vec<FnItem>,
+    pub structs: Vec<StructItem>,
+    /// Flattened `use` paths: one segment vector per imported leaf
+    /// (`use a::{b, c::d};` → `[a,b]`, `[a,c,d]`).
+    pub uses: Vec<Vec<String>>,
+    /// Inclusive token ranges of `for`/`while`/`loop` bodies (nested loops
+    /// each get their own range).
+    pub loops: Vec<(usize, usize)>,
+}
+
+impl ParsedFile {
+    /// Whether token index `i` is inside any loop body.
+    pub fn in_loop(&self, i: usize) -> bool {
+        self.loops.iter().any(|&(s, e)| s <= i && i <= e)
+    }
+
+    /// The fn whose body contains token index `i` (innermost not needed:
+    /// nested fns are rare and the first match is the enclosing item).
+    pub fn enclosing_fn(&self, i: usize) -> Option<&FnItem> {
+        self.fns.iter().find(|f| f.contains(i))
+    }
+}
+
+/// Parse a comment-free token stream.
+pub fn parse(code: &[Token]) -> ParsedFile {
+    let mut out = ParsedFile::default();
+    // `impl Trait for Type {` — the `for` in an impl header is not a loop
+    let mut in_impl_header = false;
+    let mut i = 0;
+    while i < code.len() {
+        match code[i].ident() {
+            Some("impl") => in_impl_header = true,
+            Some("fn") => {
+                if let Some(f) = parse_fn(code, i) {
+                    out.fns.push(f);
+                }
+                // do not skip the body: nested loops/structs are found by
+                // continuing the walk
+            }
+            Some("struct") => {
+                if let Some(s) = parse_struct(code, i) {
+                    out.structs.push(s);
+                }
+            }
+            Some("use") => {
+                let (paths, next) = parse_use(code, i + 1);
+                out.uses.extend(paths);
+                i = next;
+                continue;
+            }
+            Some("for" | "while" | "loop") => {
+                let hrtb = code.get(i + 1).map(|t| t.is_punct('<')).unwrap_or(false);
+                if !in_impl_header && !hrtb {
+                    if let Some(range) = loop_body(code, i) {
+                        out.loops.push(range);
+                    }
+                }
+            }
+            _ => {
+                if code[i].is_punct('{') {
+                    in_impl_header = false;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Skip a `<…>` generic-parameter list starting at `i` (which must point at
+/// the `<`), tolerating `->` inside `Fn(…) -> T` bounds. Returns the index
+/// one past the closing `>`.
+fn skip_generics(code: &[Token], i: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = i;
+    while j < code.len() {
+        if code[j].is_punct('<') {
+            depth += 1;
+        } else if code[j].is_punct('>') {
+            // the `>` of a `->` return arrow does not close a generic
+            let arrow = j >= 1 && code[j - 1].is_punct('-');
+            if !arrow {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Parse the fn whose `fn` keyword is at index `i`.
+fn parse_fn(code: &[Token], i: usize) -> Option<FnItem> {
+    let name = code.get(i + 1)?.ident()?.to_string();
+    let line = code[i].line;
+    let mut j = i + 2;
+    if code.get(j).map(|t| t.is_punct('<')).unwrap_or(false) {
+        j = skip_generics(code, j);
+    }
+    if !code.get(j).map(|t| t.is_punct('(')).unwrap_or(false) {
+        return None;
+    }
+    // --- parameters: split at top-level commas inside ( … ) ---
+    let mut params = Vec::new();
+    let mut depth = 1usize;
+    let mut seg: Vec<usize> = Vec::new();
+    j += 1;
+    while j < code.len() && depth > 0 {
+        match &code[j].tok {
+            Tok::Punct('(' | '[' | '{') => depth += 1,
+            Tok::Punct(')' | ']' | '}') => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            Tok::Punct(',') if depth == 1 => {
+                if let Some(p) = parse_param(code, &seg) {
+                    params.push(p);
+                }
+                seg.clear();
+                j += 1;
+                continue;
+            }
+            _ => {}
+        }
+        seg.push(j);
+        j += 1;
+    }
+    if let Some(p) = parse_param(code, &seg) {
+        params.push(p);
+    }
+    // --- return type / where clause, then body or `;` ---
+    let mut depth = 0usize;
+    while j < code.len() {
+        match &code[j].tok {
+            Tok::Punct('(' | '[') => depth += 1,
+            Tok::Punct(')' | ']') => depth = depth.saturating_sub(1),
+            Tok::Punct(';') if depth == 0 => {
+                return Some(FnItem { name, line, params, body: None });
+            }
+            Tok::Punct('{') if depth == 0 => {
+                let end = match_brace(code, j)?;
+                return Some(FnItem { name, line, params, body: Some((j, end)) });
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// One parameter segment (token indices between top-level commas):
+/// the name is the last ident before the top-level `:` (so `mut x: T`
+/// binds `x`), the type idents are everything after it.
+fn parse_param(code: &[Token], seg: &[usize]) -> Option<Param> {
+    if seg.is_empty() {
+        return None;
+    }
+    let mut colon = None;
+    let mut depth = 0usize;
+    for (k, &idx) in seg.iter().enumerate() {
+        match &code[idx].tok {
+            Tok::Punct('(' | '[' | '<') => depth += 1,
+            Tok::Punct(')' | ']' | '>') => depth = depth.saturating_sub(1),
+            Tok::Punct(':') if depth == 0 => {
+                colon = Some(k);
+                break;
+            }
+            _ => {}
+        }
+    }
+    match colon {
+        Some(k) => {
+            let name = seg[..k]
+                .iter()
+                .rev()
+                .find_map(|&idx| code[idx].ident())?
+                .to_string();
+            let ty_idents = seg[k + 1..]
+                .iter()
+                .filter_map(|&idx| code[idx].ident().map(str::to_string))
+                .collect();
+            Some(Param { name, ty_idents })
+        }
+        // `self` / `&self` / `&mut self` receivers have no `:`
+        None => {
+            let name = seg.iter().rev().find_map(|&idx| code[idx].ident())?.to_string();
+            (name == "self").then_some(Param { name, ty_idents: vec![] })
+        }
+    }
+}
+
+/// Parse the struct whose `struct` keyword is at index `i`.
+fn parse_struct(code: &[Token], i: usize) -> Option<StructItem> {
+    let name = code.get(i + 1)?.ident()?.to_string();
+    let line = code[i].line;
+    let mut j = i + 2;
+    if code.get(j).map(|t| t.is_punct('<')).unwrap_or(false) {
+        j = skip_generics(code, j);
+    }
+    // where clause before the body
+    while j < code.len() && !code[j].is_punct('{') && !code[j].is_punct('(') && !code[j].is_punct(';')
+    {
+        j += 1;
+    }
+    let mut fields = Vec::new();
+    if code.get(j).map(|t| t.is_punct('{')).unwrap_or(false) {
+        let end = match_brace(code, j)?;
+        let mut depth = 0usize;
+        for k in j..=end.min(code.len() - 1) {
+            match &code[k].tok {
+                Tok::Punct('{' | '(' | '[') => depth += 1,
+                Tok::Punct('}' | ')' | ']') => depth = depth.saturating_sub(1),
+                // a field name is an ident directly followed by `:` at
+                // brace depth 1 (`::` is a distinct PathSep token, and
+                // generic bounds never put a bare `:` at this depth)
+                Tok::Ident(f) if depth == 1 => {
+                    if code.get(k + 1).map(|t| t.is_punct(':')).unwrap_or(false) {
+                        fields.push((f.clone(), code[k].line));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    Some(StructItem { name, line, fields })
+}
+
+/// Flatten the use-tree starting right after the `use` keyword at `start`.
+/// Returns the flattened paths and the index one past the closing `;`.
+fn parse_use(code: &[Token], start: usize) -> (Vec<Vec<String>>, usize) {
+    fn tree(code: &[Token], mut j: usize, prefix: &[String], out: &mut Vec<Vec<String>>) -> usize {
+        let mut path = prefix.to_vec();
+        while j < code.len() {
+            match &code[j].tok {
+                Tok::Ident(s) => {
+                    // `as alias` renames the leaf: record the alias instead
+                    if s == "as" {
+                        if let Some(alias) = code.get(j + 1).and_then(|t| t.ident()) {
+                            if let Some(last) = path.last_mut() {
+                                *last = alias.to_string();
+                            }
+                            j += 1;
+                        }
+                    } else {
+                        path.push(s.clone());
+                    }
+                    j += 1;
+                }
+                Tok::Punct('*') => {
+                    path.push("*".to_string());
+                    j += 1;
+                }
+                Tok::PathSep => {
+                    if code.get(j + 1).map(|t| t.is_punct('{')).unwrap_or(false) {
+                        // group: recurse per branch
+                        j += 2;
+                        loop {
+                            j = tree(code, j, &path, out);
+                            match code.get(j).map(|t| &t.tok) {
+                                Some(Tok::Punct(',')) => j += 1,
+                                Some(Tok::Punct('}')) => {
+                                    j += 1;
+                                    break;
+                                }
+                                _ => break,
+                            }
+                        }
+                        return j;
+                    }
+                    j += 1;
+                }
+                _ => break,
+            }
+        }
+        if path.len() > prefix.len() {
+            out.push(path);
+        }
+        j
+    }
+    let mut out = Vec::new();
+    let mut j = tree(code, start, &[], &mut out);
+    while j < code.len() && !code[j].is_punct(';') {
+        j += 1;
+    }
+    (out, j + 1)
+}
+
+/// Body range of the loop whose keyword is at index `i`: the first `{` at
+/// paren/bracket depth 0 after the keyword opens the body (Rust forbids
+/// bare struct literals in loop-header expressions, and closure bodies in a
+/// header sit inside call parens).
+fn loop_body(code: &[Token], i: usize) -> Option<(usize, usize)> {
+    let mut depth = 0usize;
+    let mut j = i + 1;
+    while j < code.len() {
+        match &code[j].tok {
+            Tok::Punct('(' | '[') => depth += 1,
+            Tok::Punct(')' | ']') => depth = depth.saturating_sub(1),
+            Tok::Punct('{') if depth == 0 => {
+                let end = match_brace(code, j)?;
+                return Some((j, end));
+            }
+            Tok::Punct(';') if depth == 0 => return None,
+            _ => {}
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Index of the `}` matching the `{` at `open`.
+fn match_brace(code: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in code.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::{lex, Tok, Token};
+
+    fn code(src: &str) -> Vec<Token> {
+        lex(src).into_iter().filter(|t| !matches!(t.tok, Tok::Comment(_))).collect()
+    }
+
+    #[test]
+    fn fn_signature_and_body() {
+        let toks = code("pub fn solve(ctx: &ExecCtx, mut rhs: Vec<f64>) -> f64 { rhs[0] }");
+        let p = parse(&toks);
+        assert_eq!(p.fns.len(), 1);
+        let f = &p.fns[0];
+        assert_eq!(f.name, "solve");
+        assert_eq!(f.params.len(), 2);
+        assert_eq!(f.params[0].name, "ctx");
+        assert_eq!(f.params[0].ty_idents, vec!["ExecCtx"]);
+        assert_eq!(f.params[1].name, "rhs");
+        assert_eq!(f.params[1].ty_idents, vec!["Vec", "f64"]);
+        assert!(f.body.is_some());
+    }
+
+    #[test]
+    fn generic_fn_with_closure_bound_parses() {
+        let toks = code("fn sum_by<F: Fn(usize) -> f64>(n: usize, f: F) -> f64 { f(n) }");
+        let p = parse(&toks);
+        assert_eq!(p.fns.len(), 1);
+        assert_eq!(p.fns[0].name, "sum_by");
+        assert_eq!(p.fns[0].params.len(), 2);
+        assert_eq!(p.fns[0].params[1].name, "f");
+    }
+
+    #[test]
+    fn self_receivers_and_trait_decls() {
+        let toks = code(
+            "trait P { fn apply(&self, ctx: &ExecCtx, r: &[f64]); }\n\
+             impl P for J { fn apply(&self, ctx: &ExecCtx, r: &[f64]) { ctx.run(r); } }",
+        );
+        let p = parse(&toks);
+        assert_eq!(p.fns.len(), 2);
+        assert!(p.fns[0].body.is_none(), "trait decl has no body");
+        assert!(p.fns[1].body.is_some());
+        assert_eq!(p.fns[1].params[0].name, "self");
+        assert_eq!(p.fns[1].params[1].name, "ctx");
+    }
+
+    #[test]
+    fn struct_fields_with_lines() {
+        let toks = code("pub struct StepRecord {\n    pub dt: f64,\n    pub vals: Vec<f64>,\n}");
+        let p = parse(&toks);
+        assert_eq!(p.structs.len(), 1);
+        let s = &p.structs[0];
+        assert_eq!(s.name, "StepRecord");
+        assert_eq!(
+            s.fields,
+            vec![("dt".to_string(), 2), ("vals".to_string(), 3)]
+        );
+    }
+
+    #[test]
+    fn struct_literal_fields_are_not_declarations() {
+        // the literal inside the fn must not register as a struct item
+        let toks = code("struct A { x: f64 }\nfn mk() -> A { A { x: 1.0 } }");
+        let p = parse(&toks);
+        assert_eq!(p.structs.len(), 1);
+        assert_eq!(p.structs[0].fields.len(), 1);
+    }
+
+    #[test]
+    fn loops_are_found_and_impl_for_is_not_a_loop() {
+        let toks = code(
+            "impl Trait for Thing {\n\
+               fn go(&self, n: usize) {\n\
+                 for i in 0..n { work(i); }\n\
+                 while n > 0 { step(); }\n\
+                 loop { break; }\n\
+               }\n\
+             }",
+        );
+        let p = parse(&toks);
+        assert_eq!(p.loops.len(), 3, "for/while/loop each get a body range");
+        // all loop ranges sit inside the fn body
+        let f = &p.fns[0];
+        for &(s, e) in &p.loops {
+            assert!(f.contains(s) && f.contains(e));
+        }
+    }
+
+    #[test]
+    fn loop_header_closures_do_not_open_the_body_early() {
+        let toks = code("fn f(v: &[f64]) { for x in v.iter().map(|a| a * 2.0) { use_it(x); } }");
+        let p = parse(&toks);
+        assert_eq!(p.loops.len(), 1);
+        let (s, _) = p.loops[0];
+        // the body must start after the closing paren of .map(...)
+        let use_it = toks.iter().position(|t| t.ident() == Some("use_it")).expect("use_it call");
+        assert!(s < use_it);
+        let map_call = toks.iter().position(|t| t.ident() == Some("map")).expect("map call");
+        assert!(s > map_call);
+    }
+
+    #[test]
+    fn use_trees_flatten() {
+        let toks = code("use crate::linsolve::{bicgstab, cg, Ilu0 as Ilu};\nuse std::path::Path;");
+        let p = parse(&toks);
+        let paths: Vec<String> = p.uses.iter().map(|u| u.join("::")).collect();
+        assert_eq!(
+            paths,
+            vec![
+                "crate::linsolve::bicgstab",
+                "crate::linsolve::cg",
+                "crate::linsolve::Ilu",
+                "std::path::Path",
+            ]
+        );
+    }
+}

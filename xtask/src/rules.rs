@@ -30,7 +30,7 @@ impl std::fmt::Display for Violation {
 /// Modules whose per-element arithmetic feeds gradients: hash-order
 /// iteration or ad-hoc cross-thread state here breaks the bit-for-bit
 /// determinism contract.
-const NUMERIC_MODULES: &[&str] =
+pub(crate) const NUMERIC_MODULES: &[&str] =
     &["sparse/", "linsolve/", "fvm/", "piso/", "adjoint/", "stats/", "nn/", "train/", "mesh/"];
 
 /// Identifiers that mean "hash-ordered container".
@@ -53,7 +53,7 @@ const SYNC_IDENTS: &[&str] = &[
     "mpsc",
 ];
 
-fn in_module(file: &str, prefixes: &[&str]) -> bool {
+pub(crate) fn in_module(file: &str, prefixes: &[&str]) -> bool {
     prefixes.iter().any(|p| file.starts_with(p))
 }
 
@@ -100,7 +100,7 @@ pub fn check_file(file: &str, src: &str) -> Vec<Violation> {
 /// item (including the whole `#[cfg(test)] mod tests { … }` body). The lint
 /// rules police shipped solver code; tests are free to unwrap, spawn
 /// helper threads, and so on.
-fn test_mask(code: &[Token]) -> Vec<bool> {
+pub(crate) fn test_mask(code: &[Token]) -> Vec<bool> {
     let mut mask = vec![false; code.len()];
     let mut i = 0;
     while i < code.len() {
@@ -448,7 +448,7 @@ pub fn lint_tree(src_root: &Path) -> std::io::Result<(usize, Vec<Violation>)> {
     Ok((files.len(), out))
 }
 
-fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+pub(crate) fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
     for entry in std::fs::read_dir(dir)? {
         let entry = entry?;
         let path = entry.path();

@@ -1,0 +1,154 @@
+//! Module-aware symbol table over a source tree.
+//!
+//! Each `.rs` file under `rust/src` is lexed, stripped of comments, parsed
+//! (see [`crate::parse`]), test-masked, and annotated with its module path
+//! and its allocation-allowlist comments. The table is the shared substrate
+//! the analyze rules and the call graph are built on, so every rule sees
+//! the same token indices, masks, and item ranges.
+
+use crate::lexer::{lex, Tok, Token};
+use crate::parse::{parse, ParsedFile};
+use crate::rules::test_mask;
+
+/// One analyzed source file.
+pub struct SourceFile {
+    /// Path relative to the source root, `/`-separated (`piso/stepper.rs`).
+    pub path: String,
+    /// Module path derived from the file path (`piso/stepper.rs` →
+    /// `["piso", "stepper"]`; `lib.rs`/`main.rs` → `[]`; `fvm/mod.rs` →
+    /// `["fvm"]`).
+    pub module: Vec<String>,
+    /// Comment-free token stream (what the parser and rules index into).
+    pub code: Vec<Token>,
+    /// Per-token test mask (`true` = inside a `#[test]`/`#[cfg(test)]` item).
+    pub test: Vec<bool>,
+    /// Merged comment runs as `(first line, last line, mentions "ALLOC:")`,
+    /// mirroring the SAFETY-run logic in the lint pass: contiguous `//`
+    /// lines form one logical comment.
+    pub comments: Vec<(usize, usize, bool)>,
+    pub parsed: ParsedFile,
+}
+
+impl SourceFile {
+    /// Whether an `// ALLOC:` justification run ends within the 3 lines
+    /// above `line` (or on the line itself, for trailing comments) —
+    /// the same proximity window the SAFETY rule uses.
+    pub fn alloc_justified(&self, line: usize) -> bool {
+        self.comments
+            .iter()
+            .any(|&(start, end, has_alloc)| has_alloc && end + 3 >= line && start <= line)
+    }
+}
+
+/// All analyzed files, sorted by path for deterministic iteration.
+pub struct SymbolTable {
+    pub files: Vec<SourceFile>,
+}
+
+impl SymbolTable {
+    /// Build from `(relative path, source text)` pairs.
+    pub fn build(mut sources: Vec<(String, String)>) -> SymbolTable {
+        sources.sort_by(|a, b| a.0.cmp(&b.0));
+        let files = sources
+            .into_iter()
+            .map(|(path, src)| {
+                let tokens = lex(&src);
+                let mut comments: Vec<(usize, usize, bool)> = Vec::new();
+                for t in &tokens {
+                    if let Tok::Comment(text) = &t.tok {
+                        let alloc = text.contains("ALLOC:");
+                        match comments.last_mut() {
+                            Some((_, end, has_alloc)) if t.line <= *end + 1 => {
+                                *end = t.end_line.max(*end);
+                                *has_alloc |= alloc;
+                            }
+                            _ => comments.push((t.line, t.end_line, alloc)),
+                        }
+                    }
+                }
+                let code: Vec<Token> =
+                    tokens.into_iter().filter(|t| !matches!(t.tok, Tok::Comment(_))).collect();
+                let test = test_mask(&code);
+                let parsed = parse(&code);
+                let module = module_path(&path);
+                SourceFile { path, module, code, test, comments, parsed }
+            })
+            .collect();
+        SymbolTable { files }
+    }
+
+    pub fn file(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+}
+
+/// Derive the module path from a file path relative to the source root.
+fn module_path(path: &str) -> Vec<String> {
+    let mut parts: Vec<String> = path
+        .trim_end_matches(".rs")
+        .split('/')
+        .map(str::to_string)
+        .collect();
+    if parts.last().map(String::as_str) == Some("mod") {
+        parts.pop();
+    }
+    if parts.len() == 1 && matches!(parts[0].as_str(), "lib" | "main") {
+        parts.pop();
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn module_paths_follow_file_layout() {
+        assert_eq!(module_path("lib.rs"), Vec::<String>::new());
+        assert_eq!(module_path("main.rs"), Vec::<String>::new());
+        assert_eq!(module_path("fvm/mod.rs"), vec!["fvm"]);
+        assert_eq!(module_path("piso/stepper.rs"), vec!["piso", "stepper"]);
+    }
+
+    #[test]
+    fn build_wires_masks_and_parse_together() {
+        let src = "pub fn shipped(v: &[f64]) -> f64 { v[0] }\n\
+                   #[cfg(test)]\nmod tests {\n  #[test]\n  fn t() { shipped(&[1.0]); }\n}"
+            .to_string();
+        let table = SymbolTable::build(vec![("linsolve/cg.rs".to_string(), src)]);
+        let f = table.file("linsolve/cg.rs").expect("file present");
+        assert_eq!(f.module, vec!["linsolve", "cg"]);
+        // both the shipped fn and the test fn parse; masks tell them apart
+        assert_eq!(f.parsed.fns.len(), 2);
+        let shipped = &f.parsed.fns[0];
+        let test_fn = &f.parsed.fns[1];
+        let (s, _) = shipped.body.expect("shipped body");
+        let (t, _) = test_fn.body.expect("test body");
+        assert!(!f.test[s]);
+        assert!(f.test[t]);
+    }
+
+    #[test]
+    fn alloc_comment_runs_are_tracked() {
+        let src = "fn k(n: usize) {\n\
+                   // ALLOC: scratch sized once per solve, reused across iterations\n\
+                   let v = vec![0.0; n];\n\
+                   let w = vec![1.0; n];\n}"
+            .to_string();
+        let table = SymbolTable::build(vec![("linsolve/cg.rs".to_string(), src)]);
+        let f = table.file("linsolve/cg.rs").expect("file present");
+        assert!(f.alloc_justified(3));
+        assert!(f.alloc_justified(4), "the 3-line window extends past one line");
+        assert!(!f.alloc_justified(30));
+    }
+
+    #[test]
+    fn files_sort_deterministically() {
+        let table = SymbolTable::build(vec![
+            ("z.rs".to_string(), String::new()),
+            ("a.rs".to_string(), String::new()),
+        ]);
+        let paths: Vec<&str> = table.files.iter().map(|f| f.path.as_str()).collect();
+        assert_eq!(paths, vec!["a.rs", "z.rs"]);
+    }
+}

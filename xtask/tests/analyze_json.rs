@@ -1,0 +1,49 @@
+//! End-to-end snapshot of the `analyze --json` report over the mini
+//! fixture tree: locks the CLI surface (exit codes, report shape, rule
+//! ordering) that CI's artifact upload and any downstream consumers
+//! depend on. The fixture seeds one violation per rule family plus one
+//! `// ALLOC:`-justified allocation that must stay quiet.
+
+use std::path::Path;
+use std::process::Command;
+
+fn fixture_root() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures").join("mini")
+}
+
+#[test]
+fn json_report_matches_snapshot() {
+    let out = Command::new(env!("CARGO_BIN_EXE_xtask"))
+        .args(["analyze", "--root"])
+        .arg(fixture_root())
+        .arg("--json")
+        .output()
+        .expect("the xtask binary is built by the test harness");
+    // violations present → nonzero exit, but the JSON report is complete
+    assert_eq!(out.status.code(), Some(1), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let got = String::from_utf8(out.stdout).expect("report is valid UTF-8");
+    let want = include_str!("fixtures/mini/expected.json");
+    assert_eq!(got, want, "analyze --json drifted from the snapshot");
+}
+
+#[test]
+fn human_report_lists_violations_and_exits_nonzero() {
+    let out = Command::new(env!("CARGO_BIN_EXE_xtask"))
+        .args(["analyze", "--root"])
+        .arg(fixture_root())
+        .output()
+        .expect("the xtask binary is built by the test harness");
+    assert_eq!(out.status.code(), Some(1));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for needle in [
+        "[adjoint-pairing]",
+        "[execctx-construction]",
+        "[execctx-unused-param]",
+        "[float-reduction]",
+        "[lossy-cast]",
+        "[hot-loop-alloc]",
+        "7 violation(s) across 4 files",
+    ] {
+        assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
+    }
+}

@@ -1,0 +1,9 @@
+//! Backward sweep for the mini fixture: consumes every live record field.
+
+pub fn backward_step(rec: &StepRecord) -> f64 {
+    let mut acc = rec.dt;
+    for cr in &rec.correctors {
+        acc += cr.h[0];
+    }
+    acc + rec.u_star[0]
+}

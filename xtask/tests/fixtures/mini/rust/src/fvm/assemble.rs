@@ -1,0 +1,9 @@
+//! Assembly kernel for the mini fixture: seeded ExecCtx-flow violations.
+
+pub fn assemble(ctx: &ExecCtx, coeffs: &mut [f64]) {
+    let local = ExecCtx::from_env();
+    for c in coeffs.iter_mut() {
+        *c += 1.0;
+    }
+    let _ = local;
+}

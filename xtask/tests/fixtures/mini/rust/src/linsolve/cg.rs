@@ -1,0 +1,31 @@
+//! Krylov-style kernel for the mini fixture: seeded allocation and
+//! float-determinism violations (plus one justified allocation).
+
+pub fn fresh(n: usize) -> Vec<f64> {
+    vec![0.0; n]
+}
+
+pub fn iterate(n: usize) -> f64 {
+    let mut acc = 0.0;
+    loop {
+        let v = fresh(n);
+        acc += v[0];
+        if acc > 3.0 {
+            break;
+        }
+    }
+    acc
+}
+
+pub fn solve(v: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for x in v {
+        let doubled: Vec<f64> = v.iter().map(|y| y * x).collect();
+        // ALLOC: restart workspace, reached at most once per solve
+        let restart = vec![0.0; v.len()];
+        acc += doubled[0] + restart[0] + *x;
+    }
+    let norm: f64 = v.iter().sum::<f64>();
+    let single = norm as f32;
+    acc + single as f64
+}

@@ -1,0 +1,19 @@
+//! Forward stepper for the mini fixture: the record structs under the
+//! adjoint-pairing contract, with one seeded stale field.
+
+pub struct CorrectorRecord {
+    pub h: Vec<f64>,
+}
+
+pub struct StepRecord {
+    pub dt: f64,
+    pub u_star: Vec<f64>,
+    pub stale_debug: Vec<f64>,
+    pub correctors: Vec<CorrectorRecord>,
+}
+
+pub fn step(dt: f64, u: &[f64]) -> StepRecord {
+    let u_star: Vec<f64> = u.iter().map(|x| x * dt).collect();
+    let correctors = vec![CorrectorRecord { h: u_star.clone() }];
+    StepRecord { dt, u_star: u_star.clone(), stale_debug: u_star, correctors }
+}
