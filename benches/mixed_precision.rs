@@ -1,0 +1,227 @@
+//! Mixed-precision Krylov hot path vs the all-f64 baseline: f32-storage /
+//! f64-accumulation SpMV against the f64 kernel, iterative-refinement CG
+//! against plain f64 CG on pressure-solve systems, and the end-to-end PISO
+//! step at `Precision::Mixed` vs `Precision::F64` — each at 1 and 4 pool
+//! workers, 32x32 up to 128x128. Also times the cross-step mirror refresh
+//! (values-only renarrowing) against a from-scratch `Csr32::from_f64` to
+//! pin the amortization claim. Emits `reports/BENCH_mixed_precision.json`.
+
+use pict::coordinator::scenario::{LidDrivenCavity, Scenario};
+use pict::fvm;
+use pict::linsolve::{cg, refined_cg, Jacobi, Precision, SolveOpts};
+use pict::mesh::gen;
+use pict::par::ExecCtx;
+use pict::sparse::Csr32;
+use pict::util::bench::{print_table, write_report, Bench, BenchResult};
+use pict::util::json::Json;
+
+fn pressure_matrix(n: usize) -> pict::sparse::Csr {
+    let mesh = gen::periodic_box2d(n, n, 1.0, 1.0);
+    let a_inv = vec![1.0; mesh.ncells];
+    let mut m = fvm::pressure_structure(&mesh);
+    fvm::assemble_pressure(&ExecCtx::serial(), &mesh, &a_inv, &mut m);
+    m
+}
+
+/// A consistent, mean-free RHS shaped like a divergence field.
+fn mean_free_rhs(n: usize) -> Vec<f64> {
+    let mesh = gen::periodic_box2d(n, n, 1.0, 1.0);
+    let mut rhs: Vec<f64> = mesh
+        .centers
+        .iter()
+        .map(|c| (7.1 * c[0]).sin() * (3.3 * c[1]).cos())
+        .collect();
+    let mean = rhs.iter().sum::<f64>() / rhs.len() as f64;
+    rhs.iter_mut().for_each(|v| *v -= mean);
+    rhs
+}
+
+fn main() {
+    let bench = Bench::new(2, 10);
+    let mut all: Vec<BenchResult> = Vec::new();
+    let mut jrows = Vec::new();
+
+    // --- SpMV: f64 CSR vs f32-storage mirror (f64 accumulation) ---
+    let mut spmv_rows = Vec::new();
+    for n in [32usize, 64, 128] {
+        let a = pressure_matrix(n);
+        let a32 = Csr32::from_f64(&a);
+        let x: Vec<f64> = (0..a.n).map(|i| ((i * 31 % 97) as f64) * 0.01 - 0.5).collect();
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut y = vec![0.0; a.n];
+        let mut y32 = vec![0.0f32; a.n];
+        let reps = (4_000_000 / a.nnz()).max(1);
+        for t in [1usize, 4] {
+            let ctx = ExecCtx::with_threads(t);
+            let r64 = bench.run(&format!("spmv f64 {n}x{n} x{t} (x{reps})"), || {
+                for _ in 0..reps {
+                    ctx.matvec_chunks(&a, &x, &mut y, t);
+                    std::hint::black_box(&y);
+                }
+            });
+            let r32 = bench.run(&format!("spmv f32-storage {n}x{n} x{t} (x{reps})"), || {
+                for _ in 0..reps {
+                    ctx.matvec32_chunks(&a32, &x32, &mut y32, t);
+                    std::hint::black_box(&y32);
+                }
+            });
+            let speedup = r64.mean_s / r32.mean_s;
+            spmv_rows.push(vec![
+                format!("{n}x{n}"),
+                format!("{t}"),
+                format!("{:.1}us", r64.mean_s / reps as f64 * 1e6),
+                format!("{:.1}us", r32.mean_s / reps as f64 * 1e6),
+                format!("{speedup:.2}x"),
+            ]);
+            jrows.push(Json::obj(vec![
+                ("kernel", Json::Str("spmv".to_string())),
+                ("n", Json::Num(n as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("f64_s", Json::Num(r64.mean_s)),
+                ("mixed_s", Json::Num(r32.mean_s)),
+                ("mixed_speedup", Json::Num(speedup)),
+            ]));
+            all.push(r64);
+            all.push(r32);
+        }
+    }
+    print_table(
+        "SpMV: f32-storage/f64-accumulation vs f64 (pressure matrix, per matvec)",
+        &["system", "threads", "f64", "mixed", "speedup"],
+        &spmv_rows,
+    );
+
+    // --- CG: plain f64 vs iterative refinement, same f64 tolerance ---
+    let mut cg_rows = Vec::new();
+    for n in [32usize, 64, 128] {
+        let a = pressure_matrix(n);
+        let a32 = Csr32::from_f64(&a);
+        let rhs = mean_free_rhs(n);
+        let precond = Jacobi::new(&a);
+        let opts = SolveOpts { tol: 1e-8, max_iter: 4000, ..Default::default() };
+        let mixed_opts = SolveOpts { precision: Precision::Mixed, ..opts };
+        let mut x = vec![0.0; a.n];
+        for t in [1usize, 4] {
+            let ctx = ExecCtx::with_threads(t);
+            let r64 = bench.run(&format!("cg f64 {n}x{n} x{t}"), || {
+                x.iter_mut().for_each(|v| *v = 0.0);
+                let st = cg(&ctx, &a, &rhs, &mut x, &precond, true, opts);
+                assert!(st.converged, "f64 CG must converge on the pressure system");
+            });
+            let rmx = bench.run(&format!("cg mixed {n}x{n} x{t}"), || {
+                x.iter_mut().for_each(|v| *v = 0.0);
+                let st = refined_cg(&ctx, &a, &a32, &rhs, &mut x, &precond, true, mixed_opts);
+                assert!(st.converged, "mixed CG must converge to the same f64 tolerance");
+            });
+            let speedup = r64.mean_s / rmx.mean_s;
+            cg_rows.push(vec![
+                format!("{n}x{n}"),
+                format!("{t}"),
+                format!("{:.3}ms", r64.mean_s * 1e3),
+                format!("{:.3}ms", rmx.mean_s * 1e3),
+                format!("{speedup:.2}x"),
+            ]);
+            jrows.push(Json::obj(vec![
+                ("kernel", Json::Str("cg".to_string())),
+                ("n", Json::Num(n as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("f64_s", Json::Num(r64.mean_s)),
+                ("mixed_s", Json::Num(rmx.mean_s)),
+                ("mixed_speedup", Json::Num(speedup)),
+            ]));
+            all.push(r64);
+            all.push(rmx);
+        }
+    }
+    print_table(
+        "CG to tol=1e-8: f64 vs mixed iterative refinement",
+        &["system", "threads", "f64", "mixed", "speedup"],
+        &cg_rows,
+    );
+
+    // --- end-to-end PISO step: Precision::F64 vs Precision::Mixed ---
+    let step_bench = Bench::new(1, 5);
+    let steps_per_sample = 2usize;
+    let mut step_rows = Vec::new();
+    for n in [32usize, 64, 128] {
+        for t in [1usize, 4] {
+            let mut mean = [0.0f64; 2];
+            for (slot, precision) in [Precision::F64, Precision::Mixed].into_iter().enumerate() {
+                let mut run = LidDrivenCavity { n, re: 100.0, ..Default::default() }.build();
+                run.solver.ctx = ExecCtx::with_threads(t);
+                run.solver.cfg.precision = precision;
+                let label = if precision.is_mixed() { "mixed" } else { "f64" };
+                let mut state = run.state;
+                let r = step_bench.run(&format!("step {label} cavity {n}x{n} x{t}"), || {
+                    let st = run.solver.run(&mut state, &run.source, steps_per_sample);
+                    std::hint::black_box(st);
+                });
+                mean[slot] = r.mean_s;
+                all.push(r);
+            }
+            let speedup = mean[0] / mean[1];
+            step_rows.push(vec![
+                format!("{n}x{n}"),
+                format!("{t}"),
+                format!("{:.2}ms", mean[0] / steps_per_sample as f64 * 1e3),
+                format!("{:.2}ms", mean[1] / steps_per_sample as f64 * 1e3),
+                format!("{speedup:.2}x"),
+            ]);
+            jrows.push(Json::obj(vec![
+                ("kernel", Json::Str("step".to_string())),
+                ("n", Json::Num(n as f64)),
+                ("threads", Json::Num(t as f64)),
+                ("f64_s", Json::Num(mean[0])),
+                ("mixed_s", Json::Num(mean[1])),
+                ("mixed_speedup", Json::Num(speedup)),
+            ]));
+        }
+    }
+    print_table(
+        "PISO step (lid-driven cavity, per step): Precision::F64 vs Precision::Mixed",
+        &["system", "threads", "f64", "mixed", "speedup"],
+        &step_rows,
+    );
+
+    // --- cross-step amortization: values-only refresh vs full rebuild ---
+    let mut refresh_rows = Vec::new();
+    for n in [64usize, 128] {
+        let a = pressure_matrix(n);
+        let mut mirror = Csr32::from_f64(&a);
+        let reps = 200usize;
+        let r_new = bench.run(&format!("mirror from_f64 {n}x{n} (x{reps})"), || {
+            for _ in 0..reps {
+                std::hint::black_box(Csr32::from_f64(&a));
+            }
+        });
+        let r_refresh = bench.run(&format!("mirror refresh {n}x{n} (x{reps})"), || {
+            for _ in 0..reps {
+                mirror.refresh(&a);
+                std::hint::black_box(&mirror);
+            }
+        });
+        let speedup = r_new.mean_s / r_refresh.mean_s;
+        refresh_rows.push(vec![
+            format!("{n}x{n}"),
+            format!("{:.1}us", r_new.mean_s / reps as f64 * 1e6),
+            format!("{:.1}us", r_refresh.mean_s / reps as f64 * 1e6),
+            format!("{speedup:.2}x"),
+        ]);
+        jrows.push(Json::obj(vec![
+            ("kernel", Json::Str("mirror_refresh".to_string())),
+            ("n", Json::Num(n as f64)),
+            ("from_f64_s", Json::Num(r_new.mean_s)),
+            ("refresh_s", Json::Num(r_refresh.mean_s)),
+            ("refresh_speedup", Json::Num(speedup)),
+        ]));
+        all.push(r_new);
+        all.push(r_refresh);
+    }
+    print_table(
+        "Csr32 mirror: from-scratch rebuild vs values-only refresh (per call)",
+        &["system", "from_f64", "refresh", "speedup"],
+        &refresh_rows,
+    );
+
+    write_report("BENCH_mixed_precision", &all, vec![("rows", Json::Arr(jrows))]);
+}

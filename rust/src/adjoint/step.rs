@@ -4,7 +4,7 @@
 
 use super::ops;
 use crate::fvm;
-use crate::linsolve::{bicgstab, cg, Jacobi, SolveOpts};
+use crate::linsolve::{bicgstab, cg, Jacobi, Precision, SolveOpts};
 use crate::mesh::{Mesh, VectorField};
 use crate::piso::{PisoSolver, StepRecord};
 use crate::util::timer;
@@ -160,7 +160,12 @@ pub fn backward_step(
                     &mut lambda,
                     &precond,
                     true,
-                    SolveOpts { tol: solver.cfg.p_opts.tol, max_iter: solver.cfg.p_opts.max_iter, transpose: false },
+                    SolveOpts {
+                        tol: solver.cfg.p_opts.tol,
+                        max_iter: solver.cfg.p_opts.max_iter,
+                        transpose: false,
+                        precision: Precision::F64,
+                    },
                 )
             });
             // rhs was −div ⇒ ∂(div) = −λ ; ∂M = −λ ⊗ p
@@ -229,7 +234,13 @@ pub fn backward_step(
                     &du.comp[comp],
                     &mut lambda,
                     &precond,
-                    SolveOpts { tol: solver.cfg.adv_opts.tol, max_iter: solver.cfg.adv_opts.max_iter, transpose: true },
+                    false,
+                    SolveOpts {
+                        tol: solver.cfg.adv_opts.tol,
+                        max_iter: solver.cfg.adv_opts.max_iter,
+                        transpose: true,
+                        precision: Precision::F64,
+                    },
                 )
             });
             // ∂rhs_pred = λ ; ∂C = −λ ⊗ u*

@@ -28,6 +28,7 @@
 //! states).
 
 use crate::adjoint::{GradientPaths, RolloutGrads, Tape, TapeStrategy};
+use crate::linsolve::Precision;
 use crate::mesh::{gen, Mesh, VectorField};
 use crate::par::ExecCtx;
 use crate::piso::{PisoConfig, PisoSolver, State, StepStats};
@@ -425,13 +426,14 @@ pub struct BatchResult {
 pub struct BatchRunner {
     pub steps: usize,
     ctx: ExecCtx,
+    precision: Precision,
 }
 
 impl BatchRunner {
     /// Runner advancing each scenario by `steps` steps on a pool sized by
     /// `PICT_THREADS` (read now, not from a process-wide cache).
     pub fn new(steps: usize) -> BatchRunner {
-        BatchRunner { steps, ctx: ExecCtx::from_env() }
+        BatchRunner { steps, ctx: ExecCtx::from_env(), precision: Precision::F64 }
     }
 
     /// Use a pool of exactly `threads` workers.
@@ -443,6 +445,16 @@ impl BatchRunner {
     /// Share an existing pool (e.g. with other runners or solvers).
     pub fn with_ctx(mut self, ctx: ExecCtx) -> BatchRunner {
         self.ctx = ctx;
+        self
+    }
+
+    /// Krylov storage precision for *forward* batches ([`BatchRunner::run`]
+    /// / [`BatchRunner::advance`]): `Mixed` overrides every scenario's
+    /// solver config so the hot path runs f32-storage iterative refinement.
+    /// Gradient batches ([`BatchRunner::run_gradients`]) ignore this — the
+    /// training/adjoint path always solves in f64.
+    pub fn with_precision(mut self, precision: Precision) -> BatchRunner {
+        self.precision = precision;
         self
     }
 
@@ -489,6 +501,9 @@ impl BatchRunner {
             let t0 = Instant::now();
             let mut run = make(i);
             run.solver.ctx = self.ctx.clone();
+            if self.precision.is_mixed() {
+                run.solver.cfg.precision = Precision::Mixed;
+            }
             let mut adv_iters = 0;
             let mut p_iters = 0;
             let mut adv_residual = 0.0f64;

@@ -106,6 +106,17 @@ pub fn assemble_c(
 /// only; Neumann faces contribute nothing here (handled on the diagonal).
 pub fn boundary_flux_rhs(mesh: &Mesh, nu: &[f64]) -> VectorField {
     let mut out = VectorField::zeros(mesh.ncells);
+    boundary_flux_rhs_into(mesh, nu, &mut out);
+    out
+}
+
+/// In-place variant of [`boundary_flux_rhs`] for callers that reuse a
+/// step-persistent scratch field (`out` is zeroed first).
+pub fn boundary_flux_rhs_into(mesh: &Mesh, nu: &[f64], out: &mut VectorField) {
+    for comp in out.comp.iter_mut() {
+        debug_assert_eq!(comp.len(), mesh.ncells);
+        comp.iter_mut().for_each(|v| *v = 0.0);
+    }
     for cell in 0..mesh.ncells {
         let inv_j = 1.0 / mesh.jac[cell];
         for face in 0..2 * mesh.dim {
@@ -121,7 +132,6 @@ pub fn boundary_flux_rhs(mesh: &Mesh, nu: &[f64]) -> VectorField {
             }
         }
     }
-    out
 }
 
 #[cfg(test)]

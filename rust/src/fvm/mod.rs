@@ -18,7 +18,10 @@ pub mod assemble;
 pub mod nonorth;
 pub mod pressure;
 
-pub use assemble::{assemble_c, boundary_flux_rhs, c_structure, contravariant, contravariant_bc};
+pub use assemble::{
+    assemble_c, boundary_flux_rhs, boundary_flux_rhs_into, c_structure, contravariant,
+    contravariant_bc,
+};
 pub use nonorth::cross_diffusion;
 pub use pressure::{
     assemble_pressure, divergence_h, h_field, pressure_gradient, pressure_structure,

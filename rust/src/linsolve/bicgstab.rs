@@ -2,6 +2,7 @@
 //! (paper Appendix A.6: BiCGStab + optional ILU(0), enabled case-by-case for
 //! strongly graded meshes).
 
+use super::cg::remove_mean;
 use super::precond::Preconditioner;
 use super::{debug_check_finite, SolveOpts, SolveStats};
 use crate::par::ExecCtx;
@@ -10,12 +11,16 @@ use crate::sparse::Csr;
 /// Solve A x = b (or Aᵀ x = b) with right-preconditioned BiCGStab.
 /// `x` holds the initial guess on entry and the solution on exit. Every
 /// kernel (SpMV, BLAS-1, preconditioner apply) runs pool-resident on `ctx`.
+/// `project_nullspace` deflates the constant vector exactly as `cg` does
+/// (mean-free RHS, iterates, and matvec outputs), so all-Neumann pressure
+/// systems can be driven through either solver without special-casing.
 pub fn bicgstab(
     ctx: &ExecCtx,
     a: &Csr,
     b: &[f64],
     x: &mut [f64],
     precond: &dyn Preconditioner,
+    project_nullspace: bool,
     opts: SolveOpts,
 ) -> SolveStats {
     let n = a.n;
@@ -32,15 +37,24 @@ pub fn bicgstab(
     let norm2 = |a: &[f64]| ctx.norm2(a);
     let axpy = |alpha: f64, x: &[f64], y: &mut [f64]| ctx.axpy(alpha, x, y);
 
+    let mut b = b.to_vec();
+    if project_nullspace {
+        remove_mean(&mut b);
+        remove_mean(x);
+    }
+
     let mut r = vec![0.0; n];
     apply(x, &mut r);
     for i in 0..n {
         r[i] = b[i] - r[i];
     }
+    if project_nullspace {
+        remove_mean(&mut r);
+    }
     let r0 = r.clone();
-    let bnorm = norm2(b).max(1e-300);
+    let bnorm = norm2(&b).max(1e-300);
     let mut res = norm2(&r) / bnorm;
-    debug_check_finite("bicgstab", "rhs b", 0, res, b);
+    debug_check_finite("bicgstab", "rhs b", 0, res, &b);
     debug_check_finite("bicgstab", "residual r", 0, res, &r);
     if res < opts.tol {
         return SolveStats { iterations: 0, residual: res, converged: true };
@@ -67,6 +81,9 @@ pub fn bicgstab(
         }
         precond.apply(ctx, &p, &mut phat);
         apply(&phat, &mut v);
+        if project_nullspace {
+            remove_mean(&mut v);
+        }
         let r0v = dot(&r0, &v);
         if r0v.abs() < 1e-300 {
             return SolveStats { iterations: it, residual: res, converged: false };
@@ -78,10 +95,16 @@ pub fn bicgstab(
         debug_check_finite("bicgstab", "intermediate residual s", it, res, &r);
         if res < opts.tol {
             axpy(alpha, &phat, x);
+            if project_nullspace {
+                remove_mean(x);
+            }
             return SolveStats { iterations: it, residual: res, converged: true };
         }
         precond.apply(ctx, &r, &mut shat);
         apply(&shat, &mut t);
+        if project_nullspace {
+            remove_mean(&mut t);
+        }
         let tt = dot(&t, &t);
         if tt.abs() < 1e-300 {
             axpy(alpha, &phat, x);
@@ -94,6 +117,9 @@ pub fn bicgstab(
         res = norm2(&r) / bnorm;
         debug_check_finite("bicgstab", "residual r", it, res, &r);
         if res < opts.tol {
+            if project_nullspace {
+                remove_mean(x);
+            }
             return SolveStats { iterations: it, residual: res, converged: true };
         }
         if omega.abs() < 1e-300 {
@@ -118,7 +144,8 @@ mod tests {
         let mut b = vec![0.0; 60];
         a.matvec(&xs, &mut b);
         let mut x = vec![0.0; 60];
-        let st = bicgstab(&ExecCtx::serial(), &a, &b, &mut x, &Identity, SolveOpts::default());
+        let st =
+            bicgstab(&ExecCtx::serial(), &a, &b, &mut x, &Identity, false, SolveOpts::default());
         assert!(st.converged);
         for (u, v) in x.iter().zip(&xs) {
             assert!((u - v).abs() < 1e-6, "{u} vs {v}");
@@ -140,12 +167,40 @@ mod tests {
             &b,
             &mut x,
             &Identity,
+            false,
             SolveOpts { transpose: true, ..Default::default() },
         );
         assert!(st.converged);
         for (u, v) in x.iter().zip(&xs) {
             assert!((u - v).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn nullspace_projection_handles_singular_system() {
+        // periodic Laplacian: singular, constant nullspace — the same
+        // deflation cg applies must let BiCGStab solve it too
+        let n = 32;
+        let mut trip = Vec::new();
+        for i in 0..n {
+            trip.push((i, i, 2.0));
+            trip.push((i, (i + 1) % n, -1.0));
+            trip.push((i, (i + n - 1) % n, -1.0));
+        }
+        let a = crate::sparse::Csr::from_triplets(n, &trip);
+        // consistent RHS (mean zero)
+        let mut b: Vec<f64> = (0..n)
+            .map(|i| (2.0 * std::f64::consts::PI * i as f64 / n as f64).sin())
+            .collect();
+        let mean = b.iter().sum::<f64>() / n as f64;
+        b.iter_mut().for_each(|v| *v -= mean);
+        let mut x = vec![0.0; n];
+        let st =
+            bicgstab(&ExecCtx::serial(), &a, &b, &mut x, &Identity, true, SolveOpts::default());
+        assert!(st.converged, "residual {}", st.residual);
+        assert!(a.residual_norm(&x, &b) < 1e-8);
+        // solution is mean-free
+        assert!(x.iter().sum::<f64>().abs() / (n as f64) < 1e-10);
     }
 
     #[test]
@@ -168,8 +223,8 @@ mod tests {
         let mut x1 = vec![0.0; n];
         let mut x2 = vec![0.0; n];
         let ctx = ExecCtx::serial();
-        let st_j = bicgstab(&ctx, &a, &b, &mut x1, &Jacobi::new(&a), SolveOpts::default());
-        let st_ilu = bicgstab(&ctx, &a, &b, &mut x2, &Ilu0::new(&a), SolveOpts::default());
+        let st_j = bicgstab(&ctx, &a, &b, &mut x1, &Jacobi::new(&a), false, SolveOpts::default());
+        let st_ilu = bicgstab(&ctx, &a, &b, &mut x2, &Ilu0::new(&a), false, SolveOpts::default());
         assert!(st_ilu.converged);
         assert!(
             st_ilu.iterations <= st_j.iterations,
@@ -189,7 +244,7 @@ mod tests {
         let mut b = rng.normal_vec(12);
         b[7] = f64::INFINITY;
         let mut x = vec![0.0; 12];
-        bicgstab(&ExecCtx::serial(), &a, &b, &mut x, &Identity, SolveOpts::default());
+        bicgstab(&ExecCtx::serial(), &a, &b, &mut x, &Identity, false, SolveOpts::default());
     }
 
     #[test]
@@ -202,7 +257,7 @@ mod tests {
             a.matvec(&xs, &mut b);
             let mut x = vec![0.0; n];
             let ctx = ExecCtx::serial();
-            let st = bicgstab(&ctx, &a, &b, &mut x, &Jacobi::new(&a), SolveOpts::default());
+            let st = bicgstab(&ctx, &a, &b, &mut x, &Jacobi::new(&a), false, SolveOpts::default());
             if !st.converged {
                 return Err(format!("n={n} res={}", st.residual));
             }

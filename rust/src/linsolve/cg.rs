@@ -10,7 +10,9 @@ use super::{debug_check_finite, SolveOpts, SolveStats};
 use crate::par::ExecCtx;
 use crate::sparse::Csr;
 
-fn remove_mean(v: &mut [f64]) {
+/// Project out the constant-vector nullspace component (shared with
+/// `bicgstab` and the mixed-precision refinement wrappers).
+pub(crate) fn remove_mean(v: &mut [f64]) {
     let mean = crate::util::det::mean(v);
     v.iter_mut().for_each(|x| *x -= mean);
 }

@@ -8,10 +8,12 @@
 pub mod bicgstab;
 pub mod cg;
 pub mod precond;
+pub mod refine;
 
 pub use bicgstab::bicgstab;
 pub use cg::cg;
 pub use precond::{Ilu0, Jacobi, Preconditioner};
+pub use refine::{refined_bicgstab, refined_cg};
 
 /// Outcome of an iterative solve.
 #[derive(Clone, Debug)]
@@ -21,6 +23,32 @@ pub struct SolveStats {
     pub converged: bool,
 }
 
+/// Numeric precision of the Krylov hot path (see [`refine`]).
+///
+/// Determinism is bit-for-bit *per (thread-width, precision) config*: for a
+/// fixed width, `F64` and `Mixed` are each reproducible run to run, but they
+/// are different arithmetic and do not match each other bitwise — both
+/// converge to the same [`SolveOpts::tol`] on the true f64 residual.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f64 storage end to end (the default; the adjoint always runs
+    /// here so gradcheck tolerances are untouched).
+    #[default]
+    F64,
+    /// f32-storage/f64-accumulation inner solves wrapped in iterative
+    /// refinement; the outer loop re-checks the true f64 residual and falls
+    /// back to the f64 solver on stagnation, so convergence to `tol` is
+    /// guaranteed either way.
+    Mixed,
+}
+
+impl Precision {
+    #[inline]
+    pub fn is_mixed(self) -> bool {
+        self == Precision::Mixed
+    }
+}
+
 /// Solver configuration shared by CG / BiCGStab.
 #[derive(Clone, Copy, Debug)]
 pub struct SolveOpts {
@@ -28,11 +56,16 @@ pub struct SolveOpts {
     pub max_iter: usize,
     /// Solve with Aᵀ instead of A (adjoint mode).
     pub transpose: bool,
+    /// Storage precision of the Krylov inner loop. `cg`/`bicgstab`
+    /// themselves always run f64; callers holding a
+    /// [`Csr32`](crate::sparse::Csr32) mirror honor this by dispatching to
+    /// the [`refine`] wrappers instead (see `piso::PisoSolver::step`).
+    pub precision: Precision,
 }
 
 impl Default for SolveOpts {
     fn default() -> Self {
-        SolveOpts { tol: 1e-10, max_iter: 2000, transpose: false }
+        SolveOpts { tol: 1e-10, max_iter: 2000, transpose: false, precision: Precision::F64 }
     }
 }
 

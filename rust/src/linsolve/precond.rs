@@ -15,10 +15,18 @@
 
 use crate::par::{DisjointMut, ExecCtx, MIN_LEVEL_ROWS_PER_THREAD, MIN_VEC_PER_THREAD};
 use crate::sparse::Csr;
+use crate::util::det;
 
 pub trait Preconditioner {
     /// z = M⁻¹ r, running on `ctx`'s pool.
     fn apply(&self, ctx: &ExecCtx, r: &[f64], z: &mut [f64]);
+
+    /// f32-storage variant of [`Preconditioner::apply`] for the
+    /// mixed-precision inner solves in [`crate::linsolve::refine`]: same
+    /// factors, f32 operand storage, per-element/per-row arithmetic in f64
+    /// narrowed once on write. Deterministic under the same contract as
+    /// `apply` (per thread-width, per precision).
+    fn apply32(&self, ctx: &ExecCtx, r: &[f32], z: &mut [f32]);
 }
 
 /// No-op preconditioner.
@@ -28,21 +36,38 @@ impl Preconditioner for Identity {
     fn apply(&self, _ctx: &ExecCtx, r: &[f64], z: &mut [f64]) {
         z.copy_from_slice(r);
     }
+
+    fn apply32(&self, _ctx: &ExecCtx, r: &[f32], z: &mut [f32]) {
+        z.copy_from_slice(r);
+    }
 }
 
-/// Diagonal (Jacobi) preconditioner.
+/// Diagonal (Jacobi) preconditioner. Owns both an f64 inverse diagonal and
+/// its f32 mirror so one factorization serves both solve precisions; both
+/// refresh in place via [`Jacobi::refresh`] when the matrix values change
+/// (the structure — and therefore the diagonal positions — is fixed).
 pub struct Jacobi {
     inv_diag: Vec<f64>,
+    inv_diag32: Vec<f32>,
 }
 
 impl Jacobi {
     pub fn new(a: &Csr) -> Jacobi {
-        Jacobi {
-            inv_diag: a
-                .diagonal()
-                .iter()
-                .map(|d| if d.abs() > 1e-300 { 1.0 / d } else { 1.0 })
-                .collect(),
+        let mut j = Jacobi { inv_diag: vec![0.0; a.n], inv_diag32: vec![0.0; a.n] };
+        j.refresh(a);
+        j
+    }
+
+    /// Numeric-only refresh from (the same-structured) `a`: rewrites both
+    /// precision mirrors in place so steppers can reuse one allocation
+    /// across steps.
+    pub fn refresh(&mut self, a: &Csr) {
+        assert_eq!(self.inv_diag.len(), a.n, "Jacobi::refresh: dimension changed since new");
+        for r in 0..a.n {
+            let d = a.find(r, r).map(|k| a.vals[k]).unwrap_or(0.0);
+            let inv = if d.abs() > 1e-300 { 1.0 / d } else { 1.0 };
+            self.inv_diag[r] = inv;
+            self.inv_diag32[r] = det::narrow_f32(inv);
         }
     }
 }
@@ -59,6 +84,21 @@ impl Preconditioner for Jacobi {
             for (off, zi) in chunk.iter_mut().enumerate() {
                 let i = range.start + off;
                 *zi = r[i] * inv_diag[i];
+            }
+        });
+    }
+
+    fn apply32(&self, ctx: &ExecCtx, r: &[f32], z: &mut [f32]) {
+        assert_eq!(r.len(), self.inv_diag32.len());
+        assert_eq!(z.len(), self.inv_diag32.len());
+        let inv_diag32 = &self.inv_diag32;
+        let zs = DisjointMut::new(z);
+        ctx.run_chunks(r.len(), MIN_VEC_PER_THREAD, |_, range| {
+            // SAFETY: chunk ranges are disjoint
+            let chunk = unsafe { zs.range(range.clone()) };
+            for (off, zi) in chunk.iter_mut().enumerate() {
+                let i = range.start + off;
+                *zi = det::narrow_f32(f64::from(r[i]) * f64::from(inv_diag32[i]));
             }
         });
     }
@@ -140,9 +180,48 @@ pub struct Ilu0 {
     /// combined LU values: strictly-lower = L (unit diagonal implied),
     /// diagonal + upper = U
     lu: Vec<f64>,
+    /// f32 mirror of `lu` for the mixed-precision applies; renarrowed by
+    /// [`Ilu0::refactor`] whenever `lu` is.
+    lu32: Vec<f32>,
     diag_ptr: Vec<usize>,
     l_sched: LevelSchedule,
     u_sched: LevelSchedule,
+}
+
+/// The IKJ ILU(0) numeric factorization restricted to the pattern, over
+/// values already copied into `lu`. Split out of [`Ilu0::new`] so
+/// [`Ilu0::refactor`] can rerun it against a persistent symbolic structure
+/// without reallocating or rebuilding the level schedules.
+fn factorize_in_place(
+    n: usize,
+    row_ptr: &[usize],
+    col_idx: &[u32],
+    diag_ptr: &[usize],
+    lu: &mut [f64],
+) {
+    for i in 1..n {
+        let (lo, hi) = (row_ptr[i], row_ptr[i + 1]);
+        for kk in lo..hi {
+            let k = col_idx[kk] as usize;
+            if k >= i {
+                break;
+            }
+            let pivot = lu[diag_ptr[k]];
+            if pivot.abs() < 1e-300 {
+                continue;
+            }
+            let lik = lu[kk] / pivot;
+            lu[kk] = lik;
+            // subtract lik * U(k, j) for j > k present in row i
+            for jj in (diag_ptr[k] + 1)..row_ptr[k + 1] {
+                let j = col_idx[jj];
+                // find (i, j) in row i via binary search
+                if let Ok(pos) = col_idx[lo..hi].binary_search(&j) {
+                    lu[lo + pos] -= lik * lu[jj];
+                }
+            }
+        }
+    }
 }
 
 impl Ilu0 {
@@ -161,29 +240,10 @@ impl Ilu0 {
             }
             assert!(diag_ptr[r] != usize::MAX, "ILU0 requires full diagonal (row {r})");
         }
-        // IKJ factorization restricted to the pattern
-        for i in 1..n {
-            let (lo, hi) = (row_ptr[i], row_ptr[i + 1]);
-            for kk in lo..hi {
-                let k = col_idx[kk] as usize;
-                if k >= i {
-                    break;
-                }
-                let pivot = lu[diag_ptr[k]];
-                if pivot.abs() < 1e-300 {
-                    continue;
-                }
-                let lik = lu[kk] / pivot;
-                lu[kk] = lik;
-                // subtract lik * U(k, j) for j > k present in row i
-                for jj in (diag_ptr[k] + 1)..row_ptr[k + 1] {
-                    let j = col_idx[jj];
-                    // find (i, j) in row i via binary search
-                    if let Ok(pos) = col_idx[lo..hi].binary_search(&j) {
-                        lu[lo + pos] -= lik * lu[jj];
-                    }
-                }
-            }
+        factorize_in_place(n, &row_ptr, &col_idx, &diag_ptr, &mut lu);
+        let mut lu32 = vec![0.0f32; lu.len()];
+        for (dst, src) in lu32.iter_mut().zip(&lu) {
+            *dst = det::narrow_f32(*src);
         }
         // level sets: L rows depend on their strictly-lower entries, U rows
         // on their strictly-upper entries
@@ -195,7 +255,25 @@ impl Ilu0 {
             |i| diag_ptr[i] + 1..row_ptr[i + 1],
             &col_idx,
         );
-        Ilu0 { n, row_ptr, col_idx, lu, diag_ptr, l_sched, u_sched }
+        Ilu0 { n, row_ptr, col_idx, lu, lu32, diag_ptr, l_sched, u_sched }
+    }
+
+    /// Numeric-only refactorization from (the same-structured) `a`: copies
+    /// the fresh values into the persistent `lu` buffer, reruns the IKJ
+    /// elimination, and renarrows the f32 mirror. The symbolic structure,
+    /// diagonal pointers, and level schedules are all functions of the
+    /// sparsity pattern alone, so they carry over untouched — this is the
+    /// cross-step path that replaces a per-step [`Ilu0::new`].
+    pub fn refactor(&mut self, a: &Csr) {
+        assert_eq!(self.n, a.n, "Ilu0::refactor: dimension changed since new");
+        assert_eq!(self.lu.len(), a.vals.len(), "Ilu0::refactor: nnz changed since new");
+        debug_assert_eq!(self.row_ptr, a.row_ptr);
+        debug_assert_eq!(self.col_idx, a.col_idx);
+        self.lu.copy_from_slice(&a.vals);
+        factorize_in_place(self.n, &self.row_ptr, &self.col_idx, &self.diag_ptr, &mut self.lu);
+        for (dst, src) in self.lu32.iter_mut().zip(&self.lu) {
+            *dst = det::narrow_f32(*src);
+        }
     }
 
     /// Longest dependency chains of the two factors (diagnostic: parallel
@@ -277,11 +355,89 @@ impl Ilu0 {
             }
         }
     }
+
+    /// f32 twin of [`Ilu0::apply_min_rows`]: the same level-scheduled
+    /// sweeps over the `lu32` mirror, accumulating each row in f64 and
+    /// narrowing once on write, with the same independent serial fallback
+    /// per factor — bit-for-bit equal to its own serial sweep at any width.
+    pub fn apply32_min_rows(&self, ctx: &ExecCtx, r: &[f32], z: &mut [f32], min_rows: usize) {
+        assert_eq!(r.len(), self.n);
+        assert_eq!(z.len(), self.n);
+        let (row_ptr, col_idx, lu32, diag_ptr) =
+            (&self.row_ptr, &self.col_idx, &self.lu32, &self.diag_ptr);
+        let width = ctx.width();
+        // forward solve L y = r (unit diagonal), y stored in z
+        if width <= 1 || self.l_sched.max_rows < 2 * min_rows {
+            for i in 0..self.n {
+                let mut acc = f64::from(r[i]);
+                for k in row_ptr[i]..diag_ptr[i] {
+                    acc -= f64::from(lu32[k]) * f64::from(z[col_idx[k] as usize]);
+                }
+                z[i] = det::narrow_f32(acc);
+            }
+        } else {
+            let zs = DisjointMut::new(z);
+            for l in 0..self.l_sched.n_levels() {
+                let rows = self.l_sched.level(l);
+                ctx.run_chunks(rows.len(), min_rows, |_, range| {
+                    for &i in &rows[range] {
+                        let i = i as usize;
+                        let mut acc = f64::from(r[i]);
+                        for k in row_ptr[i]..diag_ptr[i] {
+                            // SAFETY: reads are of rows in earlier levels,
+                            // already finalized; no task in this level
+                            // writes them
+                            acc -= f64::from(lu32[k])
+                                * f64::from(unsafe { zs.get(col_idx[k] as usize) });
+                        }
+                        // SAFETY: each row is written by exactly one task
+                        unsafe { zs.set(i, det::narrow_f32(acc)) };
+                    }
+                });
+            }
+        }
+        // backward solve U z = y
+        if width <= 1 || self.u_sched.max_rows < 2 * min_rows {
+            for i in (0..self.n).rev() {
+                let mut acc = f64::from(z[i]);
+                for k in (diag_ptr[i] + 1)..row_ptr[i + 1] {
+                    acc -= f64::from(lu32[k]) * f64::from(z[col_idx[k] as usize]);
+                }
+                let d = f64::from(lu32[diag_ptr[i]]);
+                z[i] = det::narrow_f32(if d.abs() > 1e-300 { acc / d } else { acc });
+            }
+        } else {
+            let zs = DisjointMut::new(z);
+            for l in 0..self.u_sched.n_levels() {
+                let rows = self.u_sched.level(l);
+                ctx.run_chunks(rows.len(), min_rows, |_, range| {
+                    for &i in &rows[range] {
+                        let i = i as usize;
+                        // SAFETY: same disjointness argument as the L sweep
+                        let mut acc = f64::from(unsafe { zs.get(i) });
+                        for k in (diag_ptr[i] + 1)..row_ptr[i + 1] {
+                            // SAFETY: reads rows in earlier levels only
+                            acc -= f64::from(lu32[k])
+                                * f64::from(unsafe { zs.get(col_idx[k] as usize) });
+                        }
+                        let d = f64::from(lu32[diag_ptr[i]]);
+                        let zi = det::narrow_f32(if d.abs() > 1e-300 { acc / d } else { acc });
+                        // SAFETY: each row is written by exactly one task
+                        unsafe { zs.set(i, zi) };
+                    }
+                });
+            }
+        }
+    }
 }
 
 impl Preconditioner for Ilu0 {
     fn apply(&self, ctx: &ExecCtx, r: &[f64], z: &mut [f64]) {
         self.apply_min_rows(ctx, r, z, MIN_LEVEL_ROWS_PER_THREAD);
+    }
+
+    fn apply32(&self, ctx: &ExecCtx, r: &[f32], z: &mut [f32]) {
+        self.apply32_min_rows(ctx, r, z, MIN_LEVEL_ROWS_PER_THREAD);
     }
 }
 
@@ -400,6 +556,109 @@ mod tests {
         let ctx = ExecCtx::with_threads(2);
         let mut z_par = vec![0.0; n];
         ilu.apply_min_rows(&ctx, &r, &mut z_par, 1);
+        assert_eq!(z_serial, z_par);
+    }
+
+    fn grid_matrix(nx: usize) -> Csr {
+        let n = nx * nx;
+        let mut trip = Vec::new();
+        for j in 0..nx {
+            for i in 0..nx {
+                let c = j * nx + i;
+                trip.push((c, c, 4.0 + 0.1 * (c % 5) as f64));
+                if i > 0 {
+                    trip.push((c, c - 1, -1.0));
+                }
+                if i + 1 < nx {
+                    trip.push((c, c + 1, -1.0));
+                }
+                if j > 0 {
+                    trip.push((c, c - nx, -1.3));
+                }
+                if j + 1 < nx {
+                    trip.push((c, c + nx, -0.7));
+                }
+            }
+        }
+        crate::sparse::Csr::from_triplets(n, &trip)
+    }
+
+    #[test]
+    fn ilu0_refactor_matches_fresh_factorization() {
+        let mut a = grid_matrix(6);
+        let mut ilu = Ilu0::new(&a);
+        for (k, v) in a.vals.iter_mut().enumerate() {
+            *v *= 1.0 + 0.01 * (k % 7) as f64;
+        }
+        ilu.refactor(&a);
+        let fresh = Ilu0::new(&a);
+        assert_eq!(ilu.lu, fresh.lu); // same elimination, bit-for-bit
+        assert_eq!(ilu.lu32, fresh.lu32);
+    }
+
+    #[test]
+    fn jacobi_refresh_tracks_value_updates() {
+        let mut a = grid_matrix(4);
+        let mut j = Jacobi::new(&a);
+        for v in a.vals.iter_mut() {
+            *v *= 2.0;
+        }
+        j.refresh(&a);
+        let fresh = Jacobi::new(&a);
+        assert_eq!(j.inv_diag, fresh.inv_diag);
+        assert_eq!(j.inv_diag32, fresh.inv_diag32);
+    }
+
+    #[test]
+    fn apply32_tracks_f64_apply_within_rounding() {
+        let a = grid_matrix(8);
+        let n = a.n;
+        let ctx = ExecCtx::serial();
+        let r: Vec<f64> = (0..n).map(|i| ((i * 13 % 29) as f64) * 0.1 - 1.0).collect();
+        let r32: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+        for p in [&Ilu0::new(&a) as &dyn Preconditioner, &Jacobi::new(&a), &Identity] {
+            let mut z = vec![0.0f64; n];
+            let mut z32 = vec![0.0f32; n];
+            p.apply(&ctx, &r, &mut z);
+            p.apply32(&ctx, &r32, &mut z32);
+            for i in 0..n {
+                assert!(
+                    (f64::from(z32[i]) - z[i]).abs() < 1e-5 * (1.0 + z[i].abs()),
+                    "i={i}: {} vs {}",
+                    z32[i],
+                    z[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn level_scheduled_apply32_is_bit_for_bit_serial() {
+        let a = grid_matrix(8);
+        let n = a.n;
+        let ilu = Ilu0::new(&a);
+        let r32: Vec<f32> = (0..n).map(|i| ((i * 31 % 17) as f32) * 0.3 - 2.0).collect();
+        let mut z_serial = vec![0.0f32; n];
+        ilu.apply32_min_rows(&ExecCtx::serial(), &r32, &mut z_serial, 1);
+        let ctx = ExecCtx::with_threads(4);
+        let mut z_par = vec![0.0f32; n];
+        ilu.apply32_min_rows(&ctx, &r32, &mut z_par, 1);
+        assert_eq!(z_serial, z_par);
+    }
+
+    #[test]
+    fn miri_level_sweep32_disjoint_writes_are_sound() {
+        // Fast Miri target for the f32 DisjointMut get/set sweeps, the
+        // mirror of miri_level_sweep_disjoint_writes_are_sound.
+        let a = grid_matrix(3);
+        let n = a.n;
+        let ilu = Ilu0::new(&a);
+        let r32: Vec<f32> = (0..n).map(|i| ((i * 31 % 17) as f32) * 0.3 - 2.0).collect();
+        let mut z_serial = vec![0.0f32; n];
+        ilu.apply32_min_rows(&ExecCtx::serial(), &r32, &mut z_serial, 1);
+        let ctx = ExecCtx::with_threads(2);
+        let mut z_par = vec![0.0f32; n];
+        ilu.apply32_min_rows(&ctx, &r32, &mut z_par, 1);
         assert_eq!(z_serial, z_par);
     }
 

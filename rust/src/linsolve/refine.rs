@@ -1,0 +1,504 @@
+//! Mixed-precision iterative refinement around the Krylov solvers.
+//!
+//! The classic scheme (Wilkinson refinement, here with Krylov inner
+//! solves): keep the iterate `x` and the true residual `r = b - A x` in
+//! f64, but solve each *correction* system `A d = r` in f32 storage over a
+//! [`Csr32`] mirror — SpMV and BLAS-1 memory traffic halve, which is where
+//! PISO's pressure/advection solves spend their time. Every accumulation
+//! inside the f32 inner solve still runs in f64
+//! ([`ExecCtx::matvec32`]/[`ExecCtx::dot32`]), the correction is rescaled
+//! to unit norm so f32's exponent range never clips it, and each outer
+//! cycle re-checks the true f64 residual against [`SolveOpts::tol`].
+//!
+//! Convergence is guaranteed on the same terms as a pure f64 solve: if the
+//! outer loop stagnates (f32 inner solves stop reducing the true residual)
+//! the driver falls back to the corresponding f64 solver with the full
+//! iteration budget, warm-started from the current iterate. Adjoint solves
+//! (`opts.transpose`) route straight to f64 — gradcheck tolerances are
+//! untouched by the precision knob.
+//!
+//! Determinism: the inner kernels reuse the pool's deterministic row/chunk
+//! partitioning, so a mixed solve is bit-for-bit reproducible per
+//! (thread-width, precision) config — the contract tested at
+//! `PICT_THREADS=1/4` in `tests/mixed.rs`.
+//!
+//! This file (with `sparse/csr32.rs`) is the blessed precision boundary:
+//! the only non-test code in `sparse/`/`linsolve/` where the analyze pass
+//! permits f32↔f64 `as` casts.
+
+use super::cg::remove_mean;
+use super::precond::Preconditioner;
+use super::{bicgstab, cg, Precision, SolveOpts, SolveStats};
+use crate::par::ExecCtx;
+use crate::sparse::{Csr, Csr32};
+
+/// Relative residual reduction each f32 inner solve is asked for. Much
+/// below ~1e-5 the f32 storage cannot resolve further progress; 1e-4 keeps
+/// inner iteration counts low and lets the outer loop do the tightening.
+const INNER_TOL: f64 = 1e-4;
+/// Outer refinement cycles before the f64 fallback takes over regardless.
+const MAX_OUTER: usize = 40;
+/// Minimum per-cycle reduction of the true residual; a cycle achieving
+/// less counts as stagnant (f32 floor reached, or the system is too ill
+/// conditioned for single-precision corrections).
+const MIN_REDUCTION: f64 = 0.5;
+/// Consecutive stagnant cycles tolerated before falling back to f64.
+const MAX_STAGNANT: usize = 2;
+
+/// Mixed-precision CG: f32-storage inner CG over `a32` wrapped in f64
+/// iterative refinement on `a`. Same contract as [`cg`] (including
+/// `project_nullspace` deflation); `a32` must be the current-values mirror
+/// of `a` (see [`Csr32::refresh`]).
+#[allow(clippy::too_many_arguments)]
+pub fn refined_cg(
+    ctx: &ExecCtx,
+    a: &Csr,
+    a32: &Csr32,
+    b: &[f64],
+    x: &mut [f64],
+    precond: &dyn Preconditioner,
+    project_nullspace: bool,
+    opts: SolveOpts,
+) -> SolveStats {
+    refined(ctx, a, a32, b, x, precond, project_nullspace, opts, true)
+}
+
+/// Mixed-precision BiCGStab: f32-storage inner BiCGStab over `a32` wrapped
+/// in f64 iterative refinement on `a`. Same contract as [`bicgstab`].
+#[allow(clippy::too_many_arguments)]
+pub fn refined_bicgstab(
+    ctx: &ExecCtx,
+    a: &Csr,
+    a32: &Csr32,
+    b: &[f64],
+    x: &mut [f64],
+    precond: &dyn Preconditioner,
+    project_nullspace: bool,
+    opts: SolveOpts,
+) -> SolveStats {
+    refined(ctx, a, a32, b, x, precond, project_nullspace, opts, false)
+}
+
+/// r = b - A x in f64, mean-deflated if requested; returns ‖r‖₂ / bnorm.
+fn true_residual(
+    ctx: &ExecCtx,
+    a: &Csr,
+    b: &[f64],
+    x: &[f64],
+    r: &mut [f64],
+    project_nullspace: bool,
+    bnorm: f64,
+) -> f64 {
+    ctx.matvec(a, x, r);
+    for (ri, bi) in r.iter_mut().zip(b) {
+        *ri = bi - *ri;
+    }
+    if project_nullspace {
+        remove_mean(r);
+    }
+    ctx.norm2(r) / bnorm
+}
+
+#[allow(clippy::too_many_arguments)]
+fn refined(
+    ctx: &ExecCtx,
+    a: &Csr,
+    a32: &Csr32,
+    b: &[f64],
+    x: &mut [f64],
+    precond: &dyn Preconditioner,
+    project_nullspace: bool,
+    opts: SolveOpts,
+    use_cg: bool,
+) -> SolveStats {
+    // adjoint solves stay f64 by contract (see module docs)
+    if opts.transpose {
+        return if use_cg {
+            cg(ctx, a, b, x, precond, project_nullspace, opts)
+        } else {
+            bicgstab(ctx, a, b, x, precond, project_nullspace, opts)
+        };
+    }
+    let n = a.n;
+    assert_eq!(a32.n, n, "refine: Csr32 mirror dimension must match the f64 matrix");
+    assert_eq!(a32.nnz(), a.nnz(), "refine: Csr32 mirror structure must match the f64 matrix");
+
+    let mut b = b.to_vec();
+    if project_nullspace {
+        remove_mean(&mut b);
+        remove_mean(x);
+    }
+    let bnorm = ctx.norm2(&b).max(1e-300);
+    let mut r = vec![0.0; n];
+    let mut res = true_residual(ctx, a, &b, x, &mut r, project_nullspace, bnorm);
+    if res < opts.tol {
+        return SolveStats { iterations: 0, residual: res, converged: true };
+    }
+
+    let mut r32 = vec![0.0f32; n];
+    let mut d32 = vec![0.0f32; n];
+    let mut total_iters = 0usize;
+    let mut stagnant = 0usize;
+    for _outer in 0..MAX_OUTER {
+        // rescale the correction system to unit RHS norm so the f32 inner
+        // solve works at full mantissa, independent of how small the true
+        // residual has become
+        let rnorm = ctx.norm2(&r).max(1e-300);
+        for (ri32, ri) in r32.iter_mut().zip(&r) {
+            *ri32 = (ri / rnorm) as f32;
+        }
+        d32.iter_mut().for_each(|v| *v = 0.0);
+        let inner_budget = opts.max_iter.saturating_sub(total_iters).max(1);
+        let inner_iters = if use_cg {
+            cg32(ctx, a32, &r32, &mut d32, precond, project_nullspace, INNER_TOL, inner_budget)
+        } else {
+            bicgstab32(
+                ctx,
+                a32,
+                &r32,
+                &mut d32,
+                precond,
+                project_nullspace,
+                INNER_TOL,
+                inner_budget,
+            )
+        };
+        total_iters += inner_iters.max(1);
+        for (xi, di) in x.iter_mut().zip(&d32) {
+            *xi += rnorm * f64::from(*di);
+        }
+        if project_nullspace {
+            remove_mean(x);
+        }
+        let new_res = true_residual(ctx, a, &b, x, &mut r, project_nullspace, bnorm);
+        if new_res < opts.tol {
+            return SolveStats { iterations: total_iters, residual: new_res, converged: true };
+        }
+        stagnant = if new_res > MIN_REDUCTION * res { stagnant + 1 } else { 0 };
+        res = new_res;
+        if stagnant >= MAX_STAGNANT || total_iters >= opts.max_iter {
+            break;
+        }
+    }
+
+    // f64 fallback with the full budget, warm-started from the refined
+    // iterate: mixed precision may only ever add iterations, never lose
+    // the f64 solver's convergence guarantee.
+    let opts64 = SolveOpts { precision: Precision::F64, ..opts };
+    let st = if use_cg {
+        cg(ctx, a, &b, x, precond, project_nullspace, opts64)
+    } else {
+        bicgstab(ctx, a, &b, x, precond, project_nullspace, opts64)
+    };
+    SolveStats {
+        iterations: total_iters + st.iterations,
+        residual: st.residual,
+        converged: st.converged,
+    }
+}
+
+/// Deflate the constant nullspace component in f32 storage (f64-accumulated
+/// mean, elementwise subtraction — deterministic at any width).
+fn remove_mean32(v: &mut [f32]) {
+    if v.is_empty() {
+        return;
+    }
+    let mut acc = 0.0f64;
+    for &x in v.iter() {
+        acc += f64::from(x);
+    }
+    let mean = acc / v.len() as f64;
+    for x in v.iter_mut() {
+        *x = (f64::from(*x) - mean) as f32;
+    }
+}
+
+/// f32-storage preconditioned CG (scalars and reductions in f64); returns
+/// the iteration count. Structure mirrors [`cg`] exactly — see there for
+/// the algorithmic comments.
+#[allow(clippy::too_many_arguments)]
+fn cg32(
+    ctx: &ExecCtx,
+    a: &Csr32,
+    b: &[f32],
+    x: &mut [f32],
+    precond: &dyn Preconditioner,
+    project_nullspace: bool,
+    tol: f64,
+    max_iter: usize,
+) -> usize {
+    let n = a.n;
+    let mut b = b.to_vec();
+    if project_nullspace {
+        remove_mean32(&mut b);
+        remove_mean32(x);
+    }
+    let mut r = vec![0.0f32; n];
+    ctx.matvec32(a, x, &mut r);
+    for (ri, bi) in r.iter_mut().zip(&b) {
+        *ri = bi - *ri;
+    }
+    if project_nullspace {
+        remove_mean32(&mut r);
+    }
+    let bnorm = ctx.norm2_32(&b).max(1e-300);
+    let mut z = vec![0.0f32; n];
+    precond.apply32(ctx, &r, &mut z);
+    let mut p = z.clone();
+    let mut rz = ctx.dot32(&r, &z);
+    let mut ap = vec![0.0f32; n];
+    let mut res = ctx.norm2_32(&r) / bnorm;
+    if res < tol {
+        return 0;
+    }
+    for it in 1..=max_iter {
+        ctx.matvec32(a, &p, &mut ap);
+        if project_nullspace {
+            remove_mean32(&mut ap);
+        }
+        let pap = ctx.dot32(&p, &ap);
+        if pap.abs() < 1e-300 {
+            return it;
+        }
+        let alpha = rz / pap;
+        ctx.axpy32(alpha, &p, x);
+        ctx.axpy32(-alpha, &ap, &mut r);
+        res = ctx.norm2_32(&r) / bnorm;
+        if res < tol {
+            if project_nullspace {
+                remove_mean32(x);
+            }
+            return it;
+        }
+        precond.apply32(ctx, &r, &mut z);
+        let rz_new = ctx.dot32(&r, &z);
+        if rz.abs() < 1e-300 {
+            return it;
+        }
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for (pi, zi) in p.iter_mut().zip(&z) {
+            *pi = (f64::from(*zi) + beta * f64::from(*pi)) as f32;
+        }
+    }
+    max_iter
+}
+
+/// f32-storage right-preconditioned BiCGStab (scalars and reductions in
+/// f64); returns the iteration count. Structure mirrors [`bicgstab`].
+#[allow(clippy::too_many_arguments)]
+fn bicgstab32(
+    ctx: &ExecCtx,
+    a: &Csr32,
+    b: &[f32],
+    x: &mut [f32],
+    precond: &dyn Preconditioner,
+    project_nullspace: bool,
+    tol: f64,
+    max_iter: usize,
+) -> usize {
+    let n = a.n;
+    let mut b = b.to_vec();
+    if project_nullspace {
+        remove_mean32(&mut b);
+        remove_mean32(x);
+    }
+    let mut r = vec![0.0f32; n];
+    ctx.matvec32(a, x, &mut r);
+    for (ri, bi) in r.iter_mut().zip(&b) {
+        *ri = bi - *ri;
+    }
+    if project_nullspace {
+        remove_mean32(&mut r);
+    }
+    let r0 = r.clone();
+    let bnorm = ctx.norm2_32(&b).max(1e-300);
+    let mut res = ctx.norm2_32(&r) / bnorm;
+    if res < tol {
+        return 0;
+    }
+    let mut rho = 1.0f64;
+    let mut alpha = 1.0f64;
+    let mut omega = 1.0f64;
+    let mut v = vec![0.0f32; n];
+    let mut p = vec![0.0f32; n];
+    let mut phat = vec![0.0f32; n];
+    let mut shat = vec![0.0f32; n];
+    let mut t = vec![0.0f32; n];
+    for it in 1..=max_iter {
+        let rho_new = ctx.dot32(&r0, &r);
+        if rho_new.abs() < 1e-300 {
+            return it;
+        }
+        let beta = (rho_new / rho) * (alpha / omega);
+        rho = rho_new;
+        for i in 0..n {
+            p[i] = (f64::from(r[i]) + beta * (f64::from(p[i]) - omega * f64::from(v[i]))) as f32;
+        }
+        precond.apply32(ctx, &p, &mut phat);
+        ctx.matvec32(a, &phat, &mut v);
+        if project_nullspace {
+            remove_mean32(&mut v);
+        }
+        let r0v = ctx.dot32(&r0, &v);
+        if r0v.abs() < 1e-300 {
+            return it;
+        }
+        alpha = rho / r0v;
+        ctx.axpy32(-alpha, &v, &mut r);
+        res = ctx.norm2_32(&r) / bnorm;
+        if res < tol {
+            ctx.axpy32(alpha, &phat, x);
+            if project_nullspace {
+                remove_mean32(x);
+            }
+            return it;
+        }
+        precond.apply32(ctx, &r, &mut shat);
+        ctx.matvec32(a, &shat, &mut t);
+        if project_nullspace {
+            remove_mean32(&mut t);
+        }
+        let tt = ctx.dot32(&t, &t);
+        if tt.abs() < 1e-300 {
+            ctx.axpy32(alpha, &phat, x);
+            return it;
+        }
+        omega = ctx.dot32(&t, &r) / tt;
+        ctx.axpy32(alpha, &phat, x);
+        ctx.axpy32(omega, &shat, x);
+        ctx.axpy32(-omega, &t, &mut r);
+        res = ctx.norm2_32(&r) / bnorm;
+        if res < tol {
+            if project_nullspace {
+                remove_mean32(x);
+            }
+            return it;
+        }
+        if omega.abs() < 1e-300 {
+            return it;
+        }
+    }
+    max_iter
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::precond::{Identity, Ilu0, Jacobi};
+    use super::super::testmat::{poisson1d, random_dd};
+    use super::*;
+
+    #[test]
+    fn refined_cg_matches_f64_cg_to_tol() {
+        let a = poisson1d(80);
+        let a32 = Csr32::from_f64(&a);
+        let xs: Vec<f64> = (0..80).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut b = vec![0.0; 80];
+        a.matvec(&xs, &mut b);
+        let ctx = ExecCtx::serial();
+        let opts = SolveOpts { precision: Precision::Mixed, ..Default::default() };
+        let mut x64 = vec![0.0; 80];
+        let mut xm = vec![0.0; 80];
+        let st64 = cg(&ctx, &a, &b, &mut x64, &Jacobi::new(&a), false, SolveOpts::default());
+        let stm = refined_cg(&ctx, &a, &a32, &b, &mut xm, &Jacobi::new(&a), false, opts);
+        assert!(st64.converged && stm.converged, "{} {}", st64.residual, stm.residual);
+        // both solved to the same 1e-10 relative residual; solutions agree
+        // far beyond f32 resolution because refinement corrects in f64
+        for (u, v) in xm.iter().zip(&x64) {
+            assert!((u - v).abs() < 1e-7 * (1.0 + v.abs()), "{u} vs {v}");
+        }
+        assert!(a.residual_norm(&xm, &b) <= a.residual_norm(&x64, &b) * 10.0 + 1e-12);
+    }
+
+    #[test]
+    fn refined_cg_projects_singular_nullspace() {
+        // periodic Laplacian: singular with constant nullspace
+        let n = 32;
+        let mut trip = Vec::new();
+        for i in 0..n {
+            trip.push((i, i, 2.0));
+            trip.push((i, (i + 1) % n, -1.0));
+            trip.push((i, (i + n - 1) % n, -1.0));
+        }
+        let a = crate::sparse::Csr::from_triplets(n, &trip);
+        let a32 = Csr32::from_f64(&a);
+        let mut b: Vec<f64> = (0..n)
+            .map(|i| (2.0 * std::f64::consts::PI * i as f64 / n as f64).sin())
+            .collect();
+        let mean = crate::util::det::mean(&b);
+        b.iter_mut().for_each(|v| *v -= mean);
+        let mut x = vec![0.0; n];
+        let opts = SolveOpts { precision: Precision::Mixed, ..Default::default() };
+        let st = refined_cg(&ExecCtx::serial(), &a, &a32, &b, &mut x, &Identity, true, opts);
+        assert!(st.converged, "residual {}", st.residual);
+        assert!(a.residual_norm(&x, &b) < 1e-8);
+        assert!(crate::util::det::mean(&x).abs() < 1e-10);
+    }
+
+    #[test]
+    fn refined_bicgstab_solves_nonsymmetric_dd() {
+        let mut rng = crate::util::rng::Rng::new(0x51);
+        let a = random_dd(60, &mut rng);
+        let a32 = Csr32::from_f64(&a);
+        let xs = rng.normal_vec(60);
+        let mut b = vec![0.0; 60];
+        a.matvec(&xs, &mut b);
+        let mut x = vec![0.0; 60];
+        let opts = SolveOpts { precision: Precision::Mixed, ..Default::default() };
+        let ctx = ExecCtx::serial();
+        let st = refined_bicgstab(&ctx, &a, &a32, &b, &mut x, &Ilu0::new(&a), false, opts);
+        assert!(st.converged, "residual {}", st.residual);
+        for (u, v) in x.iter().zip(&xs) {
+            assert!((u - v).abs() < 1e-6, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn transpose_routes_to_f64_solver() {
+        // the adjoint path must behave exactly like the f64 solver
+        let mut rng = crate::util::rng::Rng::new(0x52);
+        let a = random_dd(40, &mut rng);
+        let a32 = Csr32::from_f64(&a);
+        let xs = rng.normal_vec(40);
+        let at = a.transpose();
+        let mut b = vec![0.0; 40];
+        at.matvec(&xs, &mut b);
+        let opts =
+            SolveOpts { transpose: true, precision: Precision::Mixed, ..Default::default() };
+        let ctx = ExecCtx::serial();
+        let mut x_ref = vec![0.0; 40];
+        let mut x_mix = vec![0.0; 40];
+        bicgstab(
+            &ctx,
+            &a,
+            &b,
+            &mut x_ref,
+            &Identity,
+            false,
+            SolveOpts { transpose: true, ..Default::default() },
+        );
+        refined_bicgstab(&ctx, &a, &a32, &b, &mut x_mix, &Identity, false, opts);
+        assert_eq!(x_ref, x_mix); // bit-for-bit: same f64 code path
+    }
+
+    #[test]
+    fn stale_mirror_structure_is_rejected() {
+        let a = poisson1d(10);
+        let a32 = Csr32::from_f64(&poisson1d(12));
+        let b = vec![1.0; 10];
+        let mut x = vec![0.0; 10];
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            refined_cg(
+                &ExecCtx::serial(),
+                &a,
+                &a32,
+                &b,
+                &mut x,
+                &Identity,
+                false,
+                SolveOpts::default(),
+            )
+        }));
+        assert!(r.is_err(), "mismatched mirror must panic");
+    }
+}

@@ -3,6 +3,19 @@
 
 use pict::util::cli::Args;
 
+/// `--precision f64|mixed` shared by `batch` and `train`; `None` means the
+/// value was unrecognized (an error has already been printed).
+fn parse_precision(args: &Args, cmd: &str) -> Option<pict::linsolve::Precision> {
+    match args.get_or("precision", "f64").as_str() {
+        "f64" => Some(pict::linsolve::Precision::F64),
+        "mixed" => Some(pict::linsolve::Precision::Mixed),
+        other => {
+            eprintln!("pict {cmd}: unsupported --precision {other} (f64 | mixed)");
+            None
+        }
+    }
+}
+
 fn main() {
     let args = Args::parse();
     match args.positional.first().map(|s| s.as_str()) {
@@ -60,8 +73,11 @@ fn main() {
             use pict::util::bench::print_table;
             let steps = args.usize_or("steps", 10);
             let threads = args.usize_or("threads", pict::par::env_threads());
+            let Some(precision) = parse_precision(&args, "batch") else {
+                return;
+            };
             let scenarios = builtin_scenarios();
-            let runner = BatchRunner::new(steps).with_threads(threads);
+            let runner = BatchRunner::new(steps).with_threads(threads).with_precision(precision);
             println!(
                 "advancing {} scenarios x {steps} steps on a {}-worker pool...",
                 scenarios.len(),
@@ -103,6 +119,11 @@ fn main() {
             let unroll = args.usize_or("steps", 4).max(1);
             let every = args.usize_or("every", 0);
             let threads = args.usize_or("threads", pict::par::env_threads());
+            // mixed precision accelerates the *forward* reference frames;
+            // gradient batches always solve in f64 (see BatchRunner docs)
+            let Some(precision) = parse_precision(&args, "train") else {
+                return;
+            };
             let strategy = if every == 0 {
                 TapeStrategy::Full
             } else {
@@ -213,7 +234,7 @@ fn main() {
                 strategy,
                 seed: 0x7121A,
             };
-            let runner = BatchRunner::new(0).with_threads(threads);
+            let runner = BatchRunner::new(0).with_threads(threads).with_precision(precision);
             println!(
                 "training one corrector across {} scenarios ({}), unroll {unroll}, tape {} on {} workers",
                 labels.len(),
@@ -264,9 +285,11 @@ fn main() {
             println!("  gradpaths [--n 10] [--iters 40] [--lr 0.08]   gradient-path ablation (E4)");
             println!("  cavity [--n 32] [--re 100] [--steps 1200]     lid-driven cavity vs Ghia");
             println!("  batch [--steps 10] [--threads N]              run all registered scenarios on one N-worker pool");
+            println!("        [--precision mixed]                     f32-storage iterative refinement for the solves");
             println!("  train [--kind cavity] [--params 100,400] [--n 12] [--steps 4]");
             println!("        [--every K] [--iters 10] [--threads N]  train one corrector across a scenario batch");
             println!("        [--probe [--probe-steps 16]]            record+backward gradient batch only (no network)");
+            println!("        [--precision mixed]                     mixed forward frames (adjoint stays f64)");
             println!("  artifacts [--dir artifacts]                   list AOT artifacts (needs --features pjrt)");
             println!("env: PICT_THREADS=<n> sizes the worker pool (default: all cores; read per context, never cached)");
             println!("examples: cargo run --release --example quickstart | train_sgs_tcf | ...");

@@ -28,6 +28,11 @@
 //!   width, but the grouping differs from the serial left-to-right sum, so
 //!   results may differ from serial in the last ulps.
 //! - [`ExecCtx::axpy`] is elementwise and bit-for-bit equal to serial.
+//! - The f32-storage kernels ([`ExecCtx::matvec32`], [`ExecCtx::dot32`],
+//!   [`ExecCtx::norm2_32`], [`ExecCtx::axpy32`]) reuse the same row/chunk
+//!   partitioning and accumulate in f64, so the same contract holds per
+//!   (width, precision) config: `matvec32`/`axpy32` are bit-for-bit serial-
+//!   equal, `dot32`/`norm2_32` combine partials in chunk order.
 //! - Work below the per-chunk minima stays on the serial path, so small
 //!   systems (most unit tests) are bit-identical at any width.
 //!
@@ -44,7 +49,7 @@ pub(crate) mod shim;
 
 pub use pool::Pool;
 
-use crate::sparse::Csr;
+use crate::sparse::{Csr, Csr32};
 use std::marker::PhantomData;
 use std::ops::Range;
 use std::sync::Arc;
@@ -385,6 +390,86 @@ impl ExecCtx {
         });
     }
 
+    /// y = A x over an f32-storage mirror, row-partitioned with the exact
+    /// partitioner the f64 [`ExecCtx::matvec`] uses (nnz-balanced row
+    /// ranges); each row accumulates in f64 inside
+    /// [`Csr32::matvec_rows`], so results are bit-for-bit equal to the
+    /// serial [`Csr32::matvec`] at any width.
+    pub fn matvec32(&self, a: &Csr32, x: &[f32], y: &mut [f32]) {
+        let nt = self.effective(a.nnz(), MIN_NNZ_PER_THREAD);
+        if nt <= 1 {
+            a.matvec(x, y);
+        } else {
+            self.matvec32_chunks(a, x, y, nt);
+        }
+    }
+
+    /// The partitioned f32 gather kernel, always run at `parts` chunks
+    /// (no serial fallback). Public so tests and benches can pin the
+    /// chunking.
+    pub fn matvec32_chunks(&self, a: &Csr32, x: &[f32], y: &mut [f32], parts: usize) {
+        assert_eq!(x.len(), a.n);
+        assert_eq!(y.len(), a.n);
+        let ranges = partition_rows(&a.row_ptr, parts);
+        let ys = DisjointMut::new(y);
+        self.run_tasks(ranges.len(), |t| {
+            let r = ranges[t].clone();
+            // SAFETY: row ranges are disjoint, one task per range
+            let chunk = unsafe { ys.range(r.clone()) };
+            a.matvec_rows(x, chunk, r);
+        });
+    }
+
+    /// Chunked f32 dot product with f64 accumulation; per-chunk partials
+    /// combined in chunk order (deterministic for a fixed width).
+    pub fn dot32(&self, a: &[f32], b: &[f32]) -> f64 {
+        assert_eq!(a.len(), b.len());
+        let nt = self.effective(a.len(), MIN_VEC_PER_THREAD);
+        if nt <= 1 {
+            let mut acc = 0.0f64;
+            for (x, y) in a.iter().zip(b) {
+                acc += f64::from(*x) * f64::from(*y);
+            }
+            return acc;
+        }
+        let ranges = partition(a.len(), nt);
+        let mut partials = vec![0.0; ranges.len()];
+        {
+            let ps = DisjointMut::new(&mut partials);
+            self.run_tasks(ranges.len(), |t| {
+                let r = ranges[t].clone();
+                let mut s = 0.0f64;
+                for (x, y) in a[r.clone()].iter().zip(&b[r]) {
+                    s += f64::from(*x) * f64::from(*y);
+                }
+                // SAFETY: slot t is written by task t only
+                unsafe { ps.set(t, s) };
+            });
+        }
+        partials.iter().sum()
+    }
+
+    /// Parallel 2-norm of an f32 vector (via [`ExecCtx::dot32`]); the
+    /// result stays in f64 for the refinement loop's convergence tests.
+    pub fn norm2_32(&self, a: &[f32]) -> f64 {
+        self.dot32(a, a).sqrt()
+    }
+
+    /// y += alpha * x on f32 storage: each element updates through one f64
+    /// fused expression before narrowing back, chunk-partitioned and
+    /// bit-for-bit equal to serial (elementwise).
+    pub fn axpy32(&self, alpha: f64, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len());
+        let ys = DisjointMut::new(y);
+        self.run_chunks(x.len(), MIN_VEC_PER_THREAD, |_, r| {
+            // SAFETY: chunk ranges are disjoint
+            let chunk = unsafe { ys.range(r.clone()) };
+            for (yi, xi) in chunk.iter_mut().zip(&x[r]) {
+                *yi = (f64::from(*yi) + alpha * f64::from(*xi)) as f32;
+            }
+        });
+    }
+
     /// Visit every CSR row with mutable access to its value slice,
     /// row-partitioned across the pool: `f(row, row_cols, row_vals)`. Rows
     /// map to disjoint `vals` ranges, so chunks write without
@@ -531,6 +616,43 @@ mod tests {
                 assert!((g - w).abs() < 1e-12 * (1.0 + w.abs()), "{g} vs {w}");
             }
         }
+    }
+
+    #[test]
+    fn pool_matvec32_bit_for_bit_equals_serial() {
+        let mut rng = Rng::new(0xF32);
+        let a = random_csr(150, 0.2, &mut rng);
+        let a32 = Csr32::from_f64(&a);
+        let x32: Vec<f32> = rng.normal_vec(150).iter().map(|&v| v as f32).collect();
+        let mut y_serial = vec![0.0f32; 150];
+        a32.matvec(&x32, &mut y_serial);
+        for nt in [2, 3, 4, 8] {
+            let ctx = ExecCtx::with_threads(nt);
+            let mut y_par = vec![0.0f32; 150];
+            ctx.matvec32_chunks(&a32, &x32, &mut y_par, nt);
+            assert_eq!(y_serial, y_par, "nt={nt}");
+        }
+    }
+
+    #[test]
+    fn dot32_and_axpy32_match_f64_reference() {
+        let mut rng = Rng::new(0x3F2);
+        let n = 2 * MIN_VEC_PER_THREAD + 11;
+        let a32: Vec<f32> = rng.normal_vec(n).iter().map(|&v| v as f32).collect();
+        let b32: Vec<f32> = rng.normal_vec(n).iter().map(|&v| v as f32).collect();
+        let mut want = 0.0f64;
+        for (x, y) in a32.iter().zip(&b32) {
+            want += f64::from(*x) * f64::from(*y);
+        }
+        let ctx = ExecCtx::with_threads(4);
+        let par = ctx.dot32(&a32, &b32);
+        assert!((par - want).abs() < 1e-9 * (1.0 + want.abs()));
+        assert!((ctx.norm2_32(&a32) - ctx.dot32(&a32, &a32).sqrt()).abs() < 1e-12);
+        let mut y1 = b32.clone();
+        let mut y2 = b32.clone();
+        ExecCtx::serial().axpy32(0.37, &a32, &mut y1);
+        ctx.axpy32(0.37, &a32, &mut y2);
+        assert_eq!(y1, y2); // elementwise: exactly equal
     }
 
     #[test]

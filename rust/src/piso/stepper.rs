@@ -2,10 +2,13 @@
 //! by the adjoint (DtO tape; see `adjoint`).
 
 use crate::fvm;
-use crate::linsolve::{bicgstab, cg, Ilu0, Jacobi, Preconditioner, SolveOpts};
+use crate::linsolve::{
+    bicgstab, cg, refined_bicgstab, refined_cg, Ilu0, Jacobi, Precision, Preconditioner,
+    SolveOpts,
+};
 use crate::mesh::{face_axis, face_sign, Mesh, NeighRef, VectorField};
 use crate::par::ExecCtx;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, Csr32};
 use crate::util::timer;
 
 /// Solver configuration.
@@ -26,6 +29,12 @@ pub struct PisoConfig {
     pub p_opts: SolveOpts,
     /// ILU(0) preconditioning for the advection solve (Jacobi otherwise).
     pub use_ilu: bool,
+    /// Storage precision of the forward Krylov hot path. `Mixed` routes the
+    /// advection and pressure solves through f32-storage iterative
+    /// refinement (see [`crate::linsolve::refine`]) against solver-owned
+    /// [`Csr32`] mirrors; adjoint solves always stay f64. Per-solve
+    /// `adv_opts.precision` / `p_opts.precision` override individually.
+    pub precision: Precision,
 }
 
 impl Default for PisoConfig {
@@ -35,9 +44,20 @@ impl Default for PisoConfig {
             target_cfl: None,
             n_correctors: 2,
             n_nonorth: 1,
-            adv_opts: SolveOpts { tol: 1e-8, max_iter: 1000, transpose: false },
-            p_opts: SolveOpts { tol: 1e-8, max_iter: 4000, transpose: false },
+            adv_opts: SolveOpts {
+                tol: 1e-8,
+                max_iter: 1000,
+                transpose: false,
+                precision: Precision::F64,
+            },
+            p_opts: SolveOpts {
+                tol: 1e-8,
+                max_iter: 4000,
+                transpose: false,
+                precision: Precision::F64,
+            },
             use_ilu: false,
+            precision: Precision::F64,
         }
     }
 }
@@ -135,6 +155,55 @@ impl Default for StepRecord {
     }
 }
 
+/// Advection-solve preconditioner slot, owned by the solver so the
+/// factorization storage (and, for ILU(0), the symbolic level schedules)
+/// persists across steps: each step runs a numeric-only
+/// [`Jacobi::refresh`] / [`Ilu0::refactor`] instead of a fresh `new`.
+enum AdvPrecond {
+    Jacobi(Jacobi),
+    Ilu(Ilu0),
+}
+
+impl AdvPrecond {
+    fn as_dyn(&self) -> &dyn Preconditioner {
+        match self {
+            AdvPrecond::Jacobi(p) => p,
+            AdvPrecond::Ilu(p) => p,
+        }
+    }
+}
+
+/// Step-persistent scratch: the per-step hot-loop buffers of
+/// [`PisoSolver::step`] (momentum RHS, inverted momentum diagonal,
+/// boundary-flux base RHS), allocated once per solver and refilled in
+/// place each step.
+struct StepScratch {
+    rhs: Vec<f64>,
+    a_inv: Vec<f64>,
+    rhs_base: VectorField,
+}
+
+impl StepScratch {
+    fn new(ncells: usize) -> StepScratch {
+        StepScratch {
+            rhs: vec![0.0; ncells],
+            a_inv: vec![0.0; ncells],
+            rhs_base: VectorField::zeros(ncells),
+        }
+    }
+}
+
+/// Refresh a solver-owned [`Csr32`] mirror from the freshly assembled f64
+/// matrix: values-only renarrow once allocated, full clone-and-narrow the
+/// first time a mixed-precision step needs it.
+fn refresh_mirror(slot: &mut Option<Csr32>, a: &Csr) {
+    if let Some(m) = slot.as_mut() {
+        m.refresh(a);
+    } else {
+        *slot = Some(Csr32::from_f64(a));
+    }
+}
+
 /// The PISO solver: owns the mesh, viscosity field, reusable matrix
 /// structures, and the execution context its kernels run on. One instance
 /// per mesh; `step` advances a [`State`].
@@ -145,6 +214,17 @@ pub struct PisoSolver {
     pub nu: Vec<f64>,
     pub c: Csr,
     pub pmat: Csr,
+    /// Cross-step advection preconditioner (numeric refresh per step).
+    adv_precond: AdvPrecond,
+    /// Cross-step pressure Jacobi preconditioner (numeric refresh per step).
+    p_precond: Jacobi,
+    /// f32 mirror of `c` for mixed-precision advection solves; allocated on
+    /// the first mixed step, values-refreshed afterward.
+    c32: Option<Csr32>,
+    /// f32 mirror of `pmat` for mixed-precision pressure solves.
+    pmat32: Option<Csr32>,
+    /// Hoisted per-step allocations.
+    scratch: StepScratch,
     /// Execution context threaded through assembly, Krylov solves, and
     /// preconditioner applies (and reused by the adjoint for the transposed
     /// solves). Constructors take it explicitly: contexts are only built at
@@ -169,7 +249,28 @@ impl PisoSolver {
     ) -> PisoSolver {
         let c = fvm::c_structure(&mesh);
         let pmat = fvm::pressure_structure(&mesh);
-        PisoSolver { mesh, cfg, nu, c, pmat, ctx }
+        // Factorize the preconditioners once on the zero-valued structures
+        // (both guard zero pivots); every step refreshes them numerically.
+        let adv_precond = if cfg.use_ilu {
+            AdvPrecond::Ilu(Ilu0::new(&c))
+        } else {
+            AdvPrecond::Jacobi(Jacobi::new(&c))
+        };
+        let p_precond = Jacobi::new(&pmat);
+        let scratch = StepScratch::new(mesh.ncells);
+        PisoSolver {
+            mesh,
+            cfg,
+            nu,
+            c,
+            pmat,
+            adv_precond,
+            p_precond,
+            c32: None,
+            pmat32: None,
+            scratch,
+            ctx,
+        }
     }
 
     /// Replace the execution context (builder-style), sharing its pool.
@@ -220,7 +321,33 @@ impl PisoSolver {
         timer::scoped("assemble_c", || {
             fvm::assemble_c(ctx, mesh, &state.u, &self.nu, dt, &mut self.c)
         });
-        let mut rhs_base = fvm::boundary_flux_rhs(mesh, &self.nu);
+
+        // cross-step setup reuse: numeric-only refresh of the persistent
+        // advection preconditioner (the ILU(0) symbolic structure and level
+        // schedules carry over), plus a values-only renarrow of the f32
+        // matrix mirror when this step solves in mixed precision
+        let mixed_adv = self.cfg.precision.is_mixed() || self.cfg.adv_opts.precision.is_mixed();
+        let mixed_p = self.cfg.precision.is_mixed() || self.cfg.p_opts.precision.is_mixed();
+        timer::scoped("adv_precond", || {
+            match (&mut self.adv_precond, self.cfg.use_ilu) {
+                (AdvPrecond::Ilu(p), true) => p.refactor(&self.c),
+                (AdvPrecond::Jacobi(p), false) => p.refresh(&self.c),
+                // cfg.use_ilu toggled since construction: rebuild the slot
+                (slot, use_ilu) => {
+                    *slot = if use_ilu {
+                        AdvPrecond::Ilu(Ilu0::new(&self.c))
+                    } else {
+                        AdvPrecond::Jacobi(Jacobi::new(&self.c))
+                    };
+                }
+            }
+        });
+        if mixed_adv {
+            refresh_mirror(&mut self.c32, &self.c);
+        }
+
+        let StepScratch { rhs, a_inv, rhs_base } = &mut self.scratch;
+        fvm::boundary_flux_rhs_into(mesh, &self.nu, rhs_base);
         for comp in 0..dim {
             for cell in 0..n {
                 rhs_base.comp[comp][cell] +=
@@ -230,17 +357,13 @@ impl PisoSolver {
         let grad_p_in = fvm::pressure_gradient(mesh, &state.p);
 
         // --- predictor solve: C u* = rhs_base − ∇p^n  (per component) ---
-        let precond: Box<dyn Preconditioner> = if self.cfg.use_ilu {
-            Box::new(Ilu0::new(&self.c))
-        } else {
-            Box::new(Jacobi::new(&self.c))
-        };
         let mut u_star = state.u.clone();
         let n_nonorth = if mesh.non_orthogonal { self.cfg.n_nonorth } else { 0 };
+        let adv_opts = self.cfg.adv_opts;
         for comp in 0..dim {
-            let mut rhs: Vec<f64> = (0..n)
-                .map(|i| rhs_base.comp[comp][i] - grad_p_in.comp[comp][i])
-                .collect();
+            for i in 0..n {
+                rhs[i] = rhs_base.comp[comp][i] - grad_p_in.comp[comp][i];
+            }
             for no in 0..=n_nonorth {
                 if no > 0 {
                     // deferred cross-diffusion of the current iterate
@@ -252,7 +375,13 @@ impl PisoSolver {
                 }
                 let st = timer::scoped("adv_solve", || {
                     let u = &mut u_star.comp[comp];
-                    bicgstab(ctx, &self.c, &rhs, u, precond.as_ref(), self.cfg.adv_opts)
+                    let precond = self.adv_precond.as_dyn();
+                    match (mixed_adv, self.c32.as_ref()) {
+                        (true, Some(c32)) => {
+                            refined_bicgstab(ctx, &self.c, c32, rhs, u, precond, false, adv_opts)
+                        }
+                        _ => bicgstab(ctx, &self.c, rhs, u, precond, false, adv_opts),
+                    }
                 });
                 stats.adv_iters += st.iterations;
                 stats.adv_residual = stats.adv_residual.max(st.residual);
@@ -260,12 +389,19 @@ impl PisoSolver {
         }
 
         // --- correctors ---
-        let diag = self.c.diagonal();
-        let a_inv: Vec<f64> = diag.iter().map(|d| 1.0 / d).collect();
+        for r in 0..n {
+            let d = self.c.find(r, r).map(|k| self.c.vals[k]).unwrap_or(0.0);
+            a_inv[r] = 1.0 / d;
+        }
         timer::scoped("assemble_p", || {
-            fvm::assemble_pressure(ctx, mesh, &a_inv, &mut self.pmat)
+            fvm::assemble_pressure(ctx, mesh, a_inv, &mut self.pmat)
         });
-        let p_precond = Jacobi::new(&self.pmat);
+        self.p_precond.refresh(&self.pmat);
+        if mixed_p {
+            refresh_mirror(&mut self.pmat32, &self.pmat);
+        }
+        let p_precond = &self.p_precond;
+        let p_opts = self.cfg.p_opts;
         // pure-Neumann/periodic pressure ⇒ constant nullspace unless any
         // Dirichlet velocity boundary fixes the level through the RHS; the
         // matrix never has Dirichlet pressure rows, so always project.
@@ -275,19 +411,31 @@ impl PisoSolver {
         let mut u_cur = u_star.clone();
         let mut p_new = state.p.clone();
         for _ in 0..self.cfg.n_correctors {
-            let h = fvm::h_field(mesh, &self.c, &a_inv, &u_cur, &rhs_base);
+            let h = fvm::h_field(mesh, &self.c, a_inv, &u_cur, rhs_base);
             let div = fvm::divergence_h(mesh, &h, None);
             let mut p = p_new.clone();
             let mut rhs_p: Vec<f64> = div.iter().map(|v| -v).collect();
             for no in 0..=n_nonorth {
                 if no > 0 {
-                    let cross = fvm::cross_diffusion(mesh, &a_inv, &p);
+                    let cross = fvm::cross_diffusion(mesh, a_inv, &p);
                     for i in 0..n {
                         rhs_p[i] = -div[i] + cross[i];
                     }
                 }
                 let st = timer::scoped("p_solve", || {
-                    cg(ctx, &self.pmat, &rhs_p, &mut p, &p_precond, project, self.cfg.p_opts)
+                    match (mixed_p, self.pmat32.as_ref()) {
+                        (true, Some(m32)) => refined_cg(
+                            ctx,
+                            &self.pmat,
+                            m32,
+                            &rhs_p,
+                            &mut p,
+                            p_precond,
+                            project,
+                            p_opts,
+                        ),
+                        _ => cg(ctx, &self.pmat, &rhs_p, &mut p, p_precond, project, p_opts),
+                    }
                 });
                 stats.p_iters += st.iterations;
                 stats.p_residual = stats.p_residual.max(st.residual);

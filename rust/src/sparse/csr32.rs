@@ -1,0 +1,242 @@
+//! f32-storage mirror of [`Csr`] for the mixed-precision Krylov hot path.
+//!
+//! The inner iterations of an iterative-refinement solve
+//! ([`crate::linsolve::refine`]) only ever see a *correction* system whose
+//! solution is re-validated against the true f64 residual each outer cycle,
+//! so the matrix values can be stored in f32 — halving the memory traffic
+//! that dominates SpMV — as long as every accumulation still runs in f64.
+//! `Csr32` shares the symbolic structure (`row_ptr`, `col_idx`) with its
+//! f64 source by cloning it once ([`Csr32::from_f64`]) and then refreshing
+//! values only ([`Csr32::refresh`]) each time the stepper refills the f64
+//! matrix, mirroring how the fixed-stencil [`Csr`] itself is assembled
+//! once and refilled numerically per step.
+//!
+//! The SpMV inner loop is fixed-width-chunked (`LANES` f64 accumulators
+//! combined in a fixed order, scalar remainder after) so the compiler can
+//! auto-vectorize it on stable Rust — no nightly `std::simd` — while the
+//! per-row result stays bit-for-bit identical regardless of thread count:
+//! the pool's row partitioning ([`crate::par::ExecCtx::matvec32`]) hands
+//! each worker whole rows, and each row is reduced in this one fixed order.
+
+use crate::sparse::Csr;
+use std::ops::Range;
+
+/// Number of independent f64 accumulators in the chunked SpMV inner loop.
+/// Stencil rows carry ~5–7 entries, so 4 lanes get one full chunk per row
+/// plus a short remainder; wider would degrade every row to the remainder.
+const LANES: usize = 4;
+
+/// f32-valued CSR matrix sharing its symbolic structure with a [`Csr`].
+#[derive(Clone, Debug)]
+pub struct Csr32 {
+    pub n: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl Csr32 {
+    /// Clone the symbolic structure of `a` and narrow its values to f32.
+    ///
+    /// The structure inherits `a`'s validated invariants (`col_idx < n`,
+    /// monotone `row_ptr` with `row_ptr[n] == nnz`), which the unchecked
+    /// kernels below rely on; callers must rewrite values only via
+    /// [`Csr32::refresh`], never the symbolic part.
+    pub fn from_f64(a: &Csr) -> Csr32 {
+        Csr32 {
+            n: a.n,
+            row_ptr: a.row_ptr.clone(),
+            col_idx: a.col_idx.clone(),
+            vals: a.vals.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Values-only refresh from the f64 source: reuses the symbolic
+    /// structure cloned at [`Csr32::from_f64`] time, so a stepper can keep
+    /// one persistent mirror and renarrow after each numeric reassembly
+    /// without reallocating. The source must be the same matrix (same
+    /// structure) the mirror was built from.
+    pub fn refresh(&mut self, a: &Csr) {
+        assert_eq!(self.n, a.n, "Csr32::refresh: dimension changed since from_f64");
+        assert_eq!(
+            self.vals.len(),
+            a.vals.len(),
+            "Csr32::refresh: nnz changed since from_f64"
+        );
+        debug_assert_eq!(self.row_ptr, a.row_ptr);
+        debug_assert_eq!(self.col_idx, a.col_idx);
+        for (dst, src) in self.vals.iter_mut().zip(&a.vals) {
+            *dst = *src as f32;
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// y = A x with f32 storage and f64 accumulation. Serial entry point;
+    /// the pooled path is [`crate::par::ExecCtx::matvec32`], which calls
+    /// [`Csr32::matvec_rows`] per row-chunk so the per-row arithmetic — and
+    /// therefore the result — is bit-for-bit the same at every width.
+    pub fn matvec(&self, x: &[f32], y: &mut [f32]) {
+        self.matvec_rows(x, y, 0..self.n);
+    }
+
+    /// Row-range SpMV kernel: computes rows `rows` of `A x` into
+    /// `y_chunk` (whose length is `rows.len()`). Each row accumulates in
+    /// f64 across `LANES` fixed-order lanes and narrows once at the end.
+    pub fn matvec_rows(&self, x: &[f32], y_chunk: &mut [f32], rows: Range<usize>) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y_chunk.len(), rows.len());
+        assert!(rows.end <= self.n);
+        let last = *self.row_ptr.last().expect("row_ptr has n+1 entries by construction");
+        assert_eq!(last, self.col_idx.len());
+        for (r, yr) in rows.zip(y_chunk.iter_mut()) {
+            *yr = self.row_dot(x, r) as f32;
+        }
+    }
+
+    /// f64 dot product of row `r` with `x`: `LANES` independent
+    /// accumulators over fixed-width chunks (auto-vectorizable on stable),
+    /// combined in a fixed order, then a scalar remainder — one canonical
+    /// reduction order per row, independent of partitioning.
+    #[inline]
+    fn row_dot(&self, x: &[f32], r: usize) -> f64 {
+        // SAFETY: row_ptr is monotone with last == nnz (asserted by every
+        // caller) and col_idx entries are < n — invariants established by
+        // the f64 constructors, inherited verbatim by from_f64, and
+        // preserved by refresh (values-only). x.len() == n is asserted by
+        // the callers before any row is touched.
+        unsafe {
+            let lo = *self.row_ptr.get_unchecked(r);
+            let hi = *self.row_ptr.get_unchecked(r + 1);
+            let vals = self.vals.get_unchecked(lo..hi);
+            let cols = self.col_idx.get_unchecked(lo..hi);
+            let n_full = vals.len() / LANES * LANES;
+            let mut lanes = [0.0f64; LANES];
+            let mut k = 0;
+            while k < n_full {
+                for (l, lane) in lanes.iter_mut().enumerate() {
+                    *lane += f64::from(*vals.get_unchecked(k + l))
+                        * f64::from(*x.get_unchecked(*cols.get_unchecked(k + l) as usize));
+                }
+                k += LANES;
+            }
+            let mut acc = 0.0;
+            for &lane in &lanes {
+                acc += lane;
+            }
+            for k in n_full..vals.len() {
+                acc += f64::from(*vals.get_unchecked(k))
+                    * f64::from(*x.get_unchecked(*cols.get_unchecked(k) as usize));
+            }
+            acc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> Csr {
+        // a 4x4 with mixed row lengths so both the lane chunk and the
+        // scalar remainder paths run
+        Csr::from_triplets(
+            4,
+            &[
+                (0, 0, 2.0),
+                (0, 1, 1.0),
+                (0, 2, -0.5),
+                (0, 3, 0.25),
+                (1, 1, 3.0),
+                (2, 0, 4.0),
+                (2, 2, 5.0),
+                (2, 3, -1.0),
+                (3, 0, 0.125),
+                (3, 1, -2.0),
+                (3, 2, 1.5),
+                (3, 3, 6.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn matvec_matches_f64_within_rounding() {
+        let a = example();
+        let a32 = Csr32::from_f64(&a);
+        let x = [1.0, 2.0, 3.0, -1.0];
+        let x32: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        let mut y = [0.0; 4];
+        let mut y32 = vec![0.0f32; 4];
+        a.matvec(&x, &mut y);
+        a32.matvec(&x32, &mut y32);
+        for r in 0..4 {
+            // all values here are exactly representable in f32, so the
+            // f64-accumulated mixed result is exact too
+            assert_eq!(f64::from(y32[r]), y[r], "row {r}");
+        }
+    }
+
+    #[test]
+    fn refresh_equals_from_f64_after_value_updates() {
+        let mut a = example();
+        let mut mirror = Csr32::from_f64(&a);
+        for (k, v) in a.vals.iter_mut().enumerate() {
+            *v = 0.1 * (k as f64 + 1.0) - 0.7;
+        }
+        mirror.refresh(&a);
+        let fresh = Csr32::from_f64(&a);
+        assert_eq!(mirror.vals, fresh.vals);
+        assert_eq!(mirror.row_ptr, fresh.row_ptr);
+        assert_eq!(mirror.col_idx, fresh.col_idx);
+    }
+
+    #[test]
+    #[should_panic(expected = "nnz changed")]
+    fn refresh_rejects_structure_change() {
+        let a = example();
+        let mut mirror = Csr32::from_f64(&a);
+        let other = Csr::from_triplets(4, &[(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0), (3, 3, 1.0)]);
+        mirror.refresh(&other);
+    }
+
+    #[test]
+    fn matvec_rows_matches_full_matvec() {
+        let a32 = Csr32::from_f64(&example());
+        let x32 = [0.5f32, -1.5, 2.0, 0.75];
+        let mut full = vec![0.0f32; 4];
+        a32.matvec(&x32, &mut full);
+        let mut lo = vec![0.0f32; 2];
+        let mut hi = vec![0.0f32; 2];
+        a32.matvec_rows(&x32, &mut lo, 0..2);
+        a32.matvec_rows(&x32, &mut hi, 2..4);
+        assert_eq!(&full[..2], &lo[..]);
+        assert_eq!(&full[2..], &hi[..]);
+    }
+
+    #[test]
+    fn miri_unchecked_matvec32_stays_in_bounds() {
+        // Fast Miri target for the get_unchecked lane loop: every index the
+        // unsafe block touches is validated by the f64 constructors whose
+        // structure from_f64 inherits, and the result must match a fully
+        // checked dense multiply accumulated the same way.
+        let a = example();
+        let a32 = Csr32::from_f64(&a);
+        let x32 = [0.5f32, -1.5, 2.0, 1.0];
+        let mut y32 = vec![0.0f32; 4];
+        a32.matvec(&x32, &mut y32);
+        let dense = a.to_dense();
+        for r in 0..4 {
+            let mut want = 0.0f64;
+            for c in 0..4 {
+                want += dense[r][c] * f64::from(x32[c]);
+            }
+            assert!(
+                (f64::from(y32[r]) - want).abs() < 1e-6 * (1.0 + want.abs()),
+                "row {r}: {} vs {want}",
+                y32[r]
+            );
+        }
+    }
+}

@@ -4,5 +4,7 @@
 //! transpose-apply needed by the OtD linear-solve adjoints.
 
 pub mod csr;
+pub mod csr32;
 
 pub use csr::Csr;
+pub use csr32::Csr32;

@@ -124,7 +124,7 @@ pub fn div_gradient_modification(
     let rhs: Vec<f64> = div.iter().map(|v| -v).collect();
     let mut p = vec![0.0; mesh.ncells];
     let precond = Jacobi::new(&m);
-    let opts = SolveOpts { tol: 1e-8, max_iter: 4000, transpose: false };
+    let opts = SolveOpts { tol: 1e-8, max_iter: 4000, transpose: false, ..SolveOpts::default() };
     cg(ctx, &m, &rhs, &mut p, &precond, true, opts);
     let gp = fvm::pressure_gradient(mesh, &p);
     let mut out = dl_ds.clone();

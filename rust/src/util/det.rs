@@ -51,6 +51,19 @@ pub fn index_u32(i: usize) -> u32 {
     i as u32
 }
 
+/// Round an `f64` to `f32` at the blessed mixed-precision boundary.
+///
+/// The analyze pass confines lossy `as f32` casts in the kernel modules to
+/// the precision-boundary files (`sparse/csr32.rs`, `linsolve/refine.rs`);
+/// mixed-precision code elsewhere (e.g. the f32 preconditioner applies in
+/// `linsolve/precond.rs`) narrows through this helper so every rounding
+/// site is named and auditable. Widening back is `f64::from`, which is
+/// exact and needs no helper.
+#[inline]
+pub fn narrow_f32(x: f64) -> f32 {
+    x as f32
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,207 @@
+//! Integration contracts of the mixed-precision Krylov path: iterative
+//! refinement converges to the same f64 tolerance as the plain solvers and
+//! lands on (essentially) the same solution; the mixed path is bit-for-bit
+//! reproducible per (thread-width, precision) config; the persistent
+//! `Csr32` mirror refreshed after a numeric reassembly equals a
+//! from-scratch rebuild; and a full `Precision::Mixed` PISO/batch run
+//! stays divergence-free while tracking the f64 trajectory.
+
+use pict::coordinator::scenario::{BatchRunner, LidDrivenCavity, Scenario};
+use pict::fvm;
+use pict::linsolve::{bicgstab, cg, refined_bicgstab, refined_cg, Jacobi, Precision, SolveOpts};
+use pict::mesh::gen;
+use pict::par::ExecCtx;
+use pict::sparse::{Csr, Csr32};
+use pict::util::rng::Rng;
+
+/// The Poiseuille pressure system the batch runner exercises (same
+/// construction as tests/par_props.rs): symmetric singular Poisson system
+/// with a consistent, mean-free RHS shaped like a divergence field.
+fn poiseuille_pressure_system() -> (Csr, Vec<f64>) {
+    let mesh = gen::channel2d(6, 16, 1.0, 1.0, 1.12, false);
+    let a_inv = vec![1.0; mesh.ncells];
+    let mut m = fvm::pressure_structure(&mesh);
+    fvm::assemble_pressure(&ExecCtx::serial(), &mesh, &a_inv, &mut m);
+    let mut rhs: Vec<f64> = mesh
+        .centers
+        .iter()
+        .map(|c| (7.1 * c[0]).sin() * (3.3 * c[1]).cos())
+        .collect();
+    let mean = rhs.iter().sum::<f64>() / rhs.len() as f64;
+    rhs.iter_mut().for_each(|v| *v -= mean);
+    (m, rhs)
+}
+
+/// A larger periodic-box pressure system, sized so the parallel kernels
+/// actually partition across a width-4 pool.
+fn box_pressure_system(n: usize) -> (Csr, Vec<f64>) {
+    let mesh = gen::periodic_box2d(n, n, 1.0, 1.0);
+    let a_inv = vec![1.0; mesh.ncells];
+    let mut m = fvm::pressure_structure(&mesh);
+    fvm::assemble_pressure(&ExecCtx::serial(), &mesh, &a_inv, &mut m);
+    let mut rhs: Vec<f64> = mesh
+        .centers
+        .iter()
+        .map(|c| (5.2 * c[0]).cos() * (2.9 * c[1]).sin())
+        .collect();
+    let mean = rhs.iter().sum::<f64>() / rhs.len() as f64;
+    rhs.iter_mut().for_each(|v| *v -= mean);
+    (m, rhs)
+}
+
+/// Random strictly diagonally dominant (nonsymmetric) matrix — the shape
+/// of the advection–diffusion system (same generator as tests/par_props.rs).
+fn random_dd(n: usize, rng: &mut Rng) -> Csr {
+    let mut trip = Vec::new();
+    for r in 0..n {
+        let mut offsum = 0.0;
+        for c in 0..n {
+            if c != r && rng.uniform() < 0.3 {
+                let v = rng.normal() * 0.5;
+                offsum += v.abs();
+                trip.push((r, c, v));
+            }
+        }
+        trip.push((r, r, offsum + 1.0 + rng.uniform()));
+    }
+    Csr::from_triplets(n, &trip)
+}
+
+fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+fn max_abs(a: &[f64]) -> f64 {
+    a.iter().fold(0.0, |m, v| m.max(v.abs()))
+}
+
+#[test]
+fn refined_cg_matches_f64_cg_on_poiseuille_pressure() {
+    let (a, rhs) = poiseuille_pressure_system();
+    let a32 = Csr32::from_f64(&a);
+    let precond = Jacobi::new(&a);
+    let ctx = ExecCtx::serial();
+    let opts = SolveOpts::default();
+    let mixed = SolveOpts { precision: Precision::Mixed, ..opts };
+    let mut x64 = vec![0.0; a.n];
+    let mut xmx = vec![0.0; a.n];
+    let st64 = cg(&ctx, &a, &rhs, &mut x64, &precond, true, opts);
+    let stmx = refined_cg(&ctx, &a, &a32, &rhs, &mut xmx, &precond, true, mixed);
+    assert!(st64.converged, "f64 CG must converge on the pressure system");
+    assert!(stmx.converged, "mixed CG must converge to the same f64 tolerance");
+    // both residuals are true f64 residuals relative to the same ‖b‖
+    assert!(stmx.residual < opts.tol, "mixed residual {} above tol", stmx.residual);
+    let scale = max_abs(&x64).max(1e-300);
+    let diff = max_abs_diff(&x64, &xmx);
+    assert!(diff < 1e-6 * scale, "solutions disagree: rel diff {}", diff / scale);
+}
+
+#[test]
+fn refined_bicgstab_matches_f64_on_advection_shaped_system() {
+    let mut rng = Rng::new(0x51ab);
+    let n = 48;
+    let a = random_dd(n, &mut rng);
+    let a32 = Csr32::from_f64(&a);
+    let precond = Jacobi::new(&a);
+    let ctx = ExecCtx::serial();
+    let rhs: Vec<f64> = (0..n).map(|i| (0.37 * i as f64).sin()).collect();
+    let opts = SolveOpts::default();
+    let mixed = SolveOpts { precision: Precision::Mixed, ..opts };
+    let mut x64 = vec![0.0; n];
+    let mut xmx = vec![0.0; n];
+    let st64 = bicgstab(&ctx, &a, &rhs, &mut x64, &precond, false, opts);
+    let stmx = refined_bicgstab(&ctx, &a, &a32, &rhs, &mut xmx, &precond, false, mixed);
+    assert!(st64.converged && stmx.converged);
+    assert!(stmx.residual < opts.tol);
+    let scale = max_abs(&x64).max(1e-300);
+    let diff = max_abs_diff(&x64, &xmx);
+    assert!(diff < 1e-6 * scale, "solutions disagree: rel diff {}", diff / scale);
+}
+
+#[test]
+fn mixed_solve_is_bit_for_bit_reproducible_per_width() {
+    let (a, rhs) = box_pressure_system(24);
+    let a32 = Csr32::from_f64(&a);
+    let precond = Jacobi::new(&a);
+    let mixed = SolveOpts { precision: Precision::Mixed, ..SolveOpts::default() };
+    for t in [1usize, 4] {
+        let ctx = ExecCtx::with_threads(t);
+        let mut x1 = vec![0.0; a.n];
+        let mut x2 = vec![0.0; a.n];
+        let st1 = refined_cg(&ctx, &a, &a32, &rhs, &mut x1, &precond, true, mixed);
+        let st2 = refined_cg(&ctx, &a, &a32, &rhs, &mut x2, &precond, true, mixed);
+        assert!(st1.converged && st2.converged);
+        // identical dispatch ⇒ identical iterates, not merely close
+        assert_eq!(x1, x2, "mixed CG must be deterministic at width {t}");
+        assert_eq!(st1.iterations, st2.iterations);
+        assert_eq!(st1.residual.to_bits(), st2.residual.to_bits());
+    }
+}
+
+#[test]
+fn mirror_refresh_tracks_numeric_reassembly() {
+    let mesh = gen::periodic_box2d(12, 12, 1.0, 1.0);
+    let ctx = ExecCtx::serial();
+    let a_inv = vec![1.0; mesh.ncells];
+    let mut a = fvm::pressure_structure(&mesh);
+    fvm::assemble_pressure(&ctx, &mesh, &a_inv, &mut a);
+    let mut mirror = Csr32::from_f64(&a);
+    // numeric-only refill, as the stepper does each step: same symbolic
+    // structure, new values
+    let a_inv2: Vec<f64> = (0..mesh.ncells).map(|i| 0.5 + 0.01 * (i % 7) as f64).collect();
+    fvm::assemble_pressure(&ctx, &mesh, &a_inv2, &mut a);
+    mirror.refresh(&a);
+    let rebuilt = Csr32::from_f64(&a);
+    assert_eq!(mirror.vals, rebuilt.vals);
+    assert_eq!(mirror.col_idx, rebuilt.col_idx);
+    assert_eq!(mirror.row_ptr, rebuilt.row_ptr);
+}
+
+#[test]
+fn mixed_piso_run_tracks_f64_on_cavity() {
+    let steps = 3;
+    let mut finals = Vec::new();
+    for precision in [Precision::F64, Precision::Mixed] {
+        let mut run = LidDrivenCavity { n: 16, ..Default::default() }.build();
+        run.solver.ctx = ExecCtx::with_threads(2);
+        run.solver.cfg.precision = precision;
+        let mut state = run.state;
+        let stats = run.solver.run(&mut state, &run.source, steps);
+        assert!(
+            stats.max_divergence < 1e-5,
+            "{precision:?} run left divergence {}",
+            stats.max_divergence
+        );
+        finals.push(state);
+    }
+    assert_eq!(finals[0].step, finals[1].step);
+    // every solve converged to the same 1e-8 relative tolerance, so the
+    // trajectories stay together to well within solver accuracy
+    for d in 0..2 {
+        let drift = max_abs_diff(&finals[0].u.comp[d], &finals[1].u.comp[d]);
+        assert!(drift < 1e-4, "velocity component {d} drifted by {drift}");
+    }
+    let pdrift = max_abs_diff(&finals[0].p, &finals[1].p);
+    assert!(pdrift < 1e-3, "pressure drifted by {pdrift}");
+}
+
+#[test]
+fn batch_runner_mixed_override_matches_f64_batch() {
+    let scenarios: Vec<Box<dyn Scenario>> = vec![
+        Box::new(LidDrivenCavity { n: 12, ..Default::default() }),
+        Box::new(LidDrivenCavity { n: 12, re: 400.0, ..Default::default() }),
+    ];
+    let f64_results = BatchRunner::new(2).with_threads(2).run(&scenarios);
+    let runner = BatchRunner::new(2).with_threads(2).with_precision(Precision::Mixed);
+    let mixed_results = runner.run(&scenarios);
+    assert_eq!(f64_results.len(), mixed_results.len());
+    for (r64, rmx) in f64_results.iter().zip(&mixed_results) {
+        assert_eq!(r64.label, rmx.label);
+        assert_eq!(r64.steps, rmx.steps);
+        assert!(rmx.max_divergence < 1e-5, "{}: divergence {}", rmx.label, rmx.max_divergence);
+        for d in 0..2 {
+            let drift = max_abs_diff(&r64.state.u.comp[d], &rmx.state.u.comp[d]);
+            assert!(drift < 1e-4, "{}: velocity drift {drift}", rmx.label);
+        }
+    }
+}

@@ -164,6 +164,7 @@ fn prop_bicgstab_transpose_solves_nonsymmetric_adjoint() {
             &b,
             &mut x,
             &Jacobi::new(&a.transpose()),
+            false,
             SolveOpts { transpose: true, ..Default::default() },
         );
         if !st.converged {
@@ -286,6 +287,7 @@ fn pool_resident_bicgstab_matches_serial_on_poiseuille_pressure() {
         &rhs,
         &mut x_serial,
         &precond,
+        false,
         SolveOpts::default(),
     );
     let st_p = bicgstab(
@@ -294,6 +296,7 @@ fn pool_resident_bicgstab_matches_serial_on_poiseuille_pressure() {
         &rhs,
         &mut x_pool,
         &precond,
+        false,
         SolveOpts::default(),
     );
     assert!(st_s.converged && st_p.converged);

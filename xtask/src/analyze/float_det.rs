@@ -1,4 +1,4 @@
-//! Rules `float-reduction` and `lossy-cast`.
+//! Rules `float-reduction`, `lossy-cast`, and `precision-boundary`.
 //!
 //! Float addition is not associative, so any reduction whose combine order
 //! is an iterator-implementation detail (`.sum()`, a `fold` seeded with a
@@ -14,6 +14,14 @@
 //! through `util::det::index_u32` (debug-asserted) or carry an explicit
 //! justification in code review; widening (`as f64`, `as usize`, `as u64`,
 //! `as i64`) is always exact for our index/value domains.
+//!
+//! The mixed-precision Krylov path adds a third channel: f32 storage is
+//! legal only inside the blessed boundary files (`sparse/csr32.rs`,
+//! `linsolve/refine.rs`). There `as f32` narrowing is the file's purpose
+//! and stays quiet; everywhere else in `sparse/` and `linsolve/` an
+//! `as f64` widening is evidence of f32 values circulating outside the
+//! boundary and fires `precision-boundary` — re-entry must go through
+//! `f64::from` inside the boundary files so provenance stays explicit.
 
 use crate::lexer::Tok;
 use crate::rules::{in_module, Violation};
@@ -31,6 +39,14 @@ const INT_TYPES: &[&str] =
 /// Cast targets that can truncate or round our index/value domains.
 const LOSSY_TARGETS: &[&str] = &["f32", "u32", "i32", "u16", "i16", "u8", "i8"];
 
+/// The only files allowed to cross the f32/f64 storage boundary: the
+/// f32-storage CSR mirror and the iterative-refinement driver. `as f32`
+/// narrowing is their purpose; index truncation stays illegal even here.
+const PRECISION_BOUNDARY: &[&str] = &["sparse/csr32.rs", "linsolve/refine.rs"];
+
+/// Modules where f32 values must not circulate outside the boundary files.
+const PRECISION_MODULES: &[&str] = &["sparse/", "linsolve/"];
+
 pub fn check(table: &SymbolTable, out: &mut Vec<Violation>) {
     for f in &table.files {
         if !in_module(&f.path, FLOAT_MODULES) {
@@ -41,10 +57,12 @@ pub fn check(table: &SymbolTable, out: &mut Vec<Violation>) {
             if f.test[i] {
                 continue;
             }
-            // --- `as <lossy type>` ---
+            // --- `as <lossy type>` / precision-boundary widening ---
             if t.ident() == Some("as") {
+                let blessed = PRECISION_BOUNDARY.iter().any(|b| f.path.ends_with(b));
+                let precision_scope = !blessed && in_module(&f.path, PRECISION_MODULES);
                 if let Some(target) = code.get(i + 1).and_then(|n| n.ident()) {
-                    if LOSSY_TARGETS.contains(&target) {
+                    if LOSSY_TARGETS.contains(&target) && !(blessed && target == "f32") {
                         out.push(Violation {
                             file: f.path.clone(),
                             line: t.line,
@@ -55,6 +73,19 @@ pub fn check(table: &SymbolTable, out: &mut Vec<Violation>) {
                                  truncation on large meshes fails loudly instead of \
                                  corrupting indices"
                             ),
+                        });
+                    } else if target == "f64" && precision_scope {
+                        out.push(Violation {
+                            file: f.path.clone(),
+                            line: t.line,
+                            rule: "precision-boundary",
+                            msg: "`as f64` in a precision module outside the blessed \
+                                  boundary files (sparse/csr32.rs, linsolve/refine.rs): \
+                                  f32 values must widen back through f64::from inside the \
+                                  boundary so reduced precision cannot silently leak into \
+                                  the f64 solvers; integer-to-float conversions belong in \
+                                  util::det"
+                                .to_string(),
                         });
                     }
                 }

@@ -9,8 +9,10 @@
 //!   backward-read and vice versa;
 //! - [`ctx_flow`] — `execctx-construction` / `execctx-unused-param`: one
 //!   ExecCtx flows down, nobody forks or drops it;
-//! - [`float_det`] — `float-reduction` / `lossy-cast`: kernel reductions
-//!   and narrowing casts go through blessed deterministic helpers;
+//! - [`float_det`] — `float-reduction` / `lossy-cast` /
+//!   `precision-boundary`: kernel reductions and narrowing casts go through
+//!   blessed deterministic helpers, and f32 storage stays confined to the
+//!   mixed-precision boundary files;
 //! - [`hot_alloc`] — `hot-loop-alloc`: kernel loops do not allocate,
 //!   call-graph-propagated one level.
 //!
@@ -254,9 +256,36 @@ mod tests {
         assert_eq!(rules(&[("sparse/csr.rs", lossy)]), vec!["lossy-cast"]);
         let f32_cast = "pub fn shrink(x: f64) -> f32 { x as f32 }";
         assert_eq!(rules(&[("fvm/mod.rs", f32_cast)]), vec!["lossy-cast"]);
+        // index widening is exact everywhere; `as f64` is legal in float
+        // modules outside the precision scope (fvm/ carries no f32 values)
+        assert!(rules(&[("sparse/csr.rs", "pub fn idx(i: u32) -> usize { i as usize }")])
+            .is_empty());
         let widen = "pub fn idx(i: u32) -> usize { i as usize }\n\
                      pub fn up(x: f32) -> f64 { x as f64 }";
-        assert!(rules(&[("sparse/csr.rs", widen)]).is_empty());
+        assert!(rules(&[("fvm/assemble.rs", widen)]).is_empty());
+    }
+
+    #[test]
+    fn precision_casts_confined_to_boundary_files() {
+        // the blessed boundary files narrow and widen freely...
+        let narrow = "pub fn shrink(x: f64) -> f32 { x as f32 }";
+        assert!(rules(&[("sparse/csr32.rs", narrow)]).is_empty());
+        assert!(rules(&[("linsolve/refine.rs", narrow)]).is_empty());
+        let widen_back = "pub fn mean(v: &[f32]) -> f64 { v.len() as f64 }";
+        assert!(rules(&[("linsolve/refine.rs", widen_back)]).is_empty());
+        // ...but get no pass on index truncation
+        let trunc = "pub fn idx(i: usize) -> u32 { i as u32 }";
+        assert_eq!(rules(&[("sparse/csr32.rs", trunc)]), vec!["lossy-cast"]);
+        // outside the boundary, narrowing stays a lossy-cast and widening
+        // back is evidence of f32 values circulating where they must not
+        assert_eq!(rules(&[("sparse/csr.rs", narrow)]), vec!["lossy-cast"]);
+        assert_eq!(
+            rules(&[("linsolve/cg.rs", "pub fn up(x: f32) -> f64 { x as f64 }")]),
+            vec!["precision-boundary"]
+        );
+        // tests are exempt, as for every float_det rule
+        let test_src = "#[test]\nfn t() { let x = 1.5_f64; let _ = (x as f32) as f64; }";
+        assert!(rules(&[("linsolve/cg.rs", test_src)]).is_empty());
     }
 
     // --- hot-path allocation ---

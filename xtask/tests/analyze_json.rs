@@ -41,8 +41,9 @@ fn human_report_lists_violations_and_exits_nonzero() {
         "[execctx-unused-param]",
         "[float-reduction]",
         "[lossy-cast]",
+        "[precision-boundary]",
         "[hot-loop-alloc]",
-        "7 violation(s) across 4 files",
+        "8 violation(s) across 4 files",
     ] {
         assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
     }
