@@ -1,7 +1,12 @@
-//! Tape-memory bench: peak resident fields and backward wall-time of the
-//! rollout tape under Full vs Checkpoint strategies (the PR-4 acceptance
-//! numbers: ≥ 4× peak-field reduction at n = 64 / every = 8, bit-for-bit
-//! equal gradients). Writes `reports/BENCH_tape_checkpoint.json`.
+//! Tape-memory bench: peak resident fields, recompute counts, and backward
+//! wall-time of the rollout tape under Full vs uniform-Checkpoint vs
+//! binomial Revolve strategies (PR-4/PR-9 acceptance numbers: ≥ 4× peak
+//! reduction at n = 64 / every = 8; revolve(8) strictly below ckpt(8) peak
+//! with ≤ 2n re-steps; bit-for-bit equal gradients everywhere). Writes
+//! `reports/BENCH_tape_checkpoint.json`.
+//!
+//! `PICT_TAPE_SMOKE=1` runs the single-repetition CI smoke mode (same
+//! asserts, fewer timing repetitions).
 
 use pict::adjoint::{GradientPaths, RolloutGrads, Tape, TapeStrategy};
 use pict::coordinator::scenario::{Scenario, ScenarioRun, TaylorGreen};
@@ -31,6 +36,7 @@ struct Sample {
     label: String,
     resident: usize,
     peak: usize,
+    resteps: usize,
     record_s: f64,
     backward_s: f64,
     grads: RolloutGrads,
@@ -55,6 +61,7 @@ fn measure(scen: &TaylorGreen, strategy: TapeStrategy) -> Sample {
         label: strategy.label(),
         resident,
         peak: stats.peak_resident_f64,
+        resteps: stats.replayed_steps,
         record_s,
         backward_s: t1.elapsed().as_secs_f64(),
         grads,
@@ -62,16 +69,20 @@ fn measure(scen: &TaylorGreen, strategy: TapeStrategy) -> Sample {
 }
 
 fn main() {
+    let smoke = std::env::var("PICT_TAPE_SMOKE").is_ok();
     let scen = TaylorGreen { n: 20, nu: 0.01, dt: 0.01 };
     let strategies = [
         TapeStrategy::Full,
         TapeStrategy::Checkpoint { every: 4 },
         TapeStrategy::Checkpoint { every: 8 },
         TapeStrategy::Checkpoint { every: 16 },
+        TapeStrategy::Revolve { snapshots: 4 },
+        TapeStrategy::Revolve { snapshots: 8 },
     ];
     println!(
-        "tape memory: {} x {N_STEPS} steps, backward with full gradient paths",
-        scen.label()
+        "tape memory: {} x {N_STEPS} steps, backward with full gradient paths{}",
+        scen.label(),
+        if smoke { " [smoke]" } else { "" }
     );
 
     let samples: Vec<Sample> = strategies.iter().map(|&s| measure(&scen, s)).collect();
@@ -82,7 +93,7 @@ fn main() {
         assert_eq!(s.grads.du0, full.grads.du0, "{}: du0 differs from full", s.label);
         assert_eq!(s.grads.dnu, full.grads.dnu, "{}: dnu differs from full", s.label);
     }
-    // acceptance: >= 4x peak-field reduction at every = 8
+    // acceptance (PR-4): >= 4x peak-field reduction at every = 8
     let ckpt8 = &samples[2];
     assert!(
         ckpt8.peak * 4 <= full.peak,
@@ -91,6 +102,22 @@ fn main() {
         full.peak
     );
     let reduction = full.peak as f64 / ckpt8.peak as f64;
+    // acceptance (PR-9): under the same budget of 8 resident slots, the
+    // binomial schedule's peak is strictly below uniform checkpointing's,
+    // at a bounded recompute price (<= 2 extra forward passes)
+    let rev8 = &samples[5];
+    assert!(
+        rev8.peak < ckpt8.peak,
+        "revolve(8) peak {} must be strictly below ckpt(8) peak {}",
+        rev8.peak,
+        ckpt8.peak
+    );
+    assert!(
+        rev8.resteps <= 2 * N_STEPS,
+        "revolve(8) re-stepped {} times, over the 2n = {} budget",
+        rev8.resteps,
+        2 * N_STEPS
+    );
 
     let rows: Vec<Vec<String>> = samples
         .iter()
@@ -100,6 +127,7 @@ fn main() {
                 format!("{}", s.resident),
                 format!("{}", s.peak),
                 format!("{:.1}x", full.peak as f64 / s.peak as f64),
+                format!("{}", s.resteps),
                 format!("{:.3}s", s.record_s),
                 format!("{:.3}s", s.backward_s),
             ]
@@ -107,13 +135,20 @@ fn main() {
         .collect();
     print_table(
         "rollout tape memory (f64 counts)",
-        &["strategy", "resident", "peak", "vs full", "record", "backward"],
+        &["strategy", "resident", "peak", "vs full", "resteps", "record", "backward"],
         &rows,
     );
     println!("ckpt(8) peak reduction: {reduction:.1}x (acceptance >= 4x)");
+    println!(
+        "revolve(8) peak: {} ({:.1}x vs full), {} re-steps (budget {})",
+        rev8.peak,
+        full.peak as f64 / rev8.peak as f64,
+        rev8.resteps,
+        2 * N_STEPS
+    );
 
     // repeatable wall-time samples for the report
-    let bench = Bench::new(0, 2);
+    let bench = Bench::new(0, if smoke { 1 } else { 2 });
     let mut results = Vec::new();
     for &strategy in &strategies {
         results.push(bench.run(&format!("record+backward {}", strategy.label()), || {
@@ -128,6 +163,7 @@ fn main() {
                     ("strategy", Json::Str(s.label.clone())),
                     ("resident_f64", Json::Num(s.resident as f64)),
                     ("peak_f64", Json::Num(s.peak as f64)),
+                    ("replayed_steps", Json::Num(s.resteps as f64)),
                     ("record_s", Json::Num(s.record_s)),
                     ("backward_s", Json::Num(s.backward_s)),
                 ])
@@ -142,6 +178,8 @@ fn main() {
             ("scenario", Json::Str(scen.label())),
             ("memory", memory),
             ("ckpt8_peak_reduction_x", Json::Num(reduction)),
+            ("revolve8_peak_f64", Json::Num(rev8.peak as f64)),
+            ("revolve8_replayed_steps", Json::Num(rev8.resteps as f64)),
         ],
     );
 }

@@ -34,7 +34,11 @@ fn main() {
     // 5. differentiate: gradient of the kinetic energy after 3 more steps
     //    with respect to the current velocity field. TapeStrategy::Full
     //    stores every step; Checkpoint { every } trades one recompute pass
-    //    for O(n/k + k) memory on long rollouts — same gradients either way.
+    //    for O(n/k + k) memory; Revolve { snapshots } holds a *fixed*
+    //    snapshot budget with a binomial-optimal replay schedule (≤ 2
+    //    recompute passes) for long rollouts — bit-for-bit the same
+    //    gradients whichever you pick (TapeStrategy::parse maps the CLI
+    //    spellings "full" | "uniform:K" | "revolve:S").
     let ncells = solver.mesh.ncells;
     let tape = Tape::record(&mut solver, &mut state, 3, TapeStrategy::Full, |_, _| {
         VectorField::zeros(ncells)

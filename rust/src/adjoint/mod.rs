@@ -13,8 +13,10 @@
 //! deliver per-cell gradients from output to input.
 //!
 //! Multi-step rollouts record a [`Tape`] whose memory strategy is
-//! selectable ([`TapeStrategy`]): eager full-field storage, or O(n/k + k)
-//! checkpointing that re-steps each segment during the backward sweep
+//! selectable ([`TapeStrategy`]): eager full-field storage, O(n/k + k)
+//! uniform checkpointing, or binomial [`revolve`] schedules under a hard
+//! snapshot budget — both checkpointed modes re-step segments during the
+//! backward sweep through the single [`Tape::replay_segments`] hook
 //! (bit-for-bit equal gradients; see [`tape`]).
 //!
 //! Omitted (as in the paper, A.29/A.41): gradients of the non-orthogonal
@@ -23,10 +25,11 @@
 //! transition (no gradient), like the paper's warm-up steps.
 
 pub mod ops;
+pub mod revolve;
 pub mod rollout;
 pub mod step;
 pub mod tape;
 
 pub use rollout::{rollout_backward, RolloutGrads};
 pub use step::{backward_step, GradientPaths, StepGrads};
-pub use tape::{Tape, TapeBackwardStats, TapeStrategy};
+pub use tape::{ReplaySegment, ReplayStats, Tape, TapeBackwardStats, TapeStrategy};

@@ -1,0 +1,427 @@
+//! Binomial (Griewank–Walther "Revolve") checkpoint schedules.
+//!
+//! A [`Schedule`] is a precomputed action list that tells the tape's
+//! backward sweep how to rematerialize an `n`-step rollout while holding at
+//! most `snapshots` full states resident: restore a snapshot, re-advance
+//! without recording, drop/place snapshots, and sweep short recorded
+//! segments in descending order. Schedules are *validated by construction*
+//! — [`Schedule::build`] simulates every emitted action and proves that
+//! every restore hits a live snapshot, the live-snapshot count never
+//! exceeds the budget, and the sweeps cover `0..n` exactly once in
+//! descending order — before handing the schedule to the tape.
+//!
+//! The placement is binomial in macro-steps: the rollout is tiled into
+//! leaves of [`Schedule::leaf`] steps (a leaf is re-stepped *with*
+//! recording just before its adjoint sweep, so leaf length bounds the
+//! segment buffer exactly like `Checkpoint { every }` bounds its segment),
+//! and an exact dynamic program over the macro grid picks the split points
+//! — the classic C(s+t, t) binomial shape, but optimal for the finite
+//! grid rather than asymptotic. Memory is O(s + leaf) fields; recompute is
+//! the DP-minimal number of re-forwards (≤ 2 forwards total at the bench
+//! point n=64, s=8: 36 re-advances + 64 recorded re-steps = 100 ≤ 2·64).
+
+/// One backward-phase action. Step indices are *real* step numbers
+/// (`0..n`); a snapshot at `step` holds the state *before* that step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Action {
+    /// Load the snapshot at `step` (state + boundary values) as the
+    /// current position.
+    Restore { step: usize },
+    /// Re-step `from..to` without recording (source_fn re-evaluated).
+    Advance { from: usize, to: usize },
+    /// Store the current position (must equal `step`) as a snapshot.
+    Snapshot { step: usize },
+    /// Free the snapshot at `step`.
+    Drop { step: usize },
+    /// Re-step `from..to` with recording, then run the adjoint sweep over
+    /// the segment. Sweeps are emitted in descending, exactly-covering
+    /// order: the first sweep ends at `n`, each next ends where the
+    /// previous began, the last begins at 0.
+    Sweep { from: usize, to: usize },
+}
+
+/// Cost/shape diagnostics of a schedule, proven by simulation in
+/// [`Schedule::build`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScheduleStats {
+    /// Un-recorded re-forward steps ([`Action::Advance`]) in the backward
+    /// phase.
+    pub replay_advances: usize,
+    /// Recorded re-forward steps ([`Action::Sweep`]); equals `n`.
+    pub swept_steps: usize,
+    /// Peak live snapshot count (initial + dynamic), ≤ the budget.
+    pub max_live: usize,
+    /// Longest single sweep segment, ≤ [`Schedule::leaf`].
+    pub max_sweep_len: usize,
+}
+
+/// A validated revolve schedule for reversing `n` steps with at most
+/// `snapshots` resident states.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Rollout length the schedule reverses.
+    pub n: usize,
+    /// Snapshot budget the schedule was built for.
+    pub snapshots: usize,
+    /// Leaf segment length: sweeps record at most this many steps, so the
+    /// rematerialization buffer is bounded by `leaf` records + states.
+    pub leaf: usize,
+    /// Steps at which the *forward* recording pass must store a snapshot
+    /// (sorted ascending, starts at 0). These are the snapshots live when
+    /// the backward phase begins; the forward pass is not replayed to
+    /// place them.
+    pub init_snaps: Vec<usize>,
+    /// Backward-phase actions, in execution order.
+    pub actions: Vec<Action>,
+    /// Proven cost/shape numbers.
+    pub stats: ScheduleStats,
+}
+
+/// Leaf segment length for an `n`-step rollout: 4 steps (a quarter of the
+/// uniform bench default `ckpt(8)`s segment, so revolve's sweep buffer is
+/// strictly smaller), stretched only when `n` would overflow the DP grid.
+pub fn leaf_for(n: usize) -> usize {
+    LEAF_MIN.max(n.div_ceil(DP_MAX_MACRO))
+}
+
+const LEAF_MIN: usize = 4;
+/// Cap on the macro-grid size so the exact DP stays O(DP_MAX_MACRO² · s)
+/// — a few hundred µs, amortized over a rollout of full PISO steps.
+const DP_MAX_MACRO: usize = 256;
+
+impl Schedule {
+    /// Build and validate the binomial schedule for `n` steps under a
+    /// budget of `snapshots` resident states. `snapshots == 0` is
+    /// rejected; `n == 0` yields an empty (trivially valid) schedule.
+    pub fn build(n: usize, snapshots: usize) -> Result<Schedule, String> {
+        if snapshots == 0 {
+            return Err("revolve schedule requires snapshots >= 1".to_string());
+        }
+        if n == 0 {
+            return Ok(Schedule {
+                n,
+                snapshots,
+                leaf: LEAF_MIN,
+                init_snaps: Vec::new(),
+                actions: Vec::new(),
+                stats: ScheduleStats::default(),
+            });
+        }
+        let leaf = leaf_for(n);
+        let nm = n.div_ceil(leaf); // macro-step count
+        let s_eff = snapshots.min(nm);
+
+        // Exact DP over the macro grid: cost[m][k] = minimal re-forward
+        // macro-steps (advances + recorded sweeps) to reverse m macro
+        // steps with k snapshot slots; split[m][k] = argmin left-part
+        // length. k == 1 degenerates to the quadratic one-snapshot sweep.
+        let mut cost = vec![vec![0usize; s_eff + 1]; nm + 1];
+        let mut split = vec![vec![0usize; s_eff + 1]; nm + 1];
+        for m in 1..=nm {
+            for k in 1..=s_eff {
+                if m == 1 {
+                    cost[m][k] = 1;
+                } else if k == 1 {
+                    cost[m][k] = m * (m - 1) / 2 + m;
+                } else {
+                    let mut best = usize::MAX;
+                    let mut best_mid = 1;
+                    for mid in 1..m {
+                        let v = mid + cost[m - mid][k - 1] + cost[mid][k];
+                        if v < best {
+                            best = v;
+                            best_mid = mid;
+                        }
+                    }
+                    cost[m][k] = best;
+                    split[m][k] = best_mid;
+                }
+            }
+        }
+
+        // Emit raw actions in macro units. The top-level descent is later
+        // absorbed into `init_snaps` (the forward pass stores those
+        // snapshots as it goes), so the first restore/advance chain up to
+        // the deepest pre-sweep snapshot costs nothing at run time.
+        let mut raw: Vec<MacroAction> = vec![MacroAction::Snap(0)];
+        emit(&split, &mut raw, 0, nm, s_eff);
+        raw.push(MacroAction::Drop(0));
+
+        // Macro → real steps: macro i covers real steps i*leaf .. min(n,
+        // (i+1)*leaf); the last leaf may be short.
+        let real = |i: usize| (i * leaf).min(n);
+        let mut actions: Vec<Action> = Vec::with_capacity(raw.len());
+        for a in &raw {
+            actions.push(match *a {
+                MacroAction::Snap(i) => Action::Snapshot { step: real(i) },
+                MacroAction::Drop(i) => Action::Drop { step: real(i) },
+                MacroAction::Restore(i) => Action::Restore { step: real(i) },
+                MacroAction::Adv(b, e) => Action::Advance { from: real(b), to: real(e) },
+                MacroAction::Sweep(b, e) => Action::Sweep { from: real(b), to: real(e) },
+            });
+        }
+
+        // Absorb the initial descent: every Snapshot before the first
+        // Sweep is placed by the forward pass, and the Restore/Advance
+        // chain that positions them is the forward pass itself.
+        let first_sweep = actions
+            .iter()
+            .position(|a| matches!(a, Action::Sweep { .. }))
+            .ok_or_else(|| "revolve schedule emitted no sweeps".to_string())?;
+        let last_snap = actions[..first_sweep]
+            .iter()
+            .rposition(|a| matches!(a, Action::Snapshot { .. }))
+            .ok_or_else(|| "revolve schedule has no pre-sweep snapshot".to_string())?;
+        let init_snaps: Vec<usize> = actions[..=last_snap]
+            .iter()
+            .filter_map(|a| match *a {
+                Action::Snapshot { step } => Some(step),
+                _ => None,
+            })
+            .collect();
+        let actions: Vec<Action> = actions[last_snap + 1..].to_vec();
+
+        let stats = validate(n, snapshots, &init_snaps, &actions)?;
+        debug_assert!(stats.max_sweep_len <= leaf);
+        Ok(Schedule { n, snapshots, leaf, init_snaps, actions, stats })
+    }
+
+    /// The uniform `Checkpoint { every }` layout expressed as a schedule,
+    /// so one executor serves both strategies: snapshots at 0, k, 2k, …
+    /// during the forward pass, then per segment (last first) restore →
+    /// sweep → drop, with no re-advances.
+    pub fn uniform(n: usize, every: usize) -> Result<Schedule, String> {
+        if every == 0 {
+            return Err("uniform schedule requires every >= 1".to_string());
+        }
+        let init_snaps: Vec<usize> = (0..n).step_by(every).collect();
+        let mut actions = Vec::with_capacity(3 * init_snaps.len());
+        for ci in (0..init_snaps.len()).rev() {
+            let from = init_snaps[ci];
+            let to = init_snaps.get(ci + 1).copied().unwrap_or(n);
+            actions.push(Action::Restore { step: from });
+            actions.push(Action::Sweep { from, to });
+            actions.push(Action::Drop { step: from });
+        }
+        let stats = if n == 0 {
+            ScheduleStats::default()
+        } else {
+            validate(n, init_snaps.len(), &init_snaps, &actions)?
+        };
+        Ok(Schedule { n, snapshots: init_snaps.len(), leaf: every, init_snaps, actions, stats })
+    }
+}
+
+enum MacroAction {
+    Snap(usize),
+    Drop(usize),
+    Restore(usize),
+    Adv(usize, usize),
+    Sweep(usize, usize),
+}
+
+/// Recursive emission over macro range `b..e` with `k` snapshot slots.
+/// Precondition: a snapshot is live at `b`. Postcondition: every macro
+/// step in `b..e` swept (descending), snapshot at `b` still live, no
+/// other snapshots leaked.
+fn emit(split: &[Vec<usize>], raw: &mut Vec<MacroAction>, b: usize, e: usize, k: usize) {
+    let m = e - b;
+    if m == 0 {
+        return;
+    }
+    if m == 1 {
+        raw.push(MacroAction::Restore(b));
+        raw.push(MacroAction::Sweep(b, e));
+        return;
+    }
+    if k <= 1 {
+        // one slot: quadratic re-advance from b for each leaf, last first
+        for i in (b..e).rev() {
+            raw.push(MacroAction::Restore(b));
+            if i > b {
+                raw.push(MacroAction::Adv(b, i));
+            }
+            raw.push(MacroAction::Sweep(i, i + 1));
+        }
+        return;
+    }
+    let mid = b + split[m][k];
+    raw.push(MacroAction::Restore(b));
+    raw.push(MacroAction::Adv(b, mid));
+    raw.push(MacroAction::Snap(mid));
+    emit(split, raw, mid, e, k - 1);
+    raw.push(MacroAction::Drop(mid));
+    emit(split, raw, b, mid, k);
+}
+
+/// Simulate a schedule and prove its invariants: restores hit live
+/// snapshots, advances/sweeps start at the current position, the live
+/// count stays within `snapshots`, and the sweeps tile `0..n` exactly
+/// once, descending. Returns the measured stats or a description of the
+/// first violated invariant.
+fn validate(
+    n: usize,
+    snapshots: usize,
+    init_snaps: &[usize],
+    actions: &[Action],
+) -> Result<ScheduleStats, String> {
+    let mut live = vec![false; n + 1];
+    let mut live_count = 0usize;
+    if init_snaps.first() != Some(&0) {
+        return Err("schedule must snapshot step 0 during the forward pass".to_string());
+    }
+    for w in init_snaps.windows(2) {
+        if w[1] <= w[0] {
+            return Err(format!("initial snapshots not ascending: {} then {}", w[0], w[1]));
+        }
+    }
+    for &p in init_snaps {
+        if p >= n.max(1) {
+            return Err(format!("initial snapshot at {p} is past the last step"));
+        }
+        live[p] = true;
+        live_count += 1;
+    }
+    let mut stats = ScheduleStats { max_live: live_count, ..ScheduleStats::default() };
+    if live_count > snapshots {
+        return Err(format!("{live_count} initial snapshots exceed budget {snapshots}"));
+    }
+    let mut pos = n; // forward pass leaves the solver after step n-1
+    let mut next_sweep_end = n;
+    for (i, a) in actions.iter().enumerate() {
+        match *a {
+            Action::Restore { step } => {
+                if step > n || !live[step] {
+                    return Err(format!("action {i}: restore of dead snapshot {step}"));
+                }
+                pos = step;
+            }
+            Action::Advance { from, to } => {
+                if pos != from || from >= to || to > n {
+                    return Err(format!("action {i}: advance {from}..{to} from position {pos}"));
+                }
+                stats.replay_advances += to - from;
+                pos = to;
+            }
+            Action::Snapshot { step } => {
+                if pos != step || step > n {
+                    return Err(format!("action {i}: snapshot at {step} from position {pos}"));
+                }
+                if live[step] {
+                    return Err(format!("action {i}: duplicate snapshot at {step}"));
+                }
+                live[step] = true;
+                live_count += 1;
+                stats.max_live = stats.max_live.max(live_count);
+                if live_count > snapshots {
+                    return Err(format!(
+                        "action {i}: {live_count} live snapshots exceed budget {snapshots}"
+                    ));
+                }
+            }
+            Action::Drop { step } => {
+                if step > n || !live[step] {
+                    return Err(format!("action {i}: drop of dead snapshot {step}"));
+                }
+                live[step] = false;
+                live_count -= 1;
+            }
+            Action::Sweep { from, to } => {
+                if pos != from {
+                    return Err(format!("action {i}: sweep {from}..{to} from position {pos}"));
+                }
+                if to != next_sweep_end || from >= to {
+                    return Err(format!(
+                        "action {i}: sweep {from}..{to} breaks descending coverage (expected end {next_sweep_end})"
+                    ));
+                }
+                next_sweep_end = from;
+                stats.swept_steps += to - from;
+                stats.max_sweep_len = stats.max_sweep_len.max(to - from);
+                // a sweep hands the solver to the adjoint with *final*
+                // boundary values; poison the position so any further
+                // re-stepping must go through a Restore (which reloads
+                // the matching bc snapshot) first
+                pos = usize::MAX;
+            }
+        }
+    }
+    if next_sweep_end != 0 {
+        return Err(format!("sweeps stop at {next_sweep_end}, steps below are never reversed"));
+    }
+    if live_count != 0 {
+        return Err(format!("{live_count} snapshots leaked past the last action"));
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_snapshot_budget_is_an_error() {
+        assert!(Schedule::build(10, 0).is_err());
+        assert!(Schedule::uniform(10, 0).is_err());
+    }
+
+    #[test]
+    fn empty_rollout_yields_empty_schedule() {
+        let s = Schedule::build(0, 4).expect("n=0 is trivially schedulable");
+        assert!(s.init_snaps.is_empty() && s.actions.is_empty());
+    }
+
+    #[test]
+    fn bench_point_meets_the_two_forward_budget() {
+        // the acceptance point: n=64 under 8 snapshots must reverse with
+        // at most 2n re-forward steps (advances + recorded sweeps)
+        let s = Schedule::build(64, 8).expect("DP schedule for (64, 8)");
+        assert_eq!(s.stats.swept_steps, 64);
+        assert!(
+            s.stats.replay_advances + s.stats.swept_steps <= 128,
+            "backward forwards {} + {} exceed 2n",
+            s.stats.replay_advances,
+            s.stats.swept_steps
+        );
+        assert!(s.stats.max_live <= 8);
+        assert!(s.stats.max_sweep_len <= 4);
+        assert_eq!(s.init_snaps.len(), 8);
+    }
+
+    #[test]
+    fn schedules_are_valid_across_an_n_s_grid() {
+        // Schedule::build re-validates internally; this locks the public
+        // contract over awkward shapes (n < s, n = 1, prime n, leaf
+        // stretching past the DP cap).
+        for n in [1usize, 2, 3, 5, 7, 13, 31, 64, 100, 257, 1025, 2000] {
+            for s in [1usize, 2, 3, 8, 16] {
+                let sched = Schedule::build(n, s)
+                    .unwrap_or_else(|e| panic!("build({n}, {s}) failed: {e}"));
+                assert_eq!(sched.stats.swept_steps, n, "({n}, {s}) sweep coverage");
+                assert!(sched.stats.max_live <= s, "({n}, {s}) live {}", sched.stats.max_live);
+                assert!(sched.stats.max_sweep_len <= sched.leaf);
+                assert!(sched.init_snaps.len() <= s);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_layout_matches_checkpoint_semantics() {
+        let s = Schedule::uniform(7, 3).expect("uniform layout is always valid");
+        assert_eq!(s.init_snaps, vec![0, 3, 6]);
+        assert_eq!(s.stats.replay_advances, 0);
+        assert_eq!(s.stats.swept_steps, 7);
+        assert_eq!(s.stats.max_sweep_len, 3);
+    }
+
+    #[test]
+    fn more_snapshots_never_cost_more_recompute() {
+        let mut prev = usize::MAX;
+        for s in [1usize, 2, 4, 8, 16, 32] {
+            let sched = Schedule::build(64, s).expect("valid budget");
+            let cost = sched.stats.replay_advances;
+            assert!(cost <= prev, "s={s} advances {cost} > previous {prev}");
+            prev = cost;
+        }
+    }
+}

@@ -4,14 +4,21 @@
 //! [`TapeStrategy::Full`] keeps every [`StepRecord`] plus every post-step
 //! [`State`] — O(n) full-field memory, the limiter on long 3D rollouts.
 //! [`TapeStrategy::Checkpoint`] keeps a full [`State`] (and boundary-value
-//! snapshot) only every `every` steps and rematerializes the intermediate
-//! records during [`Tape::backward`] by re-stepping from the nearest
-//! checkpoint — O(n/k + k) fields resident at peak. Forward stepping is
-//! deterministic (all Krylov warm starts and the advective-outflow update
-//! derive from the checkpointed state and boundary values), so the
-//! rematerialized records — and therefore the gradients — are bit-for-bit
-//! identical to the full tape's.
+//! snapshot) only every `every` steps — O(n/k + k) fields at peak.
+//! [`TapeStrategy::Revolve`] places at most `snapshots` states by the
+//! binomial (Griewank–Walther) rule ([`super::revolve`]) — O(s + leaf)
+//! fields at a DP-minimal recompute factor, the right trade on long
+//! rollouts where even O(n/k) checkpoints do not fit.
+//!
+//! Both checkpointed strategies rematerialize the skipped records during
+//! the backward sweep by re-stepping from stored snapshots, all through the
+//! single [`Tape::replay_segments`] hook. Forward stepping is deterministic
+//! (all Krylov warm starts and the advective-outflow update derive from the
+//! snapshotted state and boundary values), so the rematerialized records —
+//! and therefore the gradients — are bit-for-bit identical to the full
+//! tape's.
 
+use super::revolve::{Action, Schedule};
 use super::rollout::RolloutGrads;
 use super::step::{backward_step, GradientPaths};
 use crate::mesh::{BcValues, VectorField};
@@ -26,24 +33,91 @@ pub enum TapeStrategy {
     /// records segment-by-segment during the backward sweep (O(n/k + k)
     /// fields, one extra forward pass of compute).
     Checkpoint { every: usize },
+    /// Binomial snapshot placement under a hard budget of `snapshots`
+    /// resident states; the backward sweep follows a precomputed, validated
+    /// [`Schedule`] of restore/advance/snapshot/sweep actions (O(s + leaf)
+    /// fields, a bounded number of extra forward steps).
+    Revolve { snapshots: usize },
 }
 
 impl TapeStrategy {
-    /// Short label for tables and reports (`full`, `ckpt(8)`).
+    /// Validated `Checkpoint` constructor: rejects `every == 0` as an
+    /// error instead of panicking later in [`Tape::record`].
+    pub fn checkpoint(every: usize) -> Result<TapeStrategy, String> {
+        if every == 0 {
+            return Err("checkpoint interval must be >= 1 (uniform:K with K >= 1)".to_string());
+        }
+        Ok(TapeStrategy::Checkpoint { every })
+    }
+
+    /// Validated `Revolve` constructor: rejects a zero snapshot budget.
+    pub fn revolve(snapshots: usize) -> Result<TapeStrategy, String> {
+        if snapshots == 0 {
+            return Err("revolve snapshot budget must be >= 1 (revolve:S with S >= 1)".to_string());
+        }
+        Ok(TapeStrategy::Revolve { snapshots })
+    }
+
+    /// Parse a schedule spec: `full`, `uniform:K`, or `revolve:S`.
+    /// Malformed specs are an `Err` describing the accepted grammar, never
+    /// a panic — this is the CLI/server entry point.
+    pub fn parse(spec: &str) -> Result<TapeStrategy, String> {
+        let s = spec.trim();
+        if s == "full" {
+            return Ok(TapeStrategy::Full);
+        }
+        if let Some(k) = s.strip_prefix("uniform:") {
+            let every = k
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| format!("`uniform:K` needs an unsigned integer K, got `{k}`"))?;
+            return TapeStrategy::checkpoint(every);
+        }
+        if let Some(v) = s.strip_prefix("revolve:") {
+            let snapshots = v
+                .trim()
+                .parse::<usize>()
+                .map_err(|_| format!("`revolve:S` needs an unsigned integer S, got `{v}`"))?;
+            return TapeStrategy::revolve(snapshots);
+        }
+        Err(format!(
+            "unknown schedule `{spec}`: expected `full`, `uniform:K`, or `revolve:S`"
+        ))
+    }
+
+    /// Check the parameters of an already-constructed strategy (e.g. one
+    /// deserialized or built with struct syntax).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            TapeStrategy::Full => Ok(()),
+            TapeStrategy::Checkpoint { every } => TapeStrategy::checkpoint(every).map(|_| ()),
+            TapeStrategy::Revolve { snapshots } => TapeStrategy::revolve(snapshots).map(|_| ()),
+        }
+    }
+
+    /// Short label for tables and reports (`full`, `ckpt(8)`,
+    /// `revolve(8)`).
     pub fn label(&self) -> String {
         match self {
             TapeStrategy::Full => "full".to_string(),
             TapeStrategy::Checkpoint { every } => format!("ckpt({every})"),
+            TapeStrategy::Revolve { snapshots } => format!("revolve({snapshots})"),
         }
     }
 
-    /// Segment length for an `n`-step rollout under this strategy.
+    /// Upper bound on the length of one rematerialized segment (the burst
+    /// of records the backward sweep holds at once) for an `n`-step
+    /// rollout under this strategy.
     pub fn segment(&self, n: usize) -> usize {
         match *self {
             TapeStrategy::Full => n.max(1),
             TapeStrategy::Checkpoint { every } => {
                 assert!(every >= 1, "TapeStrategy::Checkpoint requires every >= 1");
                 every
+            }
+            TapeStrategy::Revolve { snapshots } => {
+                assert!(snapshots >= 1, "TapeStrategy::Revolve requires snapshots >= 1");
+                super::revolve::leaf_for(n)
             }
         }
     }
@@ -53,41 +127,77 @@ impl TapeStrategy {
 #[derive(Clone, Copy, Debug)]
 pub struct TapeBackwardStats {
     /// Largest number of *tape* f64 values resident at any point of the
-    /// sweep: the stored fields plus (checkpoint mode) the largest
-    /// rematerialized segment. Excludes the gradient outputs being
-    /// accumulated (notably the n per-step `dsource` fields of
-    /// [`RolloutGrads`]) — those are the caller's requested artifact and
-    /// identical under every strategy.
+    /// sweep: the stored fields plus (checkpointed modes) the live dynamic
+    /// snapshots and the largest rematerialized segment. Excludes the
+    /// gradient outputs being accumulated (notably the n per-step
+    /// `dsource` fields of [`RolloutGrads`]) — those are the caller's
+    /// requested artifact and identical under every strategy.
     pub peak_resident_f64: usize,
+    /// Forward steps recomputed during the sweep (un-recorded re-advances
+    /// plus recorded segment re-steps). 0 for `Full`, n for `Checkpoint`,
+    /// schedule-dependent (≤ 2n at the bench shapes) for `Revolve`.
+    pub replayed_steps: usize,
+}
+
+/// One rematerialized slice of the rollout, handed to the
+/// [`Tape::replay_segments`] callback in descending segment order.
+/// `records[i]` / `states_after[i]` belong to step `start + i`.
+pub struct ReplaySegment<'a> {
+    /// First step of the segment.
+    pub start: usize,
+    /// Step records for `start..start + records.len()`.
+    pub records: &'a [StepRecord],
+    /// Post-step states aligned with `records`.
+    pub states_after: &'a [State],
+}
+
+/// Memory/recompute accounting of one [`Tape::replay_segments`] pass.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplayStats {
+    /// See [`TapeBackwardStats::peak_resident_f64`].
+    pub peak_resident_f64: usize,
+    /// See [`TapeBackwardStats::replayed_steps`].
+    pub replayed_steps: usize,
 }
 
 /// Tape of a forward rollout under a [`TapeStrategy`].
 pub struct Tape {
     strategy: TapeStrategy,
     n: usize,
-    /// `Full`: one record per step. `Checkpoint`: empty (rematerialized).
+    /// `Full`: one record per step. Checkpointed modes: empty
+    /// (rematerialized).
     records: Vec<StepRecord>,
     /// `Full`: states\[s\] = state after step s (n+1 entries).
-    /// `Checkpoint`: the checkpoint states, aligned with `checkpoint_steps`.
+    /// Checkpointed modes: the snapshot states, aligned with
+    /// `checkpoint_steps`.
     states: Vec<State>,
-    /// `Checkpoint`: the step index each entry of `states` precedes
-    /// (0, k, 2k, …).
+    /// Checkpointed modes: the step index each entry of `states` precedes
+    /// (uniform: 0, k, 2k, …; revolve: the schedule's initial snapshots).
     checkpoint_steps: Vec<usize>,
-    /// `Checkpoint`: boundary values at each checkpoint (the advective
+    /// Checkpointed modes: boundary values at each snapshot (the advective
     /// outflow update mutates them between steps, so re-stepping needs the
     /// values as they were).
     bc_snaps: Vec<Vec<BcValues>>,
-    /// `Checkpoint`: state after the last step (`Full` reads `states[n]`
-    /// instead of storing a second copy).
+    /// Checkpointed modes: state after the last step (`Full` reads
+    /// `states[n]` instead of storing a second copy).
     final_state: Option<State>,
+    /// Checkpointed modes: the validated backward schedule (uniform layout
+    /// for `Checkpoint`, binomial for `Revolve`).
+    schedule: Option<Schedule>,
 }
 
 impl Tape {
     /// Run `n` steps from `state`, recording under `strategy`.
     /// `source_fn(step, state)` supplies the per-step source (e.g. a
-    /// corrector network's output). With `Checkpoint`, `source_fn` must be
-    /// a pure function of `(step, state)` — it is called again during
-    /// [`Tape::backward`] to rematerialize the skipped records.
+    /// corrector network's output). With the checkpointed strategies,
+    /// `source_fn` must be a pure function of `(step, state)` — it is
+    /// called again during [`Tape::backward`] to rematerialize the skipped
+    /// records.
+    ///
+    /// Panics on invalid strategy parameters (`every == 0`,
+    /// `snapshots == 0`); use [`TapeStrategy::checkpoint`] /
+    /// [`TapeStrategy::revolve`] / [`TapeStrategy::parse`] to surface those
+    /// as `Err` at configuration time instead.
     pub fn record(
         solver: &mut PisoSolver,
         state: &mut State,
@@ -103,6 +213,7 @@ impl Tape {
             checkpoint_steps: Vec::new(),
             bc_snaps: Vec::new(),
             final_state: None,
+            schedule: None,
         };
         match strategy {
             TapeStrategy::Full => {
@@ -118,20 +229,45 @@ impl Tape {
                 }
             }
             TapeStrategy::Checkpoint { every } => {
-                assert!(every >= 1, "TapeStrategy::Checkpoint requires every >= 1");
-                for step in 0..n {
-                    if step % every == 0 {
-                        tape.checkpoint_steps.push(step);
-                        tape.states.push(state.clone());
-                        tape.bc_snaps.push(solver.mesh.bc_values.clone());
-                    }
-                    let src = source_fn(step, state);
-                    solver.step(state, &src, None);
-                }
-                tape.final_state = Some(state.clone());
+                let schedule = Schedule::uniform(n, every).unwrap_or_else(|e| {
+                    panic!("TapeStrategy::Checkpoint requires every >= 1: {e}")
+                });
+                tape.record_scheduled(solver, state, schedule, &mut source_fn);
+            }
+            TapeStrategy::Revolve { snapshots } => {
+                let schedule = Schedule::build(n, snapshots).unwrap_or_else(|e| {
+                    panic!("TapeStrategy::Revolve requires snapshots >= 1: {e}")
+                });
+                tape.record_scheduled(solver, state, schedule, &mut source_fn);
             }
         }
         tape
+    }
+
+    /// Forward pass for the checkpointed strategies: store a snapshot at
+    /// each of the schedule's initial snapshot steps, discard everything
+    /// else.
+    fn record_scheduled(
+        &mut self,
+        solver: &mut PisoSolver,
+        state: &mut State,
+        schedule: Schedule,
+        source_fn: &mut impl FnMut(usize, &State) -> VectorField,
+    ) {
+        let mut next_snap = 0usize;
+        for step in 0..self.n {
+            if schedule.init_snaps.get(next_snap) == Some(&step) {
+                self.checkpoint_steps.push(step);
+                self.states.push(state.clone());
+                self.bc_snaps.push(solver.mesh.bc_values.clone());
+                next_snap += 1;
+            }
+            let src = source_fn(step, state);
+            solver.step(state, &src, None);
+        }
+        debug_assert_eq!(next_snap, schedule.init_snaps.len());
+        self.final_state = Some(state.clone());
+        self.schedule = Some(schedule);
     }
 
     /// Number of steps recorded.
@@ -143,6 +279,11 @@ impl Tape {
         self.strategy
     }
 
+    /// The backward schedule (`None` under [`TapeStrategy::Full`]).
+    pub fn schedule(&self) -> Option<&Schedule> {
+        self.schedule.as_ref()
+    }
+
     /// State after the last recorded step.
     pub fn final_state(&self) -> &State {
         self.final_state
@@ -152,7 +293,8 @@ impl Tape {
     }
 
     /// Number of f64 values the tape keeps resident between record and
-    /// backward (excludes the per-segment rematerialization buffers; see
+    /// backward (excludes the per-segment rematerialization buffers and
+    /// dynamic revolve snapshots; see
     /// [`TapeBackwardStats::peak_resident_f64`] for the sweep peak).
     pub fn resident_f64(&self) -> usize {
         let bc: usize = self
@@ -166,14 +308,141 @@ impl Tape {
             + bc
     }
 
+    /// Rematerialize the rollout segment by segment (descending) and hand
+    /// each segment's records to `on_segment` — THE single place
+    /// checkpoint re-stepping happens; every backward consumer (the
+    /// gradient sweep below, the training engine's CNN-tape
+    /// rematerialization) goes through this hook.
+    ///
+    /// Under `Full` the stored records are handed over as one segment and
+    /// nothing is recomputed. Under the checkpointed strategies the
+    /// validated [`Schedule`] drives snapshot restores and re-stepping;
+    /// `source_fn` must be the function passed to [`Tape::record`]. Each
+    /// segment is swept with the solver's boundary values at their
+    /// post-forward state (matching `Full` bit-for-bit), and the solver is
+    /// left at that boundary state on return.
+    pub fn replay_segments(
+        &self,
+        solver: &mut PisoSolver,
+        mut source_fn: impl FnMut(usize, &State) -> VectorField,
+        mut on_segment: impl FnMut(&mut PisoSolver, ReplaySegment<'_>),
+    ) -> ReplayStats {
+        let schedule = match self.schedule.as_ref() {
+            None => {
+                // Full: everything is already resident; one segment.
+                if self.n > 0 {
+                    on_segment(
+                        solver,
+                        ReplaySegment {
+                            start: 0,
+                            records: &self.records,
+                            states_after: &self.states[1..],
+                        },
+                    );
+                }
+                return ReplayStats {
+                    peak_resident_f64: self.resident_f64(),
+                    replayed_steps: 0,
+                };
+            }
+            Some(schedule) => schedule,
+        };
+        // re-stepping advances the outflow boundary values again; save
+        // them so the solver ends where the forward left it
+        let final_bc = solver.mesh.bc_values.clone();
+        let state_f64 = self.states.first().map_or(0, |s| s.len_f64());
+        let bc_f64 = self
+            .bc_snaps
+            .first()
+            .map_or(0, |snap| snap.iter().map(|b| 3 * b.vel.len()).sum::<usize>());
+        let base = self.resident_f64();
+        let mut dynamic: Vec<(usize, State, Vec<BcValues>)> = Vec::new();
+        let mut peak = base;
+        let mut replayed = 0usize;
+        let mut cur: Option<State> = None;
+        for action in &schedule.actions {
+            match *action {
+                Action::Restore { step } => {
+                    // dynamic first: a dropped initial slot may have been
+                    // re-snapshotted at a different point of the recursion
+                    if let Some(d) = dynamic.iter().rev().find(|d| d.0 == step) {
+                        cur = Some(d.1.clone());
+                        solver.mesh.bc_values = d.2.clone();
+                    } else {
+                        let ci = self
+                            .checkpoint_steps
+                            .iter()
+                            .position(|&c| c == step)
+                            .expect("validated schedules restore only live snapshots");
+                        cur = Some(self.states[ci].clone());
+                        solver.mesh.bc_values = self.bc_snaps[ci].clone();
+                    }
+                }
+                Action::Advance { from, to } => {
+                    let st = cur
+                        .as_mut()
+                        .expect("validated schedules restore a snapshot before re-stepping");
+                    for step in from..to {
+                        let src = source_fn(step, st);
+                        solver.step(st, &src, None);
+                    }
+                    replayed += to - from;
+                }
+                Action::Snapshot { step } => {
+                    let st = cur
+                        .as_ref()
+                        .expect("validated schedules restore a snapshot before re-stepping");
+                    dynamic.push((step, st.clone(), solver.mesh.bc_values.clone()));
+                    peak = peak.max(base + dynamic.len() * (state_f64 + bc_f64));
+                }
+                Action::Drop { step } => {
+                    // initial snapshots are owned by the tape and stay
+                    // resident; only dynamic clones are actually freed
+                    if let Some(i) = dynamic.iter().rposition(|d| d.0 == step) {
+                        dynamic.remove(i);
+                    }
+                }
+                Action::Sweep { from, to } => {
+                    let st = cur
+                        .as_mut()
+                        .expect("validated schedules restore a snapshot before re-stepping");
+                    let len = to - from;
+                    let mut recs = Vec::with_capacity(len);
+                    let mut states_after = Vec::with_capacity(len);
+                    for step in from..to {
+                        let src = source_fn(step, st);
+                        let mut rec = StepRecord::empty();
+                        solver.step(st, &src, Some(&mut rec));
+                        recs.push(rec);
+                        states_after.push(st.clone());
+                    }
+                    replayed += len;
+                    let seg_f64 = recs.iter().map(|r| r.len_f64()).sum::<usize>()
+                        + states_after.iter().map(|s| s.len_f64()).sum::<usize>();
+                    peak = peak.max(base + dynamic.len() * (state_f64 + bc_f64) + seg_f64);
+                    // the full-tape backward runs every step's adjoint with
+                    // the solver at its post-forward boundary state; match
+                    // it (the dnu/dbc boundary ops read bc values)
+                    solver.mesh.bc_values = final_bc.clone();
+                    on_segment(
+                        solver,
+                        ReplaySegment { start: from, records: &recs, states_after: &states_after },
+                    );
+                }
+            }
+        }
+        solver.mesh.bc_values = final_bc;
+        ReplayStats { peak_resident_f64: peak, replayed_steps: replayed }
+    }
+
     /// Backpropagate through the rollout. `loss_grad(step, state)` returns
     /// the direct per-step cotangent (∂L/∂u, ∂L/∂p) on the state *after*
     /// step `step` (called once for every `step` in `0..n`, last step
     /// first); return zero fields for steps without loss. `source_fn` must
-    /// be the function passed to [`Tape::record`] (only called under
-    /// `Checkpoint`, to rematerialize). The solver is only mutated for
-    /// checkpoint re-stepping and is left at its post-forward boundary
-    /// state either way.
+    /// be the function passed to [`Tape::record`] (only called under the
+    /// checkpointed strategies, to rematerialize). The solver is only
+    /// mutated for checkpoint re-stepping and is left at its post-forward
+    /// boundary state either way.
     pub fn backward(
         &self,
         solver: &mut PisoSolver,
@@ -189,81 +458,31 @@ impl Tape {
         &self,
         solver: &mut PisoSolver,
         paths: GradientPaths,
-        mut source_fn: impl FnMut(usize, &State) -> VectorField,
+        source_fn: impl FnMut(usize, &State) -> VectorField,
         mut loss_grad: impl FnMut(usize, &State) -> (VectorField, Vec<f64>),
     ) -> (RolloutGrads, TapeBackwardStats) {
         let mut acc = SweepAcc::new(solver);
-        let mut peak_segment = 0usize;
-        match self.strategy {
-            TapeStrategy::Full => {
-                for step in (0..self.n).rev() {
-                    acc.sweep_step(
-                        solver,
-                        &self.records[step],
-                        &self.states[step + 1],
-                        step,
-                        paths,
-                        &mut loss_grad,
-                    );
-                }
+        let replay = self.replay_segments(solver, source_fn, |solver, seg| {
+            for (i, step) in (seg.start..seg.start + seg.records.len()).enumerate().rev() {
+                acc.sweep_step(
+                    solver,
+                    &seg.records[i],
+                    &seg.states_after[i],
+                    step,
+                    paths,
+                    &mut loss_grad,
+                );
             }
-            TapeStrategy::Checkpoint { .. } => {
-                // NOTE: coordinator::engine::episode carries a parallel copy
-                // of this segment-replay scheme (it must also rematerialize
-                // CNN activation tapes and couple the network-input gradient
-                // into the sweep); keep the bc snapshot/restore order in sync.
-                //
-                // re-stepping advances the outflow boundary values again;
-                // save them so the solver ends where the forward left it
-                let final_bc = solver.mesh.bc_values.clone();
-                for ci in (0..self.checkpoint_steps.len()).rev() {
-                    let seg_start = self.checkpoint_steps[ci];
-                    let seg_end = self
-                        .checkpoint_steps
-                        .get(ci + 1)
-                        .copied()
-                        .unwrap_or(self.n);
-                    solver.mesh.bc_values = self.bc_snaps[ci].clone();
-                    let mut st = self.states[ci].clone();
-                    let seg_len = seg_end - seg_start;
-                    let mut recs = Vec::with_capacity(seg_len);
-                    let mut states_after = Vec::with_capacity(seg_len);
-                    for step in seg_start..seg_end {
-                        let src = source_fn(step, &st);
-                        let mut rec = StepRecord::empty();
-                        solver.step(&mut st, &src, Some(&mut rec));
-                        recs.push(rec);
-                        states_after.push(st.clone());
-                    }
-                    // the full-tape backward runs every step's adjoint with
-                    // the solver at its post-forward boundary state; match
-                    // it (the dnu/dbc boundary ops read bc values)
-                    solver.mesh.bc_values = final_bc.clone();
-                    let seg_f64 = recs.iter().map(|r| r.len_f64()).sum::<usize>()
-                        + states_after.iter().map(|s| s.len_f64()).sum::<usize>();
-                    peak_segment = peak_segment.max(seg_f64);
-                    for (i, step) in (seg_start..seg_end).enumerate().rev() {
-                        acc.sweep_step(
-                            solver,
-                            &recs[i],
-                            &states_after[i],
-                            step,
-                            paths,
-                            &mut loss_grad,
-                        );
-                    }
-                }
-                solver.mesh.bc_values = final_bc;
-            }
-        }
+        });
         let stats = TapeBackwardStats {
-            peak_resident_f64: self.resident_f64() + peak_segment,
+            peak_resident_f64: replay.peak_resident_f64,
+            replayed_steps: replay.replayed_steps,
         };
         (acc.finish(), stats)
     }
 }
 
-/// Running accumulator of the backward sweep (shared by both strategies so
+/// Running accumulator of the backward sweep (shared by every strategy so
 /// the chain of operations — and thus the bits — are identical).
 struct SweepAcc {
     du: VectorField,
@@ -401,50 +620,104 @@ mod tests {
         );
     }
 
-    #[test]
-    fn checkpoint_backward_matches_full_bit_for_bit() {
-        // uneven final segment on purpose (n=7, every=3 -> 3+3+1)
+    fn grads_with(strategy: TapeStrategy, n: usize) -> RolloutGrads {
         let (mut solver, state0) = tg_setup(6);
         let ncells = solver.mesh.ncells;
-        let n = 7;
-        let loss = |step: usize, st: &State| {
+        let loss = move |step: usize, st: &State| {
             let mut du = VectorField::zeros(ncells);
             if step == n - 1 {
                 du.comp[0].clone_from(&st.u.comp[0]);
             }
             (du, vec![0.0; ncells])
         };
-        let mut s1 = state0.clone();
-        let full = Tape::record(&mut solver, &mut s1, n, TapeStrategy::Full, |_, _| {
+        let mut s = state0.clone();
+        let tape = Tape::record(&mut solver, &mut s, n, strategy, |_, _| {
             VectorField::zeros(ncells)
         });
-        let g_full = full.backward(
+        tape.backward(
             &mut solver,
             GradientPaths::FULL,
             |_, _| VectorField::zeros(ncells),
             loss,
-        );
-        let mut s2 = state0.clone();
-        let chk = Tape::record(
-            &mut solver,
-            &mut s2,
-            n,
-            TapeStrategy::Checkpoint { every: 3 },
-            |_, _| VectorField::zeros(ncells),
-        );
-        let g_chk = chk.backward(
-            &mut solver,
-            GradientPaths::FULL,
-            |_, _| VectorField::zeros(ncells),
-            loss,
-        );
-        assert_eq!(g_full.du0, g_chk.du0);
-        assert_eq!(g_full.dp0, g_chk.dp0);
-        assert_eq!(g_full.dnu, g_chk.dnu);
-        assert_eq!(g_full.dsource.len(), g_chk.dsource.len());
-        for (a, b) in g_full.dsource.iter().zip(&g_chk.dsource) {
-            assert_eq!(a, b);
+        )
+    }
+
+    fn assert_same_grads(a: &RolloutGrads, b: &RolloutGrads) {
+        assert_eq!(a.du0, b.du0);
+        assert_eq!(a.dp0, b.dp0);
+        assert_eq!(a.dnu, b.dnu);
+        assert_eq!(a.dsource.len(), b.dsource.len());
+        for (x, y) in a.dsource.iter().zip(&b.dsource) {
+            assert_eq!(x, y);
         }
+    }
+
+    #[test]
+    fn checkpoint_backward_matches_full_bit_for_bit() {
+        // uneven final segment on purpose (n=7, every=3 -> 3+3+1)
+        let g_full = grads_with(TapeStrategy::Full, 7);
+        let g_chk = grads_with(TapeStrategy::Checkpoint { every: 3 }, 7);
+        assert_same_grads(&g_full, &g_chk);
+    }
+
+    #[test]
+    fn revolve_backward_matches_full_bit_for_bit() {
+        // 24 steps under a 3-snapshot budget (6 macro steps of leaf 4 >
+        // budget) exercises dynamic re-snapshotting: the binomial recursion
+        // restores, re-advances, and re-places slots during the backward
+        let g_full = grads_with(TapeStrategy::Full, 24);
+        let g_rev = grads_with(TapeStrategy::Revolve { snapshots: 3 }, 24);
+        assert_same_grads(&g_full, &g_rev);
+        // an uneven tail (n=11 is not a leaf multiple) must also match
+        let g_full_tail = grads_with(TapeStrategy::Full, 11);
+        let g_rev_tail = grads_with(TapeStrategy::Revolve { snapshots: 2 }, 11);
+        assert_same_grads(&g_full_tail, &g_rev_tail);
+    }
+
+    #[test]
+    fn revolve_replay_cost_and_peak_are_accounted() {
+        let (mut solver, state0) = tg_setup(6);
+        let ncells = solver.mesh.ncells;
+        let n = 24;
+        let mut s = state0.clone();
+        let tape = Tape::record(
+            &mut solver,
+            &mut s,
+            n,
+            TapeStrategy::Revolve { snapshots: 3 },
+            |_, _| VectorField::zeros(ncells),
+        );
+        let sched = tape.schedule().expect("revolve tapes store their schedule");
+        let expected_replay = sched.stats.replay_advances + sched.stats.swept_steps;
+        let (_, stats) = tape.backward_with_stats(
+            &mut solver,
+            GradientPaths::FULL,
+            |_, _| VectorField::zeros(ncells),
+            |_, _| (VectorField::zeros(ncells), vec![0.0; ncells]),
+        );
+        assert_eq!(stats.replayed_steps, expected_replay);
+        assert!(stats.peak_resident_f64 >= tape.resident_f64());
+    }
+
+    #[test]
+    fn schedule_specs_parse_and_reject() {
+        assert_eq!(TapeStrategy::parse("full"), Ok(TapeStrategy::Full));
+        assert_eq!(
+            TapeStrategy::parse("uniform:8"),
+            Ok(TapeStrategy::Checkpoint { every: 8 })
+        );
+        assert_eq!(
+            TapeStrategy::parse(" revolve:12 "),
+            Ok(TapeStrategy::Revolve { snapshots: 12 })
+        );
+        assert!(TapeStrategy::parse("uniform:0").is_err());
+        assert!(TapeStrategy::parse("revolve:0").is_err());
+        assert!(TapeStrategy::parse("uniform:eight").is_err());
+        assert!(TapeStrategy::parse("binomial:4").is_err());
+        assert!(TapeStrategy::checkpoint(0).is_err());
+        assert!(TapeStrategy::revolve(0).is_err());
+        assert!(TapeStrategy::Checkpoint { every: 0 }.validate().is_err());
+        assert!(TapeStrategy::Revolve { snapshots: 2 }.validate().is_ok());
     }
 
     #[test]
@@ -457,6 +730,20 @@ mod tests {
             &mut state,
             2,
             TapeStrategy::Checkpoint { every: 0 },
+            |_, _| VectorField::zeros(ncells),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "snapshots >= 1")]
+    fn zero_revolve_budget_is_rejected() {
+        let (mut solver, mut state) = tg_setup(4);
+        let ncells = solver.mesh.ncells;
+        let _ = Tape::record(
+            &mut solver,
+            &mut state,
+            2,
+            TapeStrategy::Revolve { snapshots: 0 },
             |_, _| VectorField::zeros(ncells),
         );
     }

@@ -6,26 +6,36 @@
 //! [`experiments::corrector2d`](super::experiments::corrector2d): each
 //! optimizer step runs one unrolled episode per scenario concurrently on the
 //! [`BatchRunner`]'s pool, sums the per-scenario parameter gradients
-//! (scenarios share the network), and takes one Adam step. Episode memory
-//! follows the episode's [`TapeStrategy`](crate::adjoint::TapeStrategy):
-//! under `Checkpoint { every }` the
-//! forward pass stores only every `every`-th state and the backward sweep
-//! rematerializes each segment — solver [`StepRecord`]s *and* CNN
-//! activation tapes — by re-stepping from the nearest checkpoint, so a
-//! length-n episode holds O(n/k + k) instead of O(n) full-field tapes while
-//! producing bit-for-bit the gradients of the eager episode (forward
-//! stepping and the network are deterministic).
+//! (scenarios share the network), and takes one Adam step. Scenarios may
+//! run on *different* meshes: the shared weights evaluate through per-mesh
+//! neighbor tables ([`CnnTables`]), cached once per distinct mesh
+//! fingerprint.
+//!
+//! Episode memory follows the episode's
+//! [`TapeStrategy`](crate::adjoint::TapeStrategy) through
+//! [`Tape`](crate::adjoint::Tape) — the engine owns **no** replay logic of
+//! its own. Segment rematerialization (solver
+//! [`StepRecord`](crate::piso::StepRecord)s *and* CNN
+//! activation tapes) happens inside
+//! [`Tape::replay_segments`](crate::adjoint::Tape::replay_segments): the
+//! episode's `source_fn` recomputes the network forward per re-stepped
+//! step and stashes the activations the sweep callback consumes, so a
+//! length-n episode holds O(n/k + k) (uniform) or O(s + leaf) (revolve)
+//! full-field tapes instead of O(n), while producing bit-for-bit the
+//! gradients of the eager episode (forward stepping and the network are
+//! deterministic).
 
-use crate::adjoint::backward_step;
-use crate::mesh::{BcValues, VectorField};
-use crate::nn::Cnn;
-use crate::piso::{PisoSolver, State, StepRecord};
+use crate::adjoint::{backward_step, Tape, TapeStrategy};
+use crate::mesh::VectorField;
+use crate::nn::{Cnn, CnnTables, CnnTape};
+use crate::piso::{PisoSolver, State};
 use crate::train::{mse_loss_grad, Adam, Optimizer};
 use crate::util::rng::Rng;
+use std::cell::RefCell;
 use std::sync::Mutex;
 
 use super::experiments::corrector2d::{corrector_net, net_input, Corrector2dCfg};
-use super::scenario::{BatchRunner, Scenario, ScenarioRun};
+use super::scenario::{mesh_fingerprint, BatchRunner, Scenario, ScenarioRun};
 
 /// Outcome of a batched corrector training run.
 pub struct BatchTrainResult {
@@ -34,13 +44,25 @@ pub struct BatchTrainResult {
     pub losses: Vec<f64>,
 }
 
+/// Per-step network artifacts rematerialized alongside the solver records:
+/// the featurized input, the activation tape, and the scaled output S_θ.
+struct StepAux {
+    input: Vec<Vec<f64>>,
+    tape: CnnTape,
+    s_theta: VectorField,
+}
+
 /// One unrolled training episode against coarse-aligned reference frames,
 /// with tape memory governed by `cfg.strategy`: forward from
 /// `frames[start]`, per-step MSE loss vs `frames[start + t + 1]`, backward
-/// through solver and network. Returns `(mean loss, ∂L/∂params)`.
+/// through solver and network. `tables` are the network's neighbor tables
+/// on `solver`'s mesh (`&net.tables` when the scenario runs on the
+/// network's home mesh, else [`Cnn::tables_for`]). Returns
+/// `(mean loss, ∂L/∂params)`.
 pub fn episode(
     solver: &mut PisoSolver,
     net: &Cnn,
+    tables: &CnnTables,
     base_source: &VectorField,
     frames: &[VectorField],
     start: usize,
@@ -55,90 +77,67 @@ pub fn episode(
         frames.len()
     );
     let ncells = solver.mesh.ncells;
-    let every = cfg.strategy.segment(unroll);
+
+    // The tape re-evaluates `source_fn` whenever it (re)steps; that is the
+    // single place the network runs forward, so each call also stashes the
+    // activations the backward sweep will need. The stash is bounded by
+    // the strategy's segment length (under `Full` the backward never
+    // re-steps, so the recording pass itself must keep all `unroll`
+    // entries — exactly the eager episode's footprint); sweeps always
+    // refill it right before the segment callback consumes it.
+    let cap = cfg.strategy.segment(unroll).max(1);
+    let stash: RefCell<Vec<(usize, StepAux)>> = RefCell::new(Vec::new());
+    let source_fn = |step: usize, st: &State| -> VectorField {
+        let input = net_input(&st.u);
+        let (out, tape) = net.forward_with(tables, &input);
+        let mut s_theta = VectorField::zeros(ncells);
+        let mut src = base_source.clone();
+        for c in 0..2 {
+            for i in 0..ncells {
+                let v = cfg.output_scale * out[c][i];
+                s_theta.comp[c][i] = v;
+                src.comp[c][i] += v;
+            }
+        }
+        let mut stash = stash.borrow_mut();
+        if stash.len() == cap {
+            stash.remove(0);
+        }
+        stash.push((step, StepAux { input, tape, s_theta }));
+        src
+    };
 
     let mut state = State::zeros(&solver.mesh);
     state.u = frames[start].clone();
+    let tape = Tape::record(solver, &mut state, unroll, cfg.strategy, &source_fn);
 
-    // skeleton forward: store only the checkpoint states (+ boundary
-    // values, which the advective-outflow update advances). With a single
-    // segment (Full, or every >= unroll) the backward's rematerialization
-    // IS the forward, so no skeleton pass is needed at all.
-    //
-    // NOTE: this mirrors adjoint::Tape's Checkpoint backward (which cannot
-    // be reused directly: the sweep here must also rematerialize CNN
-    // activation tapes and add the network-input path to the state
-    // cotangent); keep the bc snapshot/restore order in sync with tape.rs.
-    let mut checkpoints: Vec<(usize, State, Vec<BcValues>)> =
-        vec![(0, state.clone(), solver.mesh.bc_values.clone())];
-    if every < unroll {
-        for t in 0..unroll {
-            if t % every == 0 && t > 0 {
-                checkpoints.push((t, state.clone(), solver.mesh.bc_values.clone()));
-            }
-            let src = source_for(solver, net, base_source, &state, cfg);
-            solver.step(&mut state, &src, None);
-        }
-    }
-    // with a skeleton pass the solver's boundary values have advanced to
-    // their end-of-episode state; each segment's backward_steps must see
-    // them there (like the eager episode's did), not mid-trajectory
-    let final_bc =
-        if every < unroll { Some(solver.mesh.bc_values.clone()) } else { None };
-
-    // backward: segments last-to-first; rematerialize records + CNN tapes
-    // per segment, then sweep it in reverse.
+    // backward: the tape replays segments last-to-first; this sweep adds
+    // the per-step loss cotangent, routes the source gradient through the
+    // network (coupling the network-input path back into the state
+    // cotangent), and chains du/dp across segments.
     let mut total_loss = 0.0;
     let mut dparams = vec![0.0; net.nparams()];
     let mut du = VectorField::zeros(ncells);
     let mut dp = vec![0.0; ncells];
-    for ci in (0..checkpoints.len()).rev() {
-        let (seg_start, cp_state, cp_bc) = &checkpoints[ci];
-        let seg_start = *seg_start;
-        let seg_end =
-            checkpoints.get(ci + 1).map(|c| c.0).unwrap_or(unroll);
-        solver.mesh.bc_values = cp_bc.clone();
-        let mut st = cp_state.clone();
-        let seg = seg_end - seg_start;
-        let mut recs = Vec::with_capacity(seg);
-        let mut inputs = Vec::with_capacity(seg);
-        let mut tapes = Vec::with_capacity(seg);
-        let mut sources = Vec::with_capacity(seg);
-        let mut states_after = Vec::with_capacity(seg);
-        for _t in seg_start..seg_end {
-            let input = net_input(&st.u);
-            let (out, tape) = net.forward(&input);
-            let mut s_theta = VectorField::zeros(ncells);
-            let mut src = base_source.clone();
-            for c in 0..2 {
-                for i in 0..ncells {
-                    let v = cfg.output_scale * out[c][i];
-                    s_theta.comp[c][i] = v;
-                    src.comp[c][i] += v;
-                }
-            }
-            let mut rec = StepRecord::empty();
-            solver.step(&mut st, &src, Some(&mut rec));
-            recs.push(rec);
-            inputs.push(input);
-            tapes.push(tape);
-            sources.push(s_theta);
-            states_after.push(st.clone());
-        }
-        if let Some(fb) = &final_bc {
-            solver.mesh.bc_values = fb.clone();
-        }
-        for (i, t) in (seg_start..seg_end).enumerate().rev() {
-            let (l, mut cot) = mse_loss_grad(2, &states_after[i].u, &frames[start + t + 1]);
+    tape.replay_segments(solver, &source_fn, |solver, seg| {
+        let stash = stash.borrow();
+        for (i, t) in (seg.start..seg.start + seg.records.len()).enumerate().rev() {
+            let aux = stash
+                .iter()
+                .rev()
+                .find(|(s, _)| *s == t)
+                .map(|(_, a)| a)
+                .expect("replay rematerializes a step's activations before its sweep");
+            let (l, mut cot) = mse_loss_grad(2, &seg.states_after[i].u, &frames[start + t + 1]);
             total_loss += l;
             cot.axpy(1.0, &du);
-            let g = backward_step(solver, &recs[i], &cot, &dp, cfg.paths);
+            let g = backward_step(solver, &seg.records[i], &cot, &dp, cfg.paths);
             // source gradient → CNN (with optional divergence modification)
             let ds = if cfg.lambda_div > 0.0 {
                 crate::train::div_gradient_modification(
                     &solver.ctx,
                     &solver.mesh,
-                    &sources[i],
+                    &aux.s_theta,
                     &g.dsource,
                     cfg.lambda_div,
                 )
@@ -148,7 +147,7 @@ pub fn episode(
             let dout: Vec<Vec<f64>> = (0..2)
                 .map(|c| ds.comp[c].iter().map(|v| cfg.output_scale * v).collect())
                 .collect();
-            let (dpar, dins) = net.backward(&inputs[i], &tapes[i], &dout);
+            let (dpar, dins) = net.backward_with(tables, &aux.input, &aux.tape, &dout);
             for (a, b) in dparams.iter_mut().zip(&dpar) {
                 *a += b;
             }
@@ -161,40 +160,20 @@ pub fn episode(
             }
             dp = g.dp_in;
         }
-    }
+    });
     (total_loss / unroll as f64, dparams)
-}
-
-/// The corrector source for one step: base forcing + scaled network output
-/// (activation tape discarded — used by the skeleton forward and
-/// evaluation, where no backward follows).
-fn source_for(
-    solver: &PisoSolver,
-    net: &Cnn,
-    base_source: &VectorField,
-    state: &State,
-    cfg: &Corrector2dCfg,
-) -> VectorField {
-    let ncells = solver.mesh.ncells;
-    let (out, _) = net.forward(&net_input(&state.u));
-    let mut src = base_source.clone();
-    for c in 0..2 {
-        for i in 0..ncells {
-            src.comp[c][i] += cfg.output_scale * out[c][i];
-        }
-    }
-    src
 }
 
 /// Train one shared corrector across a scenario batch: per optimizer step,
 /// one episode per scenario runs concurrently on the runner's pool (each
 /// scenario against its own reference frames), the parameter gradients are
-/// summed, and a single Adam step updates the shared network. All
-/// scenarios must share the coarse mesh (the network's conv tables are
-/// built on it); pair with
-/// [`cavity_reynolds_sweep`](super::scenario::cavity_reynolds_sweep)-style
-/// sweeps. Results are independent of the pool width (episodes only read
-/// shared state; the reduction is in scenario order).
+/// summed, and a single Adam step updates the shared network. Scenarios
+/// may run on different meshes (a cavity + channel mixed curriculum): the
+/// network is seeded on scenario 0's mesh and evaluates elsewhere through
+/// per-mesh [`CnnTables`], built once per distinct mesh fingerprint. Every
+/// mesh must be tap-compatible with the shared weights (same dimension).
+/// Results are independent of the pool width (episodes only read shared
+/// state; the reduction is in scenario order).
 pub fn train_corrector_batch(
     runner: &BatchRunner,
     scenarios: &[Box<dyn Scenario>],
@@ -216,29 +195,36 @@ pub fn train_corrector_batch(
             Mutex::new(r)
         })
         .collect();
-    {
-        // the shared network's conv tables are built on scenario 0's mesh:
-        // every scenario must provide the *same* mesh geometry, not merely
-        // the same cell count (a periodic box and a cavity of equal size
-        // would silently convolve with the wrong neighbor tables)
-        let first = runs[0].lock().expect("run mutex unpoisoned: pool rethrows worker panics");
-        for r in &runs[1..] {
-            let other = r.lock().expect("run mutex unpoisoned: pool rethrows worker panics");
-            assert!(
-                other.solver.mesh.ncells == first.solver.mesh.ncells
-                    && other.solver.mesh.dim == first.solver.mesh.dim
-                    && other.solver.mesh.centers == first.solver.mesh.centers,
-                "batched scenarios must share the coarse mesh ({} vs {})",
-                other.label,
-                first.label
-            );
-        }
-    }
 
     let mut net = corrector_net(
         &runs[0].lock().expect("run mutex unpoisoned: pool rethrows worker panics").solver.mesh,
         cfg.seed,
     );
+    // per-mesh conv-table cache: one table set per distinct mesh geometry
+    // (fingerprint over cell count, dimension, center bits), shared by all
+    // scenarios on that mesh
+    let mut fp_keys: Vec<u64> = Vec::new();
+    let mut table_sets: Vec<CnnTables> = Vec::new();
+    let mut table_idx: Vec<usize> = Vec::with_capacity(runs.len());
+    for r in &runs {
+        let run = r.lock().expect("run mutex unpoisoned: pool rethrows worker panics");
+        let fp = mesh_fingerprint(&run.solver.mesh);
+        match fp_keys.iter().position(|k| *k == fp) {
+            Some(j) => table_idx.push(j),
+            None => {
+                let tables = net.tables_for(&run.solver.mesh).unwrap_or_else(|e| {
+                    panic!(
+                        "scenario `{}` cannot share the batch corrector: {e}",
+                        run.label
+                    )
+                });
+                fp_keys.push(fp);
+                table_sets.push(tables);
+                table_idx.push(fp_keys.len() - 1);
+            }
+        }
+    }
+
     let mut opt = Adam::new(cfg.lr, net.nparams());
     let mut rng = Rng::new(cfg.seed ^ 0x55);
     let mut losses = Vec::new();
@@ -257,6 +243,8 @@ pub fn train_corrector_batch(
                 let cfg_ref = cfg;
                 let frames_ref = frames;
                 let starts_ref = &starts;
+                let tables_ref = &table_sets;
+                let tidx_ref = &table_idx;
                 ctx.run_tasks(nscen, |i| {
                     let mut run =
                         runs[i].lock().expect("run mutex held once per task index");
@@ -264,6 +252,7 @@ pub fn train_corrector_batch(
                     let got = episode(
                         solver,
                         net_ref,
+                        &tables_ref[tidx_ref[i]],
                         source,
                         &frames_ref[i],
                         starts_ref[i],
@@ -298,23 +287,30 @@ pub fn train_corrector_batch(
 
 /// Generate coarse-aligned reference frames for every fine scenario of a
 /// batch, concurrently on the runner's pool: each fine scenario is built
-/// from the registry, warmed up, and resampled onto `coarse_mesh` every
-/// `t_ratio` steps (see
+/// from the registry, warmed up, and resampled onto its own coarse mesh
+/// (`coarse_meshes[i]`, one per fine scenario — mixed-mesh batches resample
+/// each flow onto its own training grid) every `t_ratio` steps (see
 /// [`make_reference_frames`](super::experiments::corrector2d::make_reference_frames)).
 pub fn scenario_reference_frames(
     runner: &BatchRunner,
     fine: &[Box<dyn Scenario>],
-    coarse_mesh: &crate::mesh::Mesh,
+    coarse_meshes: &[crate::mesh::Mesh],
     cfg: &Corrector2dCfg,
 ) -> Vec<Vec<VectorField>> {
     use super::experiments::corrector2d::make_reference_frames;
+    assert_eq!(
+        fine.len(),
+        coarse_meshes.len(),
+        "one coarse mesh per fine scenario"
+    );
     let ctx = runner.ctx();
     let slots: Vec<Mutex<Option<Vec<VectorField>>>> =
         (0..fine.len()).map(|_| Mutex::new(None)).collect();
     ctx.run_tasks(fine.len(), |i| {
         let mut run = fine[i].build();
         run.solver.ctx = ctx.clone();
-        let frames = make_reference_frames(&mut run.solver, &mut run.state, coarse_mesh, cfg);
+        let frames =
+            make_reference_frames(&mut run.solver, &mut run.state, &coarse_meshes[i], cfg);
         *slots[i].lock().expect("slot mutex held once per task index") = Some(frames);
     });
     slots
@@ -330,7 +326,7 @@ pub fn scenario_reference_frames(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::adjoint::{GradientPaths, TapeStrategy};
+    use crate::adjoint::GradientPaths;
     use crate::coordinator::scenario::TaylorGreen;
 
     fn tiny_cfg(strategy: TapeStrategy) -> Corrector2dCfg {
@@ -349,37 +345,57 @@ mod tests {
         }
     }
 
-    /// Checkpointed episodes must reproduce the eager episode's loss and
-    /// parameter gradients exactly (re-stepping is deterministic).
-    #[test]
-    fn checkpointed_episode_matches_full_bit_for_bit() {
-        let scen = TaylorGreen { n: 8, nu: 0.02, dt: 0.02 };
-        let cfg_full = tiny_cfg(TapeStrategy::Full);
-        let cfg_chk = tiny_cfg(TapeStrategy::Checkpoint { every: 2 });
-        // reference frames: a short rollout of the same flow
+    fn rollout_frames(scen: &dyn Scenario, steps: usize) -> (ScenarioRun, Vec<VectorField>) {
         let mut run = scen.build();
         let mut frames = vec![run.state.u.clone()];
-        for _ in 0..6 {
+        for _ in 0..steps {
             let src = run.source.clone();
             run.solver.step(&mut run.state, &src, None);
             frames.push(run.state.u.clone());
         }
-        let net = corrector_net(&run.solver.mesh, 7);
-        let mut s1 = scen.build();
-        let (l_full, g_full) =
-            episode(&mut s1.solver, &net, &s1.source, &frames, 0, 5, &cfg_full);
-        let mut s2 = scen.build();
-        let (l_chk, g_chk) =
-            episode(&mut s2.solver, &net, &s2.source, &frames, 0, 5, &cfg_chk);
-        assert_eq!(l_full, l_chk);
-        assert_eq!(g_full, g_chk);
+        (run, frames)
     }
 
-    /// The same equality on an outflow mesh: the episode's bc
-    /// snapshot/restore copy (see the sync note in `episode`) must keep
-    /// matching `adjoint::Tape`'s on the one mesh class it exists for.
+    /// Checkpointed and revolve episodes must reproduce the eager
+    /// episode's loss and parameter gradients exactly (re-stepping is
+    /// deterministic); this is the engine-level guarantee inherited from
+    /// `Tape::replay_segments` after the port.
     #[test]
-    fn checkpointed_episode_matches_full_with_outflow_bcs() {
+    fn scheduled_episodes_match_full_bit_for_bit() {
+        let scen = TaylorGreen { n: 8, nu: 0.02, dt: 0.02 };
+        let (run, frames) = rollout_frames(&scen, 6);
+        let net = corrector_net(&run.solver.mesh, 7);
+        let mut results = Vec::new();
+        for strategy in [
+            TapeStrategy::Full,
+            TapeStrategy::Checkpoint { every: 2 },
+            TapeStrategy::Revolve { snapshots: 2 },
+        ] {
+            let mut s = scen.build();
+            results.push(episode(
+                &mut s.solver,
+                &net,
+                &net.tables,
+                &s.source,
+                &frames,
+                0,
+                5,
+                &tiny_cfg(strategy),
+            ));
+        }
+        let (l_full, g_full) = &results[0];
+        for (l, g) in &results[1..] {
+            assert_eq!(l_full, l);
+            assert_eq!(g_full, g);
+        }
+    }
+
+    /// The same equality on an outflow mesh: the advective-outflow update
+    /// mutates boundary values between steps, so the tape's bc
+    /// snapshot/restore discipline is what keeps rematerialized segments
+    /// bit-for-bit — the hard determinism case for both schedules.
+    #[test]
+    fn scheduled_episodes_match_full_with_outflow_bcs() {
         use crate::coordinator::scenario::VortexStreet;
         let scen = VortexStreet {
             nx: [4, 3, 6],
@@ -388,63 +404,70 @@ mod tests {
             dt: 0.05,
             target_cfl: 0.8,
         };
-        let mut run = scen.build();
-        let mut frames = vec![run.state.u.clone()];
-        for _ in 0..5 {
-            let src = run.source.clone();
-            run.solver.step(&mut run.state, &src, None);
-            frames.push(run.state.u.clone());
-        }
+        let (run, frames) = rollout_frames(&scen, 5);
         let net = corrector_net(&run.solver.mesh, 11);
-        let mut s1 = scen.build();
-        let (l_full, g_full) = episode(
-            &mut s1.solver,
-            &net,
-            &s1.source,
-            &frames,
-            0,
-            4,
-            &tiny_cfg(TapeStrategy::Full),
-        );
-        let mut s2 = scen.build();
-        let (l_chk, g_chk) = episode(
-            &mut s2.solver,
-            &net,
-            &s2.source,
-            &frames,
-            0,
-            4,
-            &tiny_cfg(TapeStrategy::Checkpoint { every: 2 }),
-        );
-        assert_eq!(l_full, l_chk);
-        assert_eq!(g_full, g_chk);
+        let mut results = Vec::new();
+        for strategy in [
+            TapeStrategy::Full,
+            TapeStrategy::Checkpoint { every: 2 },
+            TapeStrategy::Revolve { snapshots: 2 },
+        ] {
+            let mut s = scen.build();
+            results.push(episode(
+                &mut s.solver,
+                &net,
+                &net.tables,
+                &s.source,
+                &frames,
+                0,
+                4,
+                &tiny_cfg(strategy),
+            ));
+        }
+        let (l_full, g_full) = &results[0];
+        for (l, g) in &results[1..] {
+            assert_eq!(l_full, l);
+            assert_eq!(g_full, g);
+        }
     }
 
-    /// A 1-scenario batch equals two optimizer steps of plain episodes, and
-    /// batch training across 2 scenarios runs and returns finite losses.
+    /// Batch training across 2 same-mesh scenarios runs and returns finite
+    /// losses.
     #[test]
     fn batch_training_runs_across_two_scenarios() {
         let scens: Vec<Box<dyn Scenario>> = vec![
             Box::new(TaylorGreen { n: 8, nu: 0.02, dt: 0.02 }),
             Box::new(TaylorGreen { n: 8, nu: 0.05, dt: 0.02 }),
         ];
-        let frames: Vec<Vec<VectorField>> = scens
-            .iter()
-            .map(|s| {
-                let mut run = s.build();
-                let mut fs = vec![run.state.u.clone()];
-                for _ in 0..6 {
-                    let src = run.source.clone();
-                    run.solver.step(&mut run.state, &src, None);
-                    fs.push(run.state.u.clone());
-                }
-                fs
-            })
-            .collect();
+        let frames: Vec<Vec<VectorField>> =
+            scens.iter().map(|s| rollout_frames(s.as_ref(), 6).1).collect();
         let cfg = tiny_cfg(TapeStrategy::Checkpoint { every: 2 });
         let runner = BatchRunner::new(0).with_threads(2);
         let result = train_corrector_batch(&runner, &scens, &frames, &cfg);
         assert_eq!(result.losses.len(), 2);
         assert!(result.losses.iter().all(|l| l.is_finite()));
+    }
+
+    /// A *mixed-mesh* batch — cavity + periodic box, different cell counts
+    /// and topologies — trains one shared corrector through per-mesh conv
+    /// tables (the one-mesh-per-batch restriction is gone).
+    #[test]
+    fn mixed_mesh_batch_trains_one_shared_corrector() {
+        use crate::coordinator::scenario::LidDrivenCavity;
+        let scens: Vec<Box<dyn Scenario>> = vec![
+            Box::new(LidDrivenCavity { n: 6, re: 100.0, ..Default::default() }),
+            Box::new(TaylorGreen { n: 8, nu: 0.02, dt: 0.02 }),
+        ];
+        let frames: Vec<Vec<VectorField>> =
+            scens.iter().map(|s| rollout_frames(s.as_ref(), 6).1).collect();
+        let cfg = tiny_cfg(TapeStrategy::Revolve { snapshots: 2 });
+        let runner = BatchRunner::new(0).with_threads(2);
+        let result = train_corrector_batch(&runner, &scens, &frames, &cfg);
+        assert_eq!(result.losses.len(), 2);
+        assert!(
+            result.losses.iter().all(|l| l.is_finite()),
+            "mixed-mesh batch produced non-finite losses: {:?}",
+            result.losses
+        );
     }
 }

@@ -133,7 +133,7 @@ pub fn train_corrector2d(
         for _ in 0..cfg.opt_steps_per_stage {
             let start = rng.below(frames.len().saturating_sub(unroll + 1));
             let (loss, dparams) =
-                engine::episode(solver, &net, &zero_src, frames, start, unroll, cfg);
+                engine::episode(solver, &net, &net.tables, &zero_src, frames, start, unroll, cfg);
             let mut params = std::mem::take(&mut net.params);
             opt.step(&mut params, &dparams);
             net.params = params;

@@ -640,8 +640,10 @@ pub struct GradBatchResult {
 
 /// FNV-1a over the mesh geometry (cell count, dimension, center bits):
 /// scenarios on byte-identical geometry — the precondition for treating
-/// per-cell gradients as gradients of one shared field.
-fn mesh_fingerprint(mesh: &Mesh) -> u64 {
+/// per-cell gradients as gradients of one shared field, and the cache key
+/// for per-mesh conv-table sets in mixed-mesh training batches
+/// ([`train_corrector_batch`](super::engine::train_corrector_batch)).
+pub fn mesh_fingerprint(mesh: &Mesh) -> u64 {
     const P: u64 = 0x100000001b3;
     let mut h: u64 = 0xcbf29ce484222325;
     h = (h ^ mesh.ncells as u64).wrapping_mul(P);

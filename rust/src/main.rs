@@ -124,10 +124,30 @@ fn main() {
             let Some(precision) = parse_precision(&args, "train") else {
                 return;
             };
-            let strategy = if every == 0 {
-                TapeStrategy::Full
+            // --schedule full|uniform:K|revolve:S selects the tape memory
+            // strategy; --every K is kept as an alias for uniform:K (0 =
+            // full) and is ignored when --schedule is given
+            let schedule = args.get_or("schedule", "");
+            let strategy = if schedule.is_empty() {
+                if every == 0 {
+                    TapeStrategy::Full
+                } else {
+                    match TapeStrategy::checkpoint(every) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            eprintln!("pict train: invalid --every {every}: {e}");
+                            return;
+                        }
+                    }
+                }
             } else {
-                TapeStrategy::Checkpoint { every }
+                match TapeStrategy::parse(&schedule) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        eprintln!("pict train: invalid --schedule {schedule}: {e}");
+                        return;
+                    }
+                }
             };
             let params: Vec<f64> = args
                 .get_or("params", if kind == "cavity" { "100,400" } else { "0.01,0.03" })
@@ -243,8 +263,11 @@ fn main() {
                 runner.threads()
             );
             println!("generating {} reference frames per scenario...", cfg.n_frames);
-            let coarse_mesh = coarse[0].build().solver.mesh;
-            let frames = scenario_reference_frames(&runner, &fine, &coarse_mesh, &cfg);
+            // one coarse mesh per scenario: mixed-mesh batches resample
+            // each fine flow onto its own training grid
+            let coarse_meshes: Vec<pict::mesh::Mesh> =
+                coarse.iter().map(|s| s.build().solver.mesh).collect();
+            let frames = scenario_reference_frames(&runner, &fine, &coarse_meshes, &cfg);
             println!("batched training ({} optimizer steps)...", cfg.opt_steps_per_stage);
             let result = train_corrector_batch(&runner, &coarse, &frames, &cfg);
             let first = result.losses.first().copied().unwrap_or(f64::NAN);
@@ -287,6 +310,8 @@ fn main() {
             println!("  batch [--steps 10] [--threads N]              run all registered scenarios on one N-worker pool");
             println!("        [--precision mixed]                     f32-storage iterative refinement for the solves");
             println!("  train [--kind cavity] [--params 100,400] [--n 12] [--steps 4]");
+            println!("        [--schedule full|uniform:K|revolve:S]   tape memory: eager, every-K checkpoints, or a");
+            println!("                                                binomial revolve schedule under S snapshots");
             println!("        [--every K] [--iters 10] [--threads N]  train one corrector across a scenario batch");
             println!("        [--probe [--probe-steps 16]]            record+backward gradient batch only (no network)");
             println!("        [--precision mixed]                     mixed forward frames (adjoint stays f64)");

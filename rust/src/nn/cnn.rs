@@ -14,14 +14,47 @@ pub struct LayerCfg {
     pub relu: bool,
 }
 
-/// The CNN: layer configs, shared conv tables per radius, flat parameters.
+/// One mesh's worth of neighborhood tables for a [`Cnn`]: the per-radius
+/// [`ConvTable`]s plus the layer → table mapping. The network's weights
+/// depend only on (cin, cout, taps), so the *same* parameters evaluate on
+/// any mesh of the same dimension through that mesh's `CnnTables` — the
+/// per-mesh cache that lets one shared corrector train across a mixed-mesh
+/// scenario batch.
+pub struct CnnTables {
+    /// Tables deduplicated by radius.
+    pub tables: Vec<ConvTable>,
+    /// Table index per layer.
+    pub table_of: Vec<usize>,
+}
+
+impl CnnTables {
+    /// Build the deduplicated tables for `layers` on `mesh`.
+    fn build(mesh: &Mesh, layers: &[LayerCfg]) -> CnnTables {
+        let mut tables: Vec<ConvTable> = Vec::new();
+        let mut table_of = Vec::with_capacity(layers.len());
+        for l in layers {
+            let ti = match tables.iter().position(|t| t.radius == l.radius) {
+                Some(i) => i,
+                None => {
+                    tables.push(ConvTable::build(mesh, l.radius));
+                    tables.len() - 1
+                }
+            };
+            table_of.push(ti);
+        }
+        CnnTables { tables, table_of }
+    }
+}
+
+/// The CNN: layer configs, home-mesh conv tables, flat parameters.
 pub struct Cnn {
     pub cin: usize,
     pub layers: Vec<LayerCfg>,
     pub convs: Vec<MultiBlockConv>,
-    /// Table index per layer (tables deduplicated by radius).
-    pub table_of: Vec<usize>,
-    pub tables: Vec<ConvTable>,
+    /// Tables of the mesh the network was built on; [`Cnn::forward`] /
+    /// [`Cnn::backward`] use these. For other meshes build a set with
+    /// [`Cnn::tables_for`] and use the `*_with` variants.
+    pub tables: CnnTables,
     pub params: Vec<f64>,
     /// Parameter offset of each layer in `params`.
     pub offsets: Vec<usize>,
@@ -38,22 +71,17 @@ pub struct CnnTape {
 impl Cnn {
     /// Build with He-initialized weights (deterministic via `seed`).
     pub fn new(mesh: &Mesh, cin: usize, layers: Vec<LayerCfg>, seed: u64) -> Cnn {
-        let mut tables = Vec::new();
-        let mut table_of = Vec::new();
+        let tables = CnnTables::build(mesh, &layers);
         let mut convs = Vec::new();
         let mut offsets = Vec::new();
         let mut nparams = 0;
         let mut prev_c = cin;
-        for l in &layers {
-            let ti = match tables.iter().position(|t: &ConvTable| t.radius == l.radius) {
-                Some(i) => i,
-                None => {
-                    tables.push(ConvTable::build(mesh, l.radius));
-                    tables.len() - 1
-                }
+        for (li, l) in layers.iter().enumerate() {
+            let conv = MultiBlockConv {
+                cin: prev_c,
+                cout: l.cout,
+                taps: tables.tables[tables.table_of[li]].taps,
             };
-            table_of.push(ti);
-            let conv = MultiBlockConv { cin: prev_c, cout: l.cout, taps: tables[ti].taps };
             offsets.push(nparams);
             nparams += conv.nweights();
             convs.push(conv);
@@ -70,15 +98,42 @@ impl Cnn {
             }
             // biases stay zero
         }
-        Cnn { cin, layers, convs, table_of, tables, params, offsets }
+        Cnn { cin, layers, convs, tables, params, offsets }
     }
 
     pub fn nparams(&self) -> usize {
         self.params.len()
     }
 
+    /// Build this network's neighborhood tables for another mesh, so the
+    /// shared weights evaluate there ([`Cnn::forward_with`] /
+    /// [`Cnn::backward_with`]). Errs if the mesh is tap-incompatible with
+    /// the weights (a different dimension changes the window size
+    /// (2r+1)^dim and therefore the weight count).
+    pub fn tables_for(&self, mesh: &Mesh) -> Result<CnnTables, String> {
+        let tables = CnnTables::build(mesh, &self.layers);
+        for (li, conv) in self.convs.iter().enumerate() {
+            let got = tables.tables[tables.table_of[li]].taps;
+            if got != conv.taps {
+                return Err(format!(
+                    "layer {li}: mesh gives {got} taps but the weights were built \
+                     for {} (mesh dim {} vs the network's home mesh)",
+                    conv.taps, mesh.dim
+                ));
+            }
+        }
+        Ok(tables)
+    }
+
     /// Forward pass; returns the output channels and the tape.
     pub fn forward(&self, input: &[Vec<f64>]) -> (Vec<Vec<f64>>, CnnTape) {
+        self.forward_with(&self.tables, input)
+    }
+
+    /// [`Cnn::forward`] through an explicit table set (see
+    /// [`Cnn::tables_for`]); `input` channels must be sized for that
+    /// table's mesh.
+    pub fn forward_with(&self, tables: &CnnTables, input: &[Vec<f64>]) -> (Vec<Vec<f64>>, CnnTape) {
         let ncells = input[0].len();
         let mut cur: Vec<Vec<f64>> = input.to_vec();
         let mut pre = Vec::with_capacity(self.layers.len());
@@ -86,7 +141,7 @@ impl Cnn {
         for (li, conv) in self.convs.iter().enumerate() {
             let mut out = vec![vec![0.0; ncells]; conv.cout];
             conv.forward(
-                &self.tables[self.table_of[li]],
+                &tables.tables[tables.table_of[li]],
                 &self.params[self.offsets[li]..],
                 &cur,
                 &mut out,
@@ -114,6 +169,18 @@ impl Cnn {
         tape: &CnnTape,
         doutput: &[Vec<f64>],
     ) -> (Vec<f64>, Vec<Vec<f64>>) {
+        self.backward_with(&self.tables, input, tape, doutput)
+    }
+
+    /// [`Cnn::backward`] through an explicit table set; `tape` must come
+    /// from a [`Cnn::forward_with`] on the same tables.
+    pub fn backward_with(
+        &self,
+        tables: &CnnTables,
+        input: &[Vec<f64>],
+        tape: &CnnTape,
+        doutput: &[Vec<f64>],
+    ) -> (Vec<f64>, Vec<Vec<f64>>) {
         let ncells = input[0].len();
         let mut dparams = vec![0.0; self.params.len()];
         let mut dout: Vec<Vec<f64>> = doutput.to_vec();
@@ -133,7 +200,7 @@ impl Cnn {
             let mut dinput = vec![vec![0.0; ncells]; conv.cin];
             let w_slice = &self.params[self.offsets[li]..];
             conv.backward(
-                &self.tables[self.table_of[li]],
+                &tables.tables[tables.table_of[li]],
                 w_slice,
                 layer_in,
                 &dout,
@@ -227,6 +294,40 @@ mod tests {
                 din[ci][cell]
             );
         }
+    }
+
+    #[test]
+    fn shared_weights_evaluate_on_a_second_mesh() {
+        // one set of weights, two 2D meshes with different topology: the
+        // per-mesh table cache must route each forward/backward through
+        // its own neighbor tables while gradients flow to the shared params
+        let home = gen::periodic_box2d(6, 6, 1.0, 1.0);
+        let other = gen::cavity2d(5, 1.0, 1.0, false);
+        let net = tiny_net(&home);
+        let tables = net.tables_for(&other).expect("same-dim meshes are tap-compatible");
+        let input: Vec<Vec<f64>> =
+            (0..2).map(|c| (0..other.ncells).map(|i| (i + c) as f64 * 0.01).collect()).collect();
+        let (out, tape) = net.forward_with(&tables, &input);
+        assert_eq!(out[0].len(), other.ncells);
+        let cot: Vec<Vec<f64>> = (0..2).map(|_| vec![1.0; other.ncells]).collect();
+        let (dp, din) = net.backward_with(&tables, &input, &tape, &cot);
+        assert_eq!(dp.len(), net.nparams());
+        assert_eq!(din[0].len(), other.ncells);
+        assert!(dp.iter().any(|v| *v != 0.0), "gradients must reach the shared params");
+        // the home tables keep working through the plain entry points
+        let home_input: Vec<Vec<f64>> = (0..2).map(|_| vec![0.1; home.ncells]).collect();
+        let (home_out, _) = net.forward(&home_input);
+        assert_eq!(home_out[0].len(), home.ncells);
+    }
+
+    #[test]
+    fn tap_incompatible_mesh_is_rejected() {
+        let home = gen::periodic_box2d(4, 4, 1.0, 1.0);
+        let net = tiny_net(&home);
+        // a 3D mesh changes (2r+1)^dim: 9 taps -> 27, weights cannot apply
+        let m3 = gen::channel3d([3, 4, 3], [1.0, 1.0, 1.0], 1.0);
+        let err = net.tables_for(&m3).expect_err("3D mesh must be tap-incompatible");
+        assert!(err.contains("taps"), "unexpected error: {err}");
     }
 
     #[test]

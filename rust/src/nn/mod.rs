@@ -7,6 +7,6 @@ pub mod cnn;
 pub mod conv;
 pub mod smagorinsky;
 
-pub use cnn::{Cnn, CnnTape, LayerCfg};
+pub use cnn::{Cnn, CnnTables, CnnTape, LayerCfg};
 pub use conv::{ConvTable, MultiBlockConv};
 pub use smagorinsky::smagorinsky_nu_t;

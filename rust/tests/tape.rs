@@ -67,6 +67,12 @@ fn checkpointed_backward_matches_full_on_taylor_green() {
     let (g_chk, s_chk) = run_with(TapeStrategy::Checkpoint { every: 4 });
     assert_eq!(s_full.u, s_chk.u, "forward trajectory must not depend on the tape");
     assert_grads_equal(&g_full, &g_chk);
+    // n=10 under a 2-snapshot revolve budget re-advances mid-trajectory
+    // during the backward (Restore + Advance before a Sweep), the schedule
+    // shape uniform checkpointing never produces
+    let (g_rev, s_rev) = run_with(TapeStrategy::Revolve { snapshots: 2 });
+    assert_eq!(s_full.u, s_rev.u, "forward trajectory must not depend on the tape");
+    assert_grads_equal(&g_full, &g_rev);
 }
 
 /// Same equality on a multi-block mesh with advective-outflow boundaries
@@ -99,8 +105,11 @@ fn checkpointed_backward_matches_full_with_outflow_bcs() {
     let (g_chk, bc_chk) = run_with(TapeStrategy::Checkpoint { every: 2 });
     assert_grads_equal(&g_full, &g_chk);
     // the backward sweep leaves the solver's boundary state where the
-    // forward put it, under either strategy
+    // forward put it, under any strategy
     assert_eq!(bc_full, bc_chk, "backward must not move the boundary state");
+    let (g_rev, bc_rev) = run_with(TapeStrategy::Revolve { snapshots: 2 });
+    assert_grads_equal(&g_full, &g_rev);
+    assert_eq!(bc_full, bc_rev, "backward must not move the boundary state");
 }
 
 /// Acceptance: at n = 64 steps with every = 8, the checkpointed sweep's
@@ -131,6 +140,47 @@ fn checkpoint_peak_memory_is_4x_below_full_at_n64() {
         "peak fields: checkpoint {chk_peak} vs full {full_peak} (< 4x reduction)"
     );
     assert!(chk_resident < chk_peak, "checkpoint peak includes the live segment");
+}
+
+/// Acceptance: at n = 64 with an 8-snapshot budget, the revolve schedule's
+/// backward peak is strictly below uniform every-8 checkpointing's, its
+/// gradients stay bit-for-bit equal to the full tape's, and it re-steps at
+/// most 2n times (≤ 2 extra forward passes total).
+#[test]
+fn revolve_beats_uniform_checkpointing_at_n64_s8() {
+    let scen = TaylorGreen { n: 8, nu: 0.02, dt: 0.01 };
+    let n = 64;
+    let run_with = |strategy: TapeStrategy| {
+        let ScenarioRun { mut solver, mut state, source, .. } = scen.build();
+        let ncells = solver.mesh.ncells;
+        let tape =
+            Tape::record(&mut solver, &mut state, n, strategy, |_, _| source.clone());
+        let (g, stats) = tape.backward_with_stats(
+            &mut solver,
+            GradientPaths::NONE,
+            |_, _| source.clone(),
+            ke_loss(ncells, n),
+        );
+        (g, stats)
+    };
+    let (g_full, full_stats) = run_with(TapeStrategy::Full);
+    let (g_chk, chk_stats) = run_with(TapeStrategy::Checkpoint { every: 8 });
+    let (g_rev, rev_stats) = run_with(TapeStrategy::Revolve { snapshots: 8 });
+    assert_grads_equal(&g_full, &g_rev);
+    assert_grads_equal(&g_full, &g_chk);
+    assert_eq!(full_stats.replayed_steps, 0, "full tape rematerializes nothing");
+    assert!(
+        rev_stats.peak_resident_f64 < chk_stats.peak_resident_f64,
+        "revolve peak {} must be strictly below uniform every-8 peak {}",
+        rev_stats.peak_resident_f64,
+        chk_stats.peak_resident_f64
+    );
+    assert!(
+        rev_stats.replayed_steps <= 2 * n,
+        "revolve re-stepped {} times, over the 2n = {} budget",
+        rev_stats.replayed_steps,
+        2 * n
+    );
 }
 
 /// A 2-scenario gradient batch (checkpointed, pooled) returns exactly the

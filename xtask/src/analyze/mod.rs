@@ -14,7 +14,10 @@
 //!   blessed deterministic helpers, and f32 storage stays confined to the
 //!   mixed-precision boundary files;
 //! - [`hot_alloc`] — `hot-loop-alloc`: kernel loops do not allocate,
-//!   call-graph-propagated one level.
+//!   call-graph-propagated one level;
+//! - [`replay`] — `replay-containment`: checkpoint re-stepping (restore
+//!   boundary state + step the solver in one fn) is confined to the
+//!   `Tape::replay_segments` hook in `adjoint/tape.rs`.
 //!
 //! Like the lint pass, the whole thing also runs from `cargo test` via
 //! `repo_rust_src_is_analyze_clean`, so the tree cannot drift out of
@@ -24,6 +27,7 @@ mod ctx_flow;
 mod float_det;
 mod hot_alloc;
 mod pairing;
+mod replay;
 
 use crate::callgraph::CallGraph;
 use crate::rules::{collect_rs, Violation};
@@ -50,6 +54,7 @@ pub fn analyze_files(sources: Vec<(String, String)>) -> Report {
     ctx_flow::check(&table, &mut violations);
     float_det::check(&table, &mut violations);
     hot_alloc::check(&table, &graph, &mut violations);
+    replay::check(&table, &mut violations);
     violations.sort_by(|a, b| {
         (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
     });
@@ -326,6 +331,48 @@ mod tests {
                    for _ in 0..n {\n    let v = fresh(n);\n    acc += v[0];\n  }\n  acc\n}";
         let h = hits(&[("linsolve/bicgstab.rs", src)]);
         assert_eq!(h, vec![("linsolve/bicgstab.rs".to_string(), 5, "hot-loop-alloc")]);
+    }
+
+    // --- replay containment ---
+
+    const HAND_ROLLED_REPLAY: &str = "pub fn episode(solver: &mut PisoSolver) {\n\
+        solver.mesh.bc_values = saved.clone();\n\
+        let mut st = cp.clone();\n\
+        for _ in 0..4 { solver.step(&mut st, &src, None); }\n}";
+
+    #[test]
+    fn hand_rolled_replay_outside_the_tape_is_flagged() {
+        let h = hits(&[("coordinator/engine.rs", HAND_ROLLED_REPLAY)]);
+        assert_eq!(h, vec![("coordinator/engine.rs".to_string(), 1, "replay-containment")]);
+        // the hook itself and the forward stepper are exempt
+        assert!(rules(&[("adjoint/tape.rs", HAND_ROLLED_REPLAY)]).is_empty());
+        assert!(rules(&[("piso/stepper.rs", HAND_ROLLED_REPLAY)]).is_empty());
+        // test fns may re-step against gold values
+        let in_test = format!("#[cfg(test)]\nmod tests {{\n{HAND_ROLLED_REPLAY}\n}}");
+        assert!(rules(&[("coordinator/engine.rs", in_test.as_str())]).is_empty());
+    }
+
+    #[test]
+    fn replay_rule_needs_both_halves_in_one_fn() {
+        // restoring alone (a scenario builder) is fine
+        let restore_only = "pub fn build(solver: &mut PisoSolver) {\n\
+            solver.mesh.bc_values = init.clone();\n}";
+        assert!(rules(&[("coordinator/scenario.rs", restore_only)]).is_empty());
+        // stepping alone (a driver loop) is fine
+        let step_only = "pub fn advance(solver: &mut PisoSolver, st: &mut State) {\n\
+            for _ in 0..4 { solver.step(st, &src, None); }\n}";
+        assert!(rules(&[("coordinator/scenario.rs", step_only)]).is_empty());
+        // comparing boundary values is not an assignment
+        let compare = "pub fn same(solver: &mut PisoSolver, st: &mut State) -> bool {\n\
+            solver.step(st, &src, None);\n\
+            solver.mesh.bc_values == saved\n}";
+        assert!(rules(&[("coordinator/scenario.rs", compare)]).is_empty());
+        // a local named bc_values is not the solver's boundary state
+        let local = "pub fn gen(solver: &mut PisoSolver, st: &mut State) {\n\
+            let bc_values = vec![0.0];\n\
+            let _ = bc_values;\n\
+            solver.step(st, &src, None);\n}";
+        assert!(rules(&[("coordinator/scenario.rs", local)]).is_empty());
     }
 
     // --- report plumbing ---

@@ -1,0 +1,77 @@
+//! Rule `replay-containment`.
+//!
+//! The checkpoint-replay contract (PR 9) is that segment rematerialization
+//! lives behind exactly one hook: `Tape::replay_segments` in
+//! `adjoint/tape.rs`. Every backward consumer — the gradient sweep, the
+//! training engine's CNN-tape rematerialization — drives re-stepping
+//! through that hook instead of hand-rolling its own restore/re-step loop.
+//!
+//! The signature of a hand-rolled replay is a single fn that both
+//! *assigns the solver's boundary state* (`….bc_values = …`, the
+//! snapshot-restore half) and *steps the solver* (`.step(…)`, the
+//! re-advance half). Each alone is fine — scenario builders assign
+//! boundary values, drivers step solvers — but together outside the tape
+//! they duplicate the replay scheme, and duplicated replays drift: the
+//! engine's pre-PR-9 copy had to carry a keep-in-sync comment aimed at
+//! tape.rs. `piso/` is exempt (the forward stepper owns the boundary
+//! update itself), as is test code (gold-value rollouts legitimately
+//! re-step).
+
+use crate::rules::Violation;
+use crate::symbols::SymbolTable;
+
+/// Files allowed to restore-and-restep: the single replay hook and the
+/// forward stepper that owns the boundary update.
+const REPLAY_ALLOWED: &[&str] = &["adjoint/tape.rs", "piso/"];
+
+pub fn check(table: &SymbolTable, out: &mut Vec<Violation>) {
+    for f in &table.files {
+        if REPLAY_ALLOWED.iter().any(|p| f.path.starts_with(p)) {
+            continue;
+        }
+        let code = &f.code;
+        for item in &f.parsed.fns {
+            let Some((bs, be)) = item.body else { continue };
+            if f.test[bs] {
+                continue;
+            }
+            let be = be.min(code.len() - 1);
+            let mut assigns_bc = false;
+            let mut steps = false;
+            for i in bs..=be {
+                // `.bc_values =` (field assignment; `==`/`!=`/`let
+                // bc_values` do not count)
+                if code[i].ident() == Some("bc_values")
+                    && i > 0
+                    && code[i - 1].is_punct('.')
+                    && code.get(i + 1).map(|t| t.is_punct('=')).unwrap_or(false)
+                    && !code.get(i + 2).map(|t| t.is_punct('=')).unwrap_or(false)
+                {
+                    assigns_bc = true;
+                }
+                // `.step(` — a solver step call
+                if code[i].ident() == Some("step")
+                    && i > 0
+                    && code[i - 1].is_punct('.')
+                    && code.get(i + 1).map(|t| t.is_punct('(')).unwrap_or(false)
+                {
+                    steps = true;
+                }
+            }
+            if assigns_bc && steps {
+                out.push(Violation {
+                    file: f.path.clone(),
+                    line: item.line,
+                    rule: "replay-containment",
+                    msg: format!(
+                        "fn `{}` restores boundary state and re-steps the solver — a \
+                         hand-rolled checkpoint replay outside adjoint/tape.rs; drive \
+                         rematerialization through Tape::replay_segments so there is \
+                         one replay scheme to keep correct",
+                        item.name
+                    ),
+                });
+            }
+        }
+    }
+}

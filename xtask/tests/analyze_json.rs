@@ -43,7 +43,8 @@ fn human_report_lists_violations_and_exits_nonzero() {
         "[lossy-cast]",
         "[precision-boundary]",
         "[hot-loop-alloc]",
-        "8 violation(s) across 4 files",
+        "[replay-containment]",
+        "9 violation(s) across 5 files",
     ] {
         assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
     }

@@ -1,0 +1,12 @@
+//! Training-engine stand-in for the mini fixture: restores the boundary
+//! snapshot and re-steps the solver in one fn — the seeded
+//! replay-containment violation.
+
+pub fn replay_episode(solver: &mut Solver, cp: &State, saved: &[f64]) -> f64 {
+    solver.mesh.bc_values = saved.to_vec();
+    let mut st = cp.clone();
+    for _ in 0..4 {
+        solver.step(&mut st, None);
+    }
+    st.energy()
+}
