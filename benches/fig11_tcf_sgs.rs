@@ -92,5 +92,6 @@ fn main() {
             ("ablation_div_mod_on", Json::arr_f64(&e_on)),
             ("ablation_div_mod_off", Json::arr_f64(&e_off)),
         ],
-    );
+    )
+    .expect("bench report must be written durably");
 }

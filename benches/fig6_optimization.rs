@@ -87,5 +87,6 @@ fn main() {
             ("nu_final", Json::Num(*visc.nu_history.last().unwrap())),
             ("joint_final_loss", Json::Num(joint.final_loss)),
         ],
-    );
+    )
+    .expect("bench report must be written durably");
 }

@@ -142,5 +142,6 @@ fn main() {
     let _ = fvm::pressure_gradient(&s3.mesh, &st3.p);
     let u_nearwall = field::sample_idw(&s3.mesh, &st3.u.comp[0], s3.mesh.centers[cell0]);
     println!("\nFig 10 proxy: near-step bottom-wall u = {u_nearwall:.3e} (recirculation ⇒ negative)");
-    write_report("fig9_bfs", &[], vec![("rows", Json::Arr(jrows))]);
+    write_report("fig9_bfs", &[], vec![("rows", Json::Arr(jrows))])
+        .expect("bench report must be written durably");
 }

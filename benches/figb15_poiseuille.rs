@@ -64,5 +64,6 @@ fn main() {
         &["grid", "max |u-u_ghia|", "max |v-v_ghia|"],
         &rows,
     );
-    write_report("figb15_poiseuille", &[], vec![("rows", Json::Arr(jrows))]);
+    write_report("figb15_poiseuille", &[], vec![("rows", Json::Arr(jrows))])
+        .expect("bench report must be written durably");
 }

@@ -223,5 +223,6 @@ fn main() {
         &refresh_rows,
     );
 
-    write_report("BENCH_mixed_precision", &all, vec![("rows", Json::Arr(jrows))]);
+    write_report("BENCH_mixed_precision", &all, vec![("rows", Json::Arr(jrows))])
+        .expect("bench report must be written durably");
 }

@@ -103,7 +103,8 @@ fn main() {
         &["system", "threads", "spawn", "pool", "pool/spawn"],
         &pool_rows,
     );
-    write_report("BENCH_par_pool", &all, vec![("rows", Json::Arr(jrows.clone()))]);
+    write_report("BENCH_par_pool", &all, vec![("rows", Json::Arr(jrows.clone()))])
+        .expect("bench report must be written durably");
 
     // --- batch runner: cavity Re sweep, sequential vs one shared pool ---
     let res = [50.0, 100.0, 200.0, 400.0];
@@ -131,5 +132,6 @@ fn main() {
         ("batch_par_s", Json::Num(t_par)),
         ("batch_threads", Json::Num(nt as f64)),
     ]));
-    write_report("par_scaling", &all, vec![("rows", Json::Arr(jrows))]);
+    write_report("par_scaling", &all, vec![("rows", Json::Arr(jrows))])
+        .expect("bench report must be written durably");
 }

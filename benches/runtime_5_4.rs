@@ -63,7 +63,8 @@ fn main() {
     #[cfg(not(feature = "pjrt"))]
     {
         println!("pjrt feature disabled; skipping xla engine comparison");
-        write_report("runtime_5_4", &[r_nn, r_base, r_fine], vec![]);
+        write_report("runtime_5_4", &[r_nn, r_base, r_fine], vec![])
+            .expect("bench report must be written durably");
     }
     #[cfg(feature = "pjrt")]
     if let Ok(mut set) =
@@ -116,10 +117,12 @@ fn main() {
             "runtime_5_4",
             &[rb, rx, r_nn, r_base, r_fine],
             vec![("xla_native_rel_l2", pict::util::json::Json::Num(err))],
-        );
+        )
+        .expect("bench report must be written durably");
     } else {
         println!("artifacts not built; skipping xla engine comparison (run `make artifacts`)");
-        write_report("runtime_5_4", &[r_nn, r_base, r_fine], vec![]);
+        write_report("runtime_5_4", &[r_nn, r_base, r_fine], vec![])
+            .expect("bench report must be written durably");
     }
 
     // --- solver fraction profile (the paper's 70-90% linear-solve claim) ---

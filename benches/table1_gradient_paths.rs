@@ -61,5 +61,6 @@ fn main() {
         &rows,
     );
     println!("\npaper (authors' GPU, s): Adv+P 1.08/6.85/63.2/674 | P 0.69/6.71/157/1611 | Adv 0.78/5.48/52.1/552 | none 0.52/4.39/-/-");
-    write_report("table1_gradient_paths", &[], vec![("rows", Json::Arr(json_rows))]);
+    write_report("table1_gradient_paths", &[], vec![("rows", Json::Arr(json_rows))])
+        .expect("bench report must be written durably");
 }

@@ -83,5 +83,6 @@ fn main() {
         &rows,
     );
     println!("\npaper shape: NN_16 > NN_8 > No-Model in corr; ~10-20x lower MSE at the longest horizon");
-    write_report("table3_vortex_street", &[], vec![("rows", Json::Arr(jrows))]);
+    write_report("table3_vortex_street", &[], vec![("rows", Json::Arr(jrows))])
+        .expect("bench report must be written durably");
 }

@@ -181,5 +181,6 @@ fn main() {
             ("revolve8_peak_f64", Json::Num(rev8.peak as f64)),
             ("revolve8_replayed_steps", Json::Num(rev8.resteps as f64)),
         ],
-    );
+    )
+    .expect("bench report must be written durably");
 }

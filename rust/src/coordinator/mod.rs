@@ -7,10 +7,12 @@ pub mod engine;
 pub mod experiments;
 pub mod references;
 pub mod scenario;
+pub mod sweep;
 
 pub use engine::{train_corrector_batch, BatchTrainResult};
 pub use experiments::*;
 pub use scenario::{
-    builtin_scenarios, reduce_shared, scenario_by_kind, BatchLoss, BatchResult, BatchRunner,
-    GradBatchResult, Scenario, SharedGrads,
+    builtin_scenarios, reduce_shared, reduce_shared_refs, scenario_by_kind, BatchLoss,
+    BatchResult, BatchRunner, GradBatchResult, Scenario, ScenarioError, SharedGrads,
 };
+pub use sweep::{MergedSweep, ShardOutcome, ShardReport, ShardStatus, SweepEntry, SweepSpec};

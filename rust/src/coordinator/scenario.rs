@@ -26,6 +26,18 @@
 //! [`RolloutGrads`] plus, via [`reduce_shared`], batch-reduced gradients
 //! for parameters shared across the batch (ν, source fields, initial
 //! states).
+//!
+//! Every batch is **fault-isolated**: the per-scenario task bodies catch
+//! panics (a poisoned Krylov vector tripping the debug non-finite guard, a
+//! bad mesh spec) and non-finite blowups (divergent residuals, NaN states)
+//! at the task boundary, so one diverging scenario costs exactly its own
+//! slot. The `*_checked` entry points ([`BatchRunner::run_checked`],
+//! [`BatchRunner::advance_checked`], [`BatchRunner::run_gradients_checked`])
+//! surface this as `Result<_, ScenarioError>` per slot in input order; the
+//! plain entry points keep the old all-or-nothing contract by panicking on
+//! the first failed slot. The sweep layer
+//! ([`sweep`](crate::coordinator::sweep)) builds its resumable shard
+//! execution on the checked variants.
 
 use crate::adjoint::{GradientPaths, RolloutGrads, Tape, TapeStrategy};
 use crate::linsolve::Precision;
@@ -400,6 +412,116 @@ pub fn taylor_green_nu_sweep(n: usize, nus: &[f64]) -> Vec<Box<dyn Scenario>> {
         .collect()
 }
 
+/// Why one scenario slot of a batch failed while the other slots completed.
+#[derive(Clone, Debug)]
+pub enum ScenarioError {
+    /// The scenario's build or one of its steps panicked (e.g. the debug
+    /// builds' non-finite Krylov guard, or an invalid mesh spec); the
+    /// original panic message survives the task boundary.
+    Panicked { label: String, message: String },
+    /// The solver diverged without panicking: a step produced a non-finite
+    /// residual/divergence, or the state/gradients contain non-finite
+    /// values. `step` is the step count reached when it was detected.
+    NonFinite { label: String, step: usize, what: String },
+}
+
+impl ScenarioError {
+    /// Label of the scenario that failed.
+    pub fn label(&self) -> &str {
+        match self {
+            ScenarioError::Panicked { label, .. } => label,
+            ScenarioError::NonFinite { label, .. } => label,
+        }
+    }
+}
+
+impl std::fmt::Display for ScenarioError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScenarioError::Panicked { label, message } => {
+                write!(f, "{label}: panicked: {message}")
+            }
+            ScenarioError::NonFinite { label, step, what } => {
+                write!(f, "{label}: non-finite {what} at step {step}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScenarioError {}
+
+/// Best-effort text of a caught panic payload (`panic!` with a string
+/// literal or format arguments covers every panic in this crate).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// First non-finite entry of a state, named for the error message.
+fn state_nonfinite(state: &State) -> Option<String> {
+    for (c, comp) in state.u.comp.iter().enumerate() {
+        if let Some(i) = comp.iter().position(|v| !v.is_finite()) {
+            return Some(format!("state u[{c}][{i}]"));
+        }
+    }
+    if let Some(i) = state.p.iter().position(|v| !v.is_finite()) {
+        return Some(format!("state p[{i}]"));
+    }
+    None
+}
+
+/// First non-finite per-step diagnostic, if any.
+fn stats_nonfinite(st: &StepStats) -> Option<&'static str> {
+    if !st.adv_residual.is_finite() {
+        return Some("advection residual");
+    }
+    if !st.p_residual.is_finite() {
+        return Some("pressure residual");
+    }
+    if !st.max_divergence.is_finite() {
+        return Some("divergence");
+    }
+    None
+}
+
+/// First non-finite gradient entry, named for the error message.
+fn grads_nonfinite(grads: &RolloutGrads) -> Option<String> {
+    if !grads.dnu.is_finite() {
+        return Some("dnu".to_string());
+    }
+    for (c, comp) in grads.du0.comp.iter().enumerate() {
+        if comp.iter().any(|v| !v.is_finite()) {
+            return Some(format!("du0[{c}]"));
+        }
+    }
+    if grads.dp0.iter().any(|v| !v.is_finite()) {
+        return Some("dp0".to_string());
+    }
+    for (s, f) in grads.dsource.iter().enumerate() {
+        if f.comp.iter().any(|comp| comp.iter().any(|v| !v.is_finite())) {
+            return Some(format!("dsource[{s}]"));
+        }
+    }
+    None
+}
+
+/// Collapse checked per-slot results for the panic-on-failure convenience
+/// APIs (the pre-fault-isolation contract).
+fn unwrap_batch<T>(results: Vec<Result<T, ScenarioError>>) -> Vec<T> {
+    results
+        .into_iter()
+        .map(|r| match r {
+            Ok(v) => v,
+            Err(e) => panic!("batch scenario failed: {e}"),
+        })
+        .collect()
+}
+
 /// Outcome of one scenario advanced by the [`BatchRunner`]: final state plus
 /// aggregated per-step diagnostics.
 pub struct BatchResult {
@@ -470,74 +592,140 @@ impl BatchRunner {
     }
 
     /// Build and advance every scenario; results come back in input order.
+    /// Panics on the first failed scenario — the fault-isolating variant is
+    /// [`BatchRunner::run_checked`].
     pub fn run(&self, scenarios: &[Box<dyn Scenario>]) -> Vec<BatchResult> {
-        self.drive(scenarios.len(), |i| scenarios[i].build())
+        unwrap_batch(self.run_checked(scenarios))
     }
 
-    /// Advance pre-built runs (e.g. mid-simulation states).
+    /// Fault-isolated batch: build and advance every scenario, catching
+    /// panics and non-finite blowups at each scenario's task boundary. One
+    /// divergent run costs exactly its own slot (`Err`); every other slot
+    /// completes. Results come back in input order.
+    pub fn run_checked(
+        &self,
+        scenarios: &[Box<dyn Scenario>],
+    ) -> Vec<Result<BatchResult, ScenarioError>> {
+        self.drive_checked(scenarios.len(), |i| scenarios[i].label(), |i| scenarios[i].build())
+    }
+
+    /// Advance pre-built runs (e.g. mid-simulation states). Panics on the
+    /// first failed run — see [`BatchRunner::advance_checked`].
     pub fn advance(&self, runs: Vec<ScenarioRun>) -> Vec<BatchResult> {
+        unwrap_batch(self.advance_checked(runs))
+    }
+
+    /// Fault-isolated [`BatchRunner::advance`]: per-slot results in input
+    /// order, failed runs as `Err` without aborting the batch.
+    pub fn advance_checked(
+        &self,
+        runs: Vec<ScenarioRun>,
+    ) -> Vec<Result<BatchResult, ScenarioError>> {
+        let labels: Vec<String> = runs.iter().map(|r| r.label.clone()).collect();
         let slots: Vec<Mutex<Option<ScenarioRun>>> =
             runs.into_iter().map(|r| Mutex::new(Some(r))).collect();
-        self.drive(slots.len(), |i| {
-            slots[i]
-                .lock()
-                .expect("slot mutex held once per task index")
-                .take()
-                .expect("each run is taken exactly once, by its own task")
-        })
+        self.drive_checked(
+            slots.len(),
+            |i| labels[i].clone(),
+            |i| {
+                slots[i]
+                    .lock()
+                    .expect("slot mutex held once per task index")
+                    .take()
+                    .expect("each run is taken exactly once, by its own task")
+            },
+        )
     }
 
-    fn drive<F>(&self, count: usize, make: F) -> Vec<BatchResult>
+    fn drive_checked<L, F>(
+        &self,
+        count: usize,
+        label: L,
+        make: F,
+    ) -> Vec<Result<BatchResult, ScenarioError>>
     where
+        L: Fn(usize) -> String + Sync,
         F: Fn(usize) -> ScenarioRun + Sync,
     {
         let steps = self.steps;
-        let results: Vec<Mutex<Option<BatchResult>>> =
+        let results: Vec<Mutex<Option<Result<BatchResult, ScenarioError>>>> =
             (0..count).map(|_| Mutex::new(None)).collect();
         // one pool job per scenario; each scenario's solver gets a clone of
         // the same context, so its inner kernels submit nested jobs to the
         // very workers that are not busy advancing other scenarios
         self.ctx.run_tasks(count, |i| {
-            let t0 = Instant::now();
-            let mut run = make(i);
-            run.solver.ctx = self.ctx.clone();
-            if self.precision.is_mixed() {
-                run.solver.cfg.precision = Precision::Mixed;
-            }
-            let mut adv_iters = 0;
-            let mut p_iters = 0;
-            let mut adv_residual = 0.0f64;
-            let mut p_residual = 0.0f64;
-            let mut max_divergence = 0.0f64;
-            let mut last = StepStats::default();
-            for _ in 0..steps {
-                let st = run.solver.step(&mut run.state, &run.source, None);
-                adv_iters += st.adv_iters;
-                p_iters += st.p_iters;
-                adv_residual = adv_residual.max(st.adv_residual);
-                p_residual = p_residual.max(st.p_residual);
-                max_divergence = max_divergence.max(st.max_divergence);
-                last = st;
-            }
-            *results[i].lock().expect("slot mutex held once per task index") =
-                Some(BatchResult {
-                    label: run.label,
-                    state: run.state,
-                    steps,
-                    adv_iters,
-                    p_iters,
-                    adv_residual,
-                    p_residual,
-                    max_divergence,
-                    last,
-                    wall_s: t0.elapsed().as_secs_f64(),
-                });
+            // the catch_unwind is the fault boundary: a panic in build or
+            // step (including one rethrown by a nested kernel job) unwinds
+            // to here and is converted into this slot's Err — it never
+            // reaches the pool's job-level panic propagation
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || -> Result<BatchResult, ScenarioError> {
+                    let t0 = Instant::now();
+                    let mut run = make(i);
+                    run.solver.ctx = self.ctx.clone();
+                    if self.precision.is_mixed() {
+                        run.solver.cfg.precision = Precision::Mixed;
+                    }
+                    let mut adv_iters = 0;
+                    let mut p_iters = 0;
+                    let mut adv_residual = 0.0f64;
+                    let mut p_residual = 0.0f64;
+                    let mut max_divergence = 0.0f64;
+                    let mut last = StepStats::default();
+                    for _ in 0..steps {
+                        let st = run.solver.step(&mut run.state, &run.source, None);
+                        if let Some(what) = stats_nonfinite(&st) {
+                            return Err(ScenarioError::NonFinite {
+                                label: run.label,
+                                step: run.state.step,
+                                what: what.to_string(),
+                            });
+                        }
+                        adv_iters += st.adv_iters;
+                        p_iters += st.p_iters;
+                        adv_residual = adv_residual.max(st.adv_residual);
+                        p_residual = p_residual.max(st.p_residual);
+                        max_divergence = max_divergence.max(st.max_divergence);
+                        last = st;
+                    }
+                    // residuals can stay finite while the state drifts to
+                    // NaN on the very last step; scan it before declaring
+                    // the slot healthy
+                    if let Some(what) = state_nonfinite(&run.state) {
+                        return Err(ScenarioError::NonFinite {
+                            label: run.label,
+                            step: run.state.step,
+                            what,
+                        });
+                    }
+                    Ok(BatchResult {
+                        label: run.label,
+                        state: run.state,
+                        steps,
+                        adv_iters,
+                        p_iters,
+                        adv_residual,
+                        p_residual,
+                        max_divergence,
+                        last,
+                        wall_s: t0.elapsed().as_secs_f64(),
+                    })
+                },
+            ));
+            let res = match outcome {
+                Ok(r) => r,
+                Err(payload) => Err(ScenarioError::Panicked {
+                    label: label(i),
+                    message: panic_message(payload),
+                }),
+            };
+            *results[i].lock().expect("slot mutex held once per task index") = Some(res);
         });
         results
             .into_iter()
             .map(|m| {
                 m.into_inner()
-                    .expect("slot mutex unpoisoned: pool rethrows worker panics")
+                    .expect("slot mutex unpoisoned: task bodies catch their own panics")
                     .expect("batch worker skipped a run")
             })
             .collect()
@@ -670,6 +858,15 @@ pub struct SharedGrads {
 
 /// Reduce per-scenario rollout gradients into shared-parameter gradients.
 pub fn reduce_shared(results: &[GradBatchResult]) -> SharedGrads {
+    let refs: Vec<&GradBatchResult> = results.iter().collect();
+    reduce_shared_refs(&refs)
+}
+
+/// [`reduce_shared`] over borrowed results — the sweep merge reduces
+/// gradients it holds inside per-slot enums without cloning whole states.
+/// The accumulation order is identical to the owned variant (input order,
+/// left fold), so both produce bit-identical sums.
+pub fn reduce_shared_refs(results: &[&GradBatchResult]) -> SharedGrads {
     let dnu = results.iter().map(|r| r.grads.dnu).sum();
     // field gradients only reduce across byte-identical mesh geometry
     // (equal cell counts are not enough: a box and a cavity of the same
@@ -707,44 +904,84 @@ impl BatchRunner {
         paths: GradientPaths,
         loss: &dyn BatchLoss,
     ) -> Vec<GradBatchResult> {
+        unwrap_batch(self.run_gradients_checked(scenarios, strategy, paths, loss))
+    }
+
+    /// Fault-isolated [`BatchRunner::run_gradients`]: panics and non-finite
+    /// losses/states/gradients are caught at each scenario's task boundary,
+    /// so a diverging rollout or a poisoned adjoint costs its own slot
+    /// (`Err`) while every other scenario's gradients come back intact.
+    pub fn run_gradients_checked(
+        &self,
+        scenarios: &[Box<dyn Scenario>],
+        strategy: TapeStrategy,
+        paths: GradientPaths,
+        loss: &dyn BatchLoss,
+    ) -> Vec<Result<GradBatchResult, ScenarioError>> {
         let steps = self.steps;
-        let results: Vec<Mutex<Option<GradBatchResult>>> =
+        let results: Vec<Mutex<Option<Result<GradBatchResult, ScenarioError>>>> =
             (0..scenarios.len()).map(|_| Mutex::new(None)).collect();
         self.ctx.run_tasks(scenarios.len(), |i| {
-            let t0 = Instant::now();
-            let ScenarioRun { label, mut solver, mut state, source } = scenarios[i].build();
-            solver.ctx = self.ctx.clone();
-            let mesh_fp = mesh_fingerprint(&solver.mesh);
-            // record phase
-            let tape =
-                Tape::record(&mut solver, &mut state, steps, strategy, |_, _| source.clone());
-            // backward phase
-            let mut total = 0.0;
-            let (grads, stats) = tape.backward_with_stats(
-                &mut solver,
-                paths,
-                |_, _| source.clone(),
-                |step, st| {
-                    total += loss.loss(i, step, st);
-                    loss.grad(i, step, st)
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || -> Result<GradBatchResult, ScenarioError> {
+                    let t0 = Instant::now();
+                    let ScenarioRun { label, mut solver, mut state, source } =
+                        scenarios[i].build();
+                    solver.ctx = self.ctx.clone();
+                    let mesh_fp = mesh_fingerprint(&solver.mesh);
+                    // record phase
+                    let tape = Tape::record(&mut solver, &mut state, steps, strategy, |_, _| {
+                        source.clone()
+                    });
+                    // backward phase
+                    let mut total = 0.0;
+                    let (grads, stats) = tape.backward_with_stats(
+                        &mut solver,
+                        paths,
+                        |_, _| source.clone(),
+                        |step, st| {
+                            total += loss.loss(i, step, st);
+                            loss.grad(i, step, st)
+                        },
+                    );
+                    if !total.is_finite() {
+                        return Err(ScenarioError::NonFinite {
+                            label,
+                            step: steps,
+                            what: "loss".to_string(),
+                        });
+                    }
+                    if let Some(what) = state_nonfinite(&state) {
+                        return Err(ScenarioError::NonFinite { label, step: steps, what });
+                    }
+                    if let Some(what) = grads_nonfinite(&grads) {
+                        return Err(ScenarioError::NonFinite { label, step: steps, what });
+                    }
+                    Ok(GradBatchResult {
+                        label,
+                        state,
+                        loss: total,
+                        grads,
+                        mesh_fp,
+                        peak_resident_f64: stats.peak_resident_f64,
+                        wall_s: t0.elapsed().as_secs_f64(),
+                    })
                 },
-            );
-            *results[i].lock().expect("slot mutex held once per task index") =
-                Some(GradBatchResult {
-                    label,
-                    state,
-                    loss: total,
-                    grads,
-                    mesh_fp,
-                    peak_resident_f64: stats.peak_resident_f64,
-                    wall_s: t0.elapsed().as_secs_f64(),
-                });
+            ));
+            let res = match outcome {
+                Ok(r) => r,
+                Err(payload) => Err(ScenarioError::Panicked {
+                    label: scenarios[i].label(),
+                    message: panic_message(payload),
+                }),
+            };
+            *results[i].lock().expect("slot mutex held once per task index") = Some(res);
         });
         results
             .into_iter()
             .map(|m| {
                 m.into_inner()
-                    .expect("slot mutex unpoisoned: pool rethrows worker panics")
+                    .expect("slot mutex unpoisoned: task bodies catch their own panics")
                     .expect("gradient batch skipped a scenario")
             })
             .collect()
@@ -791,6 +1028,102 @@ mod tests {
             assert!(r.state.time > 0.0);
             assert!(r.p_iters > 0);
         }
+    }
+
+    /// Scenario whose build panics — the "bad config" failure mode.
+    struct PanicOnBuild;
+
+    impl Scenario for PanicOnBuild {
+        fn kind(&self) -> &'static str {
+            "panic-on-build"
+        }
+        fn label(&self) -> String {
+            "panic-on-build".to_string()
+        }
+        fn build(&self) -> ScenarioRun {
+            panic!("injected build failure")
+        }
+    }
+
+    /// Taylor–Green with a NaN seeded into the initial velocity: the first
+    /// step either trips the debug non-finite Krylov guard (a panic) or
+    /// surfaces non-finite residuals/state (release builds). Either way the
+    /// slot must come back `Err`.
+    struct NanSeed;
+
+    impl Scenario for NanSeed {
+        fn kind(&self) -> &'static str {
+            "nan-seed"
+        }
+        fn label(&self) -> String {
+            "nan-seed".to_string()
+        }
+        fn build(&self) -> ScenarioRun {
+            let mut run = TaylorGreen { n: 8, ..Default::default() }.build();
+            run.state.u.comp[0][3] = f64::NAN;
+            run.label = self.label();
+            run
+        }
+    }
+
+    #[test]
+    fn failing_scenarios_cost_only_their_slot() {
+        let scenarios: Vec<Box<dyn Scenario>> = vec![
+            Box::new(TaylorGreen { n: 8, ..Default::default() }),
+            Box::new(PanicOnBuild),
+            Box::new(NanSeed),
+            Box::new(LidDrivenCavity { n: 8, ..Default::default() }),
+        ];
+        let results = BatchRunner::new(2).with_threads(4).run_checked(&scenarios);
+        assert_eq!(results.len(), 4);
+        let healthy = results[0].as_ref().expect("healthy leading slot completes");
+        assert_eq!(healthy.state.step, 2);
+        match &results[1] {
+            Err(ScenarioError::Panicked { label, message }) => {
+                assert_eq!(label, "panic-on-build");
+                assert!(message.contains("injected build failure"), "{message}");
+            }
+            Err(e) => panic!("slot 1: wrong error kind: {e}"),
+            Ok(_) => panic!("slot 1 must fail"),
+        }
+        match &results[2] {
+            Err(e) => assert_eq!(e.label(), "nan-seed"),
+            Ok(_) => panic!("NaN-seeded scenario must fail its slot"),
+        }
+        let trailing = results[3].as_ref().expect("healthy trailing slot completes");
+        assert_eq!(trailing.state.step, 2);
+        assert_eq!(trailing.label, scenarios[3].label());
+    }
+
+    #[test]
+    fn unchecked_run_panics_on_failed_slot_with_context() {
+        let scenarios: Vec<Box<dyn Scenario>> = vec![Box::new(PanicOnBuild)];
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            BatchRunner::new(1).with_threads(1).run(&scenarios);
+        }));
+        let msg = panic_message(result.expect_err("run() keeps the all-or-nothing contract"));
+        assert!(msg.contains("batch scenario failed"), "{msg}");
+        assert!(msg.contains("injected build failure"), "{msg}");
+    }
+
+    #[test]
+    fn gradient_batch_isolates_a_failing_scenario() {
+        let scenarios: Vec<Box<dyn Scenario>> = vec![
+            Box::new(TaylorGreen { n: 6, nu: 0.02, ..Default::default() }),
+            Box::new(NanSeed),
+        ];
+        let steps = 2;
+        let loss = TerminalKineticEnergy { final_step: steps - 1 };
+        let results = BatchRunner::new(steps).with_threads(2).run_gradients_checked(
+            &scenarios,
+            TapeStrategy::Full,
+            GradientPaths::NONE,
+            &loss,
+        );
+        assert_eq!(results.len(), 2);
+        let ok = results[0].as_ref().expect("healthy scenario keeps its gradients");
+        assert!(ok.loss.is_finite());
+        assert!(results[1].is_err(), "NaN-seeded gradient slot must fail alone");
     }
 
     #[test]

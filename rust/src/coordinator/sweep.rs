@@ -1,0 +1,790 @@
+//! Sharded, resumable sweep execution (ROADMAP item 2).
+//!
+//! A [`SweepSpec`] fixes a scenario grid in canonical order plus the run
+//! configuration (steps, pool width, forward vs gradient mode). The grid is
+//! split into contiguous, near-equal shards by the same deterministic
+//! [`partition`] the kernels use for rows; every invocation with the same
+//! spec plans the same shards, which is what makes independent shard
+//! invocations ("run shard 3 of 8 on this host") and resume possible.
+//!
+//! Each shard runs through the fault-isolated checked batch entry points
+//! ([`BatchRunner::run_checked`] / [`BatchRunner::run_gradients_checked`]),
+//! so one diverging scenario costs exactly its own slot of its own shard.
+//! Shard results — complete per-scenario states, stats, and gradients,
+//! serialized through the bit-exact [`Json`] float round-trip — are written
+//! as one artifact per shard via [`write_json_atomic`] (temp file + atomic
+//! rename): a crashed or interrupted sweep leaves either a valid complete
+//! artifact or none, never a truncated one that reads as done.
+//!
+//! On re-invocation, [`run_shards`] validates each shard artifact (schema,
+//! spec fingerprint, entry count and labels) and skips the valid ones;
+//! missing, truncated, or mismatched artifacts are recomputed. [`merge`]
+//! reloads all shards, reconstructs the full result list in grid order, and
+//! reduces [`SharedGrads`] over that list with the same left fold a
+//! single-process batch uses — so the merged result is bit-for-bit equal to
+//! running the whole grid in one process at the same pool width.
+//!
+//! Within one invocation, shards are claimed off the pool's shared task
+//! counter exactly like scenarios and kernel chunks are — the pool's
+//! work-stealing lifted one level up — and the per-shard scenario batches
+//! nest on the same workers.
+
+use super::scenario::{
+    cavity_reynolds_sweep, channel_nu_sweep, reduce_shared_refs, taylor_green_nu_sweep,
+    BatchResult, BatchRunner, GradBatchResult, Scenario, ScenarioError, SharedGrads,
+    TerminalKineticEnergy,
+};
+use crate::adjoint::{GradientPaths, TapeStrategy};
+use crate::mesh::VectorField;
+use crate::par::partition;
+use crate::piso::{State, StepStats};
+use crate::util::bench::write_json_atomic;
+use crate::util::json::Json;
+use std::io;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Artifact schema tag for per-shard documents.
+const SHARD_SCHEMA: &str = "pict-sweep-shard-v1";
+/// Artifact schema tag for the merged document. Merged documents exclude
+/// wall-clock fields and any shard-count-dependent fields, so merging the
+/// same grid from any shard count produces byte-identical files.
+const MERGED_SCHEMA: &str = "pict-sweep-merged-v1";
+
+/// A deterministic sweep plan: the full scenario grid in canonical order
+/// plus everything that must match between the invocation that wrote a
+/// shard artifact and the one that wants to reuse it.
+pub struct SweepSpec {
+    /// The scenario grid. Order is part of the contract: shard ranges and
+    /// merge order index into it.
+    pub scenarios: Vec<Box<dyn Scenario>>,
+    /// Steps each scenario advances (forward) or records (gradient mode).
+    pub steps: usize,
+    /// Number of shards requested; the effective count is
+    /// `shard_ranges().len()` (fewer when the grid is smaller).
+    pub shards: usize,
+    /// Pool width every shard runs at. Part of the fingerprint: results are
+    /// deterministic *per width*, so artifacts from one width must not be
+    /// merged as if produced at another.
+    pub threads: usize,
+    /// Gradient sweep: record + backward with the terminal-kinetic-energy
+    /// probe loss (full tape, all gradient paths) instead of forward
+    /// advancement.
+    pub grad: bool,
+}
+
+impl SweepSpec {
+    /// Contiguous, near-equal shard ranges over the grid — deterministic,
+    /// and never more shards than scenarios.
+    pub fn shard_ranges(&self) -> Vec<Range<usize>> {
+        partition(self.scenarios.len(), self.shards.max(1))
+    }
+
+    /// FNV-1a over everything a shard artifact must agree on to be reused:
+    /// schema, steps, shard/thread counts, mode, and every scenario label
+    /// in order. Changing any of these invalidates existing artifacts.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        fnv(&mut h, SHARD_SCHEMA.as_bytes());
+        for v in [
+            self.steps as u64,
+            self.shards as u64,
+            self.threads as u64,
+            u64::from(self.grad),
+            self.scenarios.len() as u64,
+        ] {
+            fnv(&mut h, &v.to_le_bytes());
+        }
+        for s in &self.scenarios {
+            fnv(&mut h, s.label().as_bytes());
+            fnv(&mut h, &[0xff]); // label separator: ["ab","c"] != ["a","bc"]
+        }
+        h
+    }
+}
+
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    const P: u64 = 0x0100_0000_01b3;
+    for &b in bytes {
+        *h = (*h ^ u64::from(b)).wrapping_mul(P);
+    }
+}
+
+/// Path of shard `s`'s artifact under the sweep directory.
+pub fn shard_path(dir: &Path, s: usize) -> PathBuf {
+    dir.join(format!("shard-{s:04}.json"))
+}
+
+/// Build the canonical sweep grid for a registry kind + parameter list (the
+/// CLI's `--kind`/`--params` surface). Same arguments, same grid, same
+/// order — the precondition for shard planning and resume across
+/// invocations.
+pub fn grid_for_kind(kind: &str, n: usize, params: &[f64]) -> Result<Vec<Box<dyn Scenario>>, String> {
+    match kind {
+        "cavity" => Ok(cavity_reynolds_sweep(n, params)),
+        "taylor-green" => Ok(taylor_green_nu_sweep(n, params)),
+        "channel" => Ok(channel_nu_sweep([n.max(2), n.max(2), n.max(2) / 2 + 1], params)),
+        other => Err(format!(
+            "unsupported sweep kind `{other}` (expected cavity | taylor-green | channel)"
+        )),
+    }
+}
+
+/// One scenario slot of a sweep: a completed forward result, a completed
+/// gradient result, or the isolated failure that cost exactly this slot.
+pub enum SweepEntry {
+    Forward(BatchResult),
+    Gradient(GradBatchResult),
+    Failed { label: String, error: String },
+}
+
+impl SweepEntry {
+    pub fn label(&self) -> &str {
+        match self {
+            SweepEntry::Forward(r) => &r.label,
+            SweepEntry::Gradient(g) => &g.label,
+            SweepEntry::Failed { label, .. } => label,
+        }
+    }
+}
+
+/// Validity of one shard artifact on disk.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardStatus {
+    /// Parses, matches the spec fingerprint, and carries one entry per
+    /// scenario of its range — safe to skip on resume.
+    Valid,
+    Missing,
+    /// Present but unusable (truncated, wrong fingerprint/shape); the
+    /// reason travels along for `pict sweep status`.
+    Invalid(String),
+}
+
+/// Per-shard outcome of one [`run_shards`] invocation.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardOutcome {
+    /// A valid artifact already existed; the shard was skipped (resume).
+    Skipped,
+    /// The shard was (re)computed and its artifact written; `failures`
+    /// counts slots that came back [`SweepEntry::Failed`].
+    Computed { failures: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct ShardReport {
+    pub shard: usize,
+    pub outcome: ShardOutcome,
+}
+
+/// The fully merged sweep: every scenario slot in grid order, plus the
+/// batch-reduced shared-parameter gradients for gradient sweeps.
+pub struct MergedSweep {
+    pub entries: Vec<SweepEntry>,
+    /// [`reduce_shared_refs`] over the `Gradient` entries in grid order
+    /// (gradient sweeps only; `None` in forward mode).
+    pub shared: Option<SharedGrads>,
+    /// Number of `Failed` slots across the whole grid.
+    pub failures: usize,
+}
+
+/// Run (or resume) the sweep's shards under `dir`. With `only = Some(s)`
+/// exactly shard `s` runs — the N-invocations-on-N-hosts mode; with `None`
+/// all shards run, claimed off the pool's shared task counter so long and
+/// short shards load-balance within this host. Shards whose artifact
+/// validates against the spec are skipped ([`ShardOutcome::Skipped`]);
+/// missing/invalid ones are computed and durably written.
+pub fn run_shards(
+    spec: &SweepSpec,
+    dir: &Path,
+    only: Option<usize>,
+) -> io::Result<Vec<ShardReport>> {
+    let ranges = spec.shard_ranges();
+    let targets: Vec<usize> = match only {
+        Some(s) => {
+            if s >= ranges.len() {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("shard {s} out of range: effective shard count is {}", ranges.len()),
+                ));
+            }
+            vec![s]
+        }
+        None => (0..ranges.len()).collect(),
+    };
+    let fp = spec.fingerprint();
+    let runner = BatchRunner::new(spec.steps).with_threads(spec.threads);
+    let slots: Vec<Mutex<Option<io::Result<ShardReport>>>> =
+        targets.iter().map(|_| Mutex::new(None)).collect();
+    // shard-level tasks nest the per-scenario batch jobs on the same pool;
+    // the artifact write keeps each shard's I/O inside its own task
+    runner.ctx().run_tasks(targets.len(), |k| {
+        let report = run_one_shard(spec, &runner, &ranges, fp, dir, targets[k]);
+        *slots[k].lock().expect("shard slot mutex held once per task index") = Some(report);
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("shard slot mutex unpoisoned: shard bodies return Results")
+                .expect("every claimed shard task fills its slot")
+        })
+        .collect()
+}
+
+/// Skip-or-compute one shard: reuse a valid artifact, otherwise run its
+/// scenario range and durably write the result.
+fn run_one_shard(
+    spec: &SweepSpec,
+    runner: &BatchRunner,
+    ranges: &[Range<usize>],
+    fp: u64,
+    dir: &Path,
+    s: usize,
+) -> io::Result<ShardReport> {
+    if validate_shard(spec, fp, dir, s) == ShardStatus::Valid {
+        return Ok(ShardReport { shard: s, outcome: ShardOutcome::Skipped });
+    }
+    let entries = run_shard_entries(spec, runner, ranges[s].clone());
+    let failures = entries.iter().filter(|e| matches!(e, SweepEntry::Failed { .. })).count();
+    let doc = shard_json(spec, fp, s, ranges.len(), &ranges[s], &entries);
+    write_json_atomic(&shard_path(dir, s), &doc)?;
+    Ok(ShardReport { shard: s, outcome: ShardOutcome::Computed { failures } })
+}
+
+/// Execute one shard's scenario range through the checked batch drives.
+fn run_shard_entries(spec: &SweepSpec, runner: &BatchRunner, range: Range<usize>) -> Vec<SweepEntry> {
+    let indices: Vec<usize> = range.clone().collect();
+    let subset = &spec.scenarios[range];
+    let results: Vec<Result<SweepEntry, ScenarioError>> = if spec.grad {
+        let loss = TerminalKineticEnergy { final_step: spec.steps.saturating_sub(1) };
+        runner
+            .run_gradients_checked(subset, TapeStrategy::Full, GradientPaths::FULL, &loss)
+            .into_iter()
+            .map(|r| r.map(SweepEntry::Gradient))
+            .collect()
+    } else {
+        runner.run_checked(subset).into_iter().map(|r| r.map(SweepEntry::Forward)).collect()
+    };
+    results
+        .into_iter()
+        .zip(indices)
+        .map(|(r, i)| match r {
+            Ok(e) => e,
+            // the planned label (not the error's) keys resume validation,
+            // so a failed slot still lines up with the grid on reload
+            Err(e) => SweepEntry::Failed {
+                label: spec.scenarios[i].label(),
+                error: e.to_string(),
+            },
+        })
+        .collect()
+}
+
+/// Validate every shard artifact of the sweep (for `pict sweep status`).
+pub fn sweep_status(spec: &SweepSpec, dir: &Path) -> Vec<(usize, ShardStatus)> {
+    let fp = spec.fingerprint();
+    (0..spec.shard_ranges().len()).map(|s| (s, validate_shard(spec, fp, dir, s))).collect()
+}
+
+fn validate_shard(spec: &SweepSpec, fp: u64, dir: &Path, s: usize) -> ShardStatus {
+    let path = shard_path(dir, s);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == io::ErrorKind::NotFound => return ShardStatus::Missing,
+        Err(e) => return ShardStatus::Invalid(format!("unreadable: {e}")),
+    };
+    let doc = match Json::parse(&text) {
+        Ok(j) => j,
+        Err(e) => return ShardStatus::Invalid(format!("parse failed (truncated?): {e}")),
+    };
+    match shard_matches(spec, fp, s, &doc) {
+        Ok(()) => ShardStatus::Valid,
+        Err(why) => ShardStatus::Invalid(why),
+    }
+}
+
+fn shard_matches(spec: &SweepSpec, fp: u64, s: usize, doc: &Json) -> Result<(), String> {
+    if doc.get("schema").and_then(Json::as_str) != Some(SHARD_SCHEMA) {
+        return Err("wrong or missing schema tag".to_string());
+    }
+    let want_fp = format!("{fp:016x}");
+    if doc.get("fingerprint").and_then(Json::as_str) != Some(want_fp.as_str()) {
+        return Err("fingerprint mismatch (different grid, steps, threads, shards, or mode)"
+            .to_string());
+    }
+    if doc.get("shard").and_then(Json::as_f64) != Some(s as f64) {
+        return Err("shard index mismatch".to_string());
+    }
+    let ranges = spec.shard_ranges();
+    let range = &ranges[s];
+    let entries = doc
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing scenarios array".to_string())?;
+    if entries.len() != range.len() {
+        return Err(format!("expected {} scenario entries, found {}", range.len(), entries.len()));
+    }
+    for (e, i) in entries.iter().zip(range.clone()) {
+        let want = spec.scenarios[i].label();
+        if e.get("label").and_then(Json::as_str) != Some(want.as_str()) {
+            return Err(format!("entry label mismatch at grid index {i}"));
+        }
+    }
+    Ok(())
+}
+
+/// Load every shard artifact and fold the sweep back together in grid
+/// order. `SharedGrads` are reduced over the reconstructed full result list
+/// with the same left fold a single-process batch uses — summing per-shard
+/// partial sums instead would change float association and break bit-for-bit
+/// equality with the single-process run.
+pub fn merge(spec: &SweepSpec, dir: &Path) -> Result<MergedSweep, String> {
+    let ranges = spec.shard_ranges();
+    let fp = spec.fingerprint();
+    let mut entries: Vec<SweepEntry> = Vec::with_capacity(spec.scenarios.len());
+    for s in 0..ranges.len() {
+        match validate_shard(spec, fp, dir, s) {
+            ShardStatus::Valid => {}
+            ShardStatus::Missing => {
+                return Err(format!("shard {s} artifact missing — run `pict sweep run` first"));
+            }
+            ShardStatus::Invalid(why) => {
+                return Err(format!("shard {s} artifact invalid ({why}) — re-run to recompute"));
+            }
+        }
+        let path = shard_path(dir, s);
+        let text = std::fs::read_to_string(&path).map_err(|e| format!("shard {s}: {e}"))?;
+        let doc = Json::parse(&text).map_err(|e| format!("shard {s}: {e}"))?;
+        let slots = doc
+            .get("scenarios")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("shard {s}: missing scenarios array"))?;
+        for slot in slots {
+            entries.push(entry_from_json(slot, spec.grad).map_err(|e| format!("shard {s}: {e}"))?);
+        }
+    }
+    let failures = entries.iter().filter(|e| matches!(e, SweepEntry::Failed { .. })).count();
+    let shared = if spec.grad {
+        let ok: Vec<&GradBatchResult> = entries
+            .iter()
+            .filter_map(|e| match e {
+                SweepEntry::Gradient(g) => Some(g),
+                _ => None,
+            })
+            .collect();
+        Some(reduce_shared_refs(&ok))
+    } else {
+        None
+    };
+    Ok(MergedSweep { entries, shared, failures })
+}
+
+/// Durably write the merged sweep. The document is deterministic by
+/// construction — wall-clock and shard-count-dependent fields are excluded —
+/// so the CI resume job can byte-compare merged files across shard counts.
+pub fn write_merged(spec: &SweepSpec, merged: &MergedSweep, path: &Path) -> io::Result<()> {
+    let mut fields = vec![
+        ("schema", Json::Str(MERGED_SCHEMA.to_string())),
+        ("mode", Json::Str(mode_tag(spec.grad).to_string())),
+        ("steps", Json::Num(spec.steps as f64)),
+        ("threads", Json::Num(spec.threads as f64)),
+        ("n_scenarios", Json::Num(merged.entries.len() as f64)),
+        ("failures", Json::Num(merged.failures as f64)),
+        (
+            "scenarios",
+            Json::Arr(merged.entries.iter().map(|e| entry_json(e, false)).collect()),
+        ),
+    ];
+    if let Some(shared) = &merged.shared {
+        fields.push(("shared", shared_to_json(shared)));
+    }
+    write_json_atomic(path, &Json::obj(fields))
+}
+
+fn mode_tag(grad: bool) -> &'static str {
+    if grad {
+        "gradient"
+    } else {
+        "forward"
+    }
+}
+
+fn shard_json(
+    spec: &SweepSpec,
+    fp: u64,
+    s: usize,
+    nshards: usize,
+    range: &Range<usize>,
+    entries: &[SweepEntry],
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str(SHARD_SCHEMA.to_string())),
+        ("fingerprint", Json::Str(format!("{fp:016x}"))),
+        ("shard", Json::Num(s as f64)),
+        ("shards", Json::Num(nshards as f64)),
+        ("start", Json::Num(range.start as f64)),
+        ("end", Json::Num(range.end as f64)),
+        ("steps", Json::Num(spec.steps as f64)),
+        ("threads", Json::Num(spec.threads as f64)),
+        ("mode", Json::Str(mode_tag(spec.grad).to_string())),
+        ("scenarios", Json::Arr(entries.iter().map(|e| entry_json(e, true)).collect())),
+    ])
+}
+
+// ---- per-entry serialization --------------------------------------------
+//
+// Shard artifacts carry complete per-scenario results (full states and
+// gradients, not summaries): merge must be able to reconstruct exactly what
+// a single-process batch would have returned. `with_wall` distinguishes the
+// per-shard artifact (keeps wall_s for diagnostics) from the merged
+// document (drops it for byte-determinism).
+
+fn entry_json(e: &SweepEntry, with_wall: bool) -> Json {
+    match e {
+        SweepEntry::Forward(r) => {
+            let mut fields = vec![
+                ("label", Json::Str(r.label.clone())),
+                ("ok", Json::Bool(true)),
+                ("steps", Json::Num(r.steps as f64)),
+                ("adv_iters", Json::Num(r.adv_iters as f64)),
+                ("p_iters", Json::Num(r.p_iters as f64)),
+                ("adv_residual", Json::Num(r.adv_residual)),
+                ("p_residual", Json::Num(r.p_residual)),
+                ("max_divergence", Json::Num(r.max_divergence)),
+                ("last", stats_to_json(&r.last)),
+                ("state", state_to_json(&r.state)),
+            ];
+            if with_wall {
+                fields.push(("wall_s", Json::Num(r.wall_s)));
+            }
+            Json::obj(fields)
+        }
+        SweepEntry::Gradient(g) => {
+            let mut fields = vec![
+                ("label", Json::Str(g.label.clone())),
+                ("ok", Json::Bool(true)),
+                ("loss", Json::Num(g.loss)),
+                ("mesh_fp", Json::Str(format!("{:016x}", g.mesh_fp))),
+                ("peak_resident_f64", Json::Num(g.peak_resident_f64 as f64)),
+                ("state", state_to_json(&g.state)),
+                ("grads", grads_to_json(&g.grads)),
+            ];
+            if with_wall {
+                fields.push(("wall_s", Json::Num(g.wall_s)));
+            }
+            Json::obj(fields)
+        }
+        SweepEntry::Failed { label, error } => Json::obj(vec![
+            ("label", Json::Str(label.clone())),
+            ("ok", Json::Bool(false)),
+            ("error", Json::Str(error.clone())),
+        ]),
+    }
+}
+
+fn entry_from_json(j: &Json, grad: bool) -> Result<SweepEntry, String> {
+    let label = j
+        .get("label")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "entry missing label".to_string())?
+        .to_string();
+    if j.get("ok") != Some(&Json::Bool(true)) {
+        let error =
+            j.get("error").and_then(Json::as_str).unwrap_or("unrecorded failure").to_string();
+        return Ok(SweepEntry::Failed { label, error });
+    }
+    let state = state_from_json(j.get("state").ok_or_else(|| "entry missing state".to_string())?)?;
+    let wall_s = j.get("wall_s").and_then(Json::as_f64).unwrap_or(0.0);
+    if grad {
+        let mesh_fp_hex = j
+            .get("mesh_fp")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "entry missing mesh_fp".to_string())?;
+        Ok(SweepEntry::Gradient(GradBatchResult {
+            label,
+            state,
+            loss: f64_field(j, "loss")?,
+            grads: grads_from_json(
+                j.get("grads").ok_or_else(|| "entry missing grads".to_string())?,
+            )?,
+            mesh_fp: u64::from_str_radix(mesh_fp_hex, 16)
+                .map_err(|e| format!("bad mesh_fp `{mesh_fp_hex}`: {e}"))?,
+            peak_resident_f64: usize_field(j, "peak_resident_f64")?,
+            wall_s,
+        }))
+    } else {
+        Ok(SweepEntry::Forward(BatchResult {
+            label,
+            state,
+            steps: usize_field(j, "steps")?,
+            adv_iters: usize_field(j, "adv_iters")?,
+            p_iters: usize_field(j, "p_iters")?,
+            adv_residual: f64_field(j, "adv_residual")?,
+            p_residual: f64_field(j, "p_residual")?,
+            max_divergence: f64_field(j, "max_divergence")?,
+            last: stats_from_json(j.get("last").ok_or_else(|| "entry missing last".to_string())?)?,
+            wall_s,
+        }))
+    }
+}
+
+fn f64_field(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key).and_then(Json::as_f64).ok_or_else(|| format!("missing numeric field {key}"))
+}
+
+fn usize_field(j: &Json, key: &str) -> Result<usize, String> {
+    Ok(f64_field(j, key)? as usize)
+}
+
+fn state_to_json(s: &State) -> Json {
+    Json::obj(vec![
+        ("step", Json::Num(s.step as f64)),
+        ("time", Json::Num(s.time)),
+        ("u", field_to_json(&s.u)),
+        ("p", Json::arr_f64(&s.p)),
+    ])
+}
+
+fn state_from_json(j: &Json) -> Result<State, String> {
+    Ok(State {
+        u: field_from_json(j.get("u").ok_or_else(|| "state missing u".to_string())?)?,
+        p: f64s_from_json(j.get("p").ok_or_else(|| "state missing p".to_string())?)?,
+        time: f64_field(j, "time")?,
+        step: usize_field(j, "step")?,
+    })
+}
+
+fn stats_to_json(st: &StepStats) -> Json {
+    Json::obj(vec![
+        ("dt", Json::Num(st.dt)),
+        ("adv_iters", Json::Num(st.adv_iters as f64)),
+        ("p_iters", Json::Num(st.p_iters as f64)),
+        ("adv_residual", Json::Num(st.adv_residual)),
+        ("p_residual", Json::Num(st.p_residual)),
+        ("max_divergence", Json::Num(st.max_divergence)),
+    ])
+}
+
+fn stats_from_json(j: &Json) -> Result<StepStats, String> {
+    Ok(StepStats {
+        dt: f64_field(j, "dt")?,
+        adv_iters: usize_field(j, "adv_iters")?,
+        p_iters: usize_field(j, "p_iters")?,
+        adv_residual: f64_field(j, "adv_residual")?,
+        p_residual: f64_field(j, "p_residual")?,
+        max_divergence: f64_field(j, "max_divergence")?,
+    })
+}
+
+fn grads_to_json(g: &crate::adjoint::RolloutGrads) -> Json {
+    Json::obj(vec![
+        ("dnu", Json::Num(g.dnu)),
+        ("du0", field_to_json(&g.du0)),
+        ("dp0", Json::arr_f64(&g.dp0)),
+        ("dsource", Json::Arr(g.dsource.iter().map(field_to_json).collect())),
+        (
+            "dbc",
+            Json::Arr(
+                g.dbc
+                    .iter()
+                    .map(|patch| Json::Arr(patch.iter().map(|v| Json::arr_f64(&v[..])).collect()))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn grads_from_json(j: &Json) -> Result<crate::adjoint::RolloutGrads, String> {
+    let dsource = j
+        .get("dsource")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "grads missing dsource".to_string())?
+        .iter()
+        .map(field_from_json)
+        .collect::<Result<Vec<_>, _>>()?;
+    let mut dbc = Vec::new();
+    for patch in j
+        .get("dbc")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "grads missing dbc array".to_string())?
+    {
+        let rows = patch.as_arr().ok_or_else(|| "dbc patch must be an array".to_string())?;
+        let mut out = Vec::with_capacity(rows.len());
+        for row in rows {
+            let v = f64s_from_json(row)?;
+            if v.len() != 3 {
+                return Err("dbc row must have 3 components".to_string());
+            }
+            out.push([v[0], v[1], v[2]]);
+        }
+        dbc.push(out);
+    }
+    Ok(crate::adjoint::RolloutGrads {
+        du0: field_from_json(j.get("du0").ok_or_else(|| "grads missing du0".to_string())?)?,
+        dp0: f64s_from_json(j.get("dp0").ok_or_else(|| "grads missing dp0".to_string())?)?,
+        dsource,
+        dnu: f64_field(j, "dnu")?,
+        dbc,
+    })
+}
+
+fn shared_to_json(s: &SharedGrads) -> Json {
+    let mut fields = vec![("dnu", Json::Num(s.dnu))];
+    if let Some(du0) = &s.du0 {
+        fields.push(("du0", field_to_json(du0)));
+    }
+    if let Some(ds) = &s.dsource {
+        fields.push(("dsource", Json::Arr(ds.iter().map(field_to_json).collect())));
+    }
+    Json::obj(fields)
+}
+
+fn field_to_json(f: &VectorField) -> Json {
+    Json::Arr(f.comp.iter().map(|c| Json::arr_f64(&c[..])).collect())
+}
+
+fn field_from_json(j: &Json) -> Result<VectorField, String> {
+    let comps = j
+        .as_arr()
+        .ok_or_else(|| "vector field must be an array of 3 component arrays".to_string())?;
+    if comps.len() != 3 {
+        return Err(format!("vector field has {} components, expected 3", comps.len()));
+    }
+    let mut out = VectorField { comp: [Vec::new(), Vec::new(), Vec::new()] };
+    for (c, comp) in comps.iter().enumerate() {
+        out.comp[c] = f64s_from_json(comp)?;
+    }
+    if out.comp[1].len() != out.comp[0].len() || out.comp[2].len() != out.comp[0].len() {
+        return Err("vector field component lengths differ".to_string());
+    }
+    Ok(out)
+}
+
+fn f64s_from_json(j: &Json) -> Result<Vec<f64>, String> {
+    j.as_arr()
+        .ok_or_else(|| "expected an array of numbers".to_string())?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "non-numeric array entry".to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scenario::TaylorGreen;
+
+    fn spec_of(nus: &[f64], shards: usize) -> SweepSpec {
+        SweepSpec {
+            scenarios: taylor_green_nu_sweep(8, nus),
+            steps: 2,
+            shards,
+            threads: 2,
+            grad: false,
+        }
+    }
+
+    #[test]
+    fn shard_ranges_cover_the_grid_exactly_once() {
+        let spec = spec_of(&[0.01, 0.02, 0.03, 0.04, 0.05], 3);
+        let ranges = spec.shard_ranges();
+        assert_eq!(ranges.len(), 3);
+        let mut covered = Vec::new();
+        for r in &ranges {
+            covered.extend(r.clone());
+        }
+        assert_eq!(covered, vec![0, 1, 2, 3, 4]);
+        // more shards than scenarios degrades to one scenario per shard
+        assert_eq!(spec_of(&[0.01, 0.02], 8).shard_ranges().len(), 2);
+    }
+
+    #[test]
+    fn fingerprint_tracks_everything_resume_depends_on() {
+        let base = spec_of(&[0.01, 0.02], 2);
+        let fp = base.fingerprint();
+        let mut other = spec_of(&[0.01, 0.02], 2);
+        assert_eq!(fp, other.fingerprint(), "same spec must fingerprint identically");
+        other.steps = 3;
+        assert_ne!(fp, other.fingerprint(), "steps must invalidate artifacts");
+        other.steps = 2;
+        other.threads = 4;
+        assert_ne!(fp, other.fingerprint(), "pool width must invalidate artifacts");
+        other.threads = 2;
+        other.grad = true;
+        assert_ne!(fp, other.fingerprint(), "mode must invalidate artifacts");
+        assert_ne!(
+            fp,
+            spec_of(&[0.01, 0.03], 2).fingerprint(),
+            "grid labels must invalidate artifacts"
+        );
+    }
+
+    #[test]
+    fn forward_entry_round_trips_bit_for_bit() {
+        let run = TaylorGreen { n: 4, ..Default::default() }.build();
+        let mut state = run.state;
+        // awkward values: negative zero, thirds, subnormal, large magnitude
+        state.u.comp[0][0] = -0.0;
+        state.u.comp[1][1] = 1.0 / 3.0;
+        state.p[0] = 5e-324;
+        state.p[1] = -1.234567890123456e300;
+        state.time = 0.30000000000000004;
+        state.step = 7;
+        let entry = SweepEntry::Forward(BatchResult {
+            label: "round-trip".to_string(),
+            state,
+            steps: 7,
+            adv_iters: 21,
+            p_iters: 34,
+            adv_residual: 1.0e-9 / 3.0,
+            p_residual: 2.5e-11,
+            max_divergence: 7.7e-13,
+            last: StepStats { dt: 0.01, adv_iters: 3, p_iters: 5, ..Default::default() },
+            wall_s: 0.125,
+        });
+        let text = entry_json(&entry, true).to_string_pretty();
+        let back = entry_from_json(&Json::parse(&text).expect("artifact text parses"), false)
+            .expect("entry deserializes");
+        let (orig, back) = match (&entry, &back) {
+            (SweepEntry::Forward(a), SweepEntry::Forward(b)) => (a, b),
+            _ => panic!("round trip changed the entry kind"),
+        };
+        assert_eq!(orig.label, back.label);
+        assert_eq!(orig.state.u, back.state.u, "velocity must survive bit-for-bit");
+        for (a, b) in orig.state.p.iter().zip(&back.state.p) {
+            assert_eq!(a.to_bits(), b.to_bits(), "pressure must survive bit-for-bit");
+        }
+        assert_eq!(orig.state.time.to_bits(), back.state.time.to_bits());
+        assert_eq!(orig.state.step, back.state.step);
+        assert_eq!(orig.adv_iters, back.adv_iters);
+        assert_eq!(orig.adv_residual.to_bits(), back.adv_residual.to_bits());
+        assert_eq!(orig.last.dt.to_bits(), back.last.dt.to_bits());
+        assert_eq!(orig.wall_s.to_bits(), back.wall_s.to_bits());
+    }
+
+    #[test]
+    fn failed_entry_round_trips_label_and_error() {
+        let entry = SweepEntry::Failed {
+            label: "cavity 8x8 Re=1e9".to_string(),
+            error: "cavity 8x8 Re=1e9: non-finite divergence at step 3".to_string(),
+        };
+        let text = entry_json(&entry, true).to_string_pretty();
+        match entry_from_json(&Json::parse(&text).expect("artifact text parses"), false)
+            .expect("failed entry deserializes")
+        {
+            SweepEntry::Failed { label, error } => {
+                assert_eq!(label, "cavity 8x8 Re=1e9");
+                assert!(error.contains("non-finite divergence"), "{error}");
+            }
+            _ => panic!("failed entry must stay failed"),
+        }
+    }
+
+    #[test]
+    fn grid_for_kind_rejects_unknown_kinds() {
+        assert!(grid_for_kind("cavity", 8, &[100.0, 200.0]).is_ok());
+        assert!(grid_for_kind("taylor-green", 8, &[0.01]).is_ok());
+        let err = grid_for_kind("warp-drive", 8, &[1.0]).expect_err("unknown kind must error");
+        assert!(err.contains("warp-drive"), "{err}");
+    }
+}

@@ -2,6 +2,7 @@
 //! artifact checks. `pict <command> [--options]`; see `pict help`.
 
 use pict::util::cli::Args;
+use std::process::ExitCode;
 
 /// `--precision f64|mixed` shared by `batch` and `train`; `None` means the
 /// value was unrecognized (an error has already been printed).
@@ -16,8 +17,10 @@ fn parse_precision(args: &Args, cmd: &str) -> Option<pict::linsolve::Precision> 
     }
 }
 
-fn main() {
+fn main() -> ExitCode {
     let args = Args::parse();
+    // every arm yields an exit code: argument/config errors and failed
+    // loads exit nonzero so sweep drivers and CI can trust `$?`
     match args.positional.first().map(|s| s.as_str()) {
         Some("gradpaths") => {
             use pict::adjoint::GradientPaths;
@@ -44,6 +47,7 @@ fn main() {
                     if r.diverged { " [DIVERGED]" } else { "" }
                 );
             }
+            ExitCode::SUCCESS
         }
         #[cfg(feature = "pjrt")]
         Some("artifacts") => {
@@ -60,13 +64,18 @@ fn main() {
                             m.outputs.len()
                         );
                     }
+                    ExitCode::SUCCESS
                 }
-                Err(e) => eprintln!("failed to load artifacts: {e}"),
+                Err(e) => {
+                    eprintln!("failed to load artifacts: {e}");
+                    ExitCode::FAILURE
+                }
             }
         }
         #[cfg(not(feature = "pjrt"))]
         Some("artifacts") => {
             eprintln!("the PJRT runtime is disabled; rebuild with `--features pjrt`");
+            ExitCode::FAILURE
         }
         Some("batch") => {
             use pict::coordinator::scenario::{builtin_scenarios, BatchRunner};
@@ -74,7 +83,7 @@ fn main() {
             let steps = args.usize_or("steps", 10);
             let threads = args.usize_or("threads", pict::par::env_threads());
             let Some(precision) = parse_precision(&args, "batch") else {
-                return;
+                return ExitCode::FAILURE;
             };
             let scenarios = builtin_scenarios();
             let runner = BatchRunner::new(steps).with_threads(threads).with_precision(precision);
@@ -103,6 +112,7 @@ fn main() {
                 &["scenario", "steps", "t", "adv iters", "p iters", "max div", "wall"],
                 &rows,
             );
+            ExitCode::SUCCESS
         }
         Some("train") => {
             use pict::adjoint::{GradientPaths, TapeStrategy};
@@ -122,7 +132,7 @@ fn main() {
             // mixed precision accelerates the *forward* reference frames;
             // gradient batches always solve in f64 (see BatchRunner docs)
             let Some(precision) = parse_precision(&args, "train") else {
-                return;
+                return ExitCode::FAILURE;
             };
             // --schedule full|uniform:K|revolve:S selects the tape memory
             // strategy; --every K is kept as an alias for uniform:K (0 =
@@ -136,7 +146,7 @@ fn main() {
                         Ok(s) => s,
                         Err(e) => {
                             eprintln!("pict train: invalid --every {every}: {e}");
-                            return;
+                            return ExitCode::FAILURE;
                         }
                     }
                 }
@@ -145,7 +155,7 @@ fn main() {
                     Ok(s) => s,
                     Err(e) => {
                         eprintln!("pict train: invalid --schedule {schedule}: {e}");
-                        return;
+                        return ExitCode::FAILURE;
                     }
                 }
             };
@@ -156,7 +166,7 @@ fn main() {
                 .collect();
             if params.is_empty() {
                 eprintln!("pict train: --params must be a comma-separated list of numbers");
-                return;
+                return ExitCode::FAILURE;
             }
             // a coarse scenario per parameter (shared mesh across the
             // batch) + its 2x-resolution, half-dt fine counterpart
@@ -191,7 +201,7 @@ fn main() {
                     .unzip(),
                 other => {
                     eprintln!("pict train: unsupported --kind {other} (cavity | taylor-green)");
-                    return;
+                    return ExitCode::FAILURE;
                 }
             };
             let labels: Vec<String> = coarse.iter().map(|s| s.label()).collect();
@@ -238,7 +248,7 @@ fn main() {
                 );
                 let shared = reduce_shared(&results);
                 println!("batch-reduced: dnu = {:.4e}", shared.dnu);
-                return;
+                return ExitCode::SUCCESS;
             }
 
             let cfg = Corrector2dCfg {
@@ -270,13 +280,22 @@ fn main() {
             let frames = scenario_reference_frames(&runner, &fine, &coarse_meshes, &cfg);
             println!("batched training ({} optimizer steps)...", cfg.opt_steps_per_stage);
             let result = train_corrector_batch(&runner, &coarse, &frames, &cfg);
-            let first = result.losses.first().copied().unwrap_or(f64::NAN);
-            let last = result.losses.last().copied().unwrap_or(f64::NAN);
+            // an empty loss history means no optimizer step ran (e.g. zero
+            // frames or zero iters) — that is an error, not a NaN row
+            if result.losses.is_empty() {
+                eprintln!(
+                    "pict train: no steps run (check --frames/--warmup/--iters); nothing to report"
+                );
+                return ExitCode::FAILURE;
+            }
+            let first = result.losses[0];
+            let last = result.losses[result.losses.len() - 1];
             println!(
                 "batch-mean episode loss {first:.4e} -> {last:.4e} over {} steps ({} params)",
                 result.losses.len(),
                 result.net.nparams()
             );
+            ExitCode::SUCCESS
         }
         Some("cavity") => {
             use pict::coordinator::references::GHIA_RE100_U;
@@ -301,6 +320,132 @@ fn main() {
                 worst = worst.max((u - u_ref).abs());
             }
             println!("cavity {n}x{n}: worst centerline error vs Ghia = {worst:.4}");
+            ExitCode::SUCCESS
+        }
+        Some("sweep") => {
+            use pict::coordinator::sweep::{self, ShardOutcome, ShardStatus, SweepSpec};
+            let action = args.positional.get(1).map(|s| s.as_str()).unwrap_or("run");
+            let kind = args.get_or("kind", "cavity");
+            let n = args.usize_or("n", 12);
+            let steps = args.usize_or("steps", 5);
+            let shards = args.usize_or("shards", 2);
+            let threads = args.usize_or("threads", pict::par::env_threads());
+            let grad = args.flag("grad");
+            let dir_s = args.get_or("dir", "reports/sweep");
+            let dir = std::path::Path::new(&dir_s);
+            let params: Vec<f64> = args
+                .get_or(
+                    "params",
+                    if kind == "cavity" { "50,100,200,400" } else { "0.01,0.02,0.03,0.05" },
+                )
+                .split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .collect();
+            if params.is_empty() {
+                eprintln!("pict sweep: --params must be a comma-separated list of numbers");
+                return ExitCode::FAILURE;
+            }
+            let scenarios = match sweep::grid_for_kind(&kind, n, &params) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("pict sweep: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let spec = SweepSpec { scenarios, steps, shards, threads, grad };
+            match action {
+                "run" => {
+                    // --shard i runs exactly one shard (the N-invocations
+                    // mode); omitted, all shards run work-stealing here
+                    let only = match args.get("shard") {
+                        None => None,
+                        Some(s) => match s.parse::<usize>() {
+                            Ok(v) => Some(v),
+                            Err(_) => {
+                                eprintln!("pict sweep: --shard must be a shard index");
+                                return ExitCode::FAILURE;
+                            }
+                        },
+                    };
+                    println!(
+                        "sweep: {} scenarios over {} shards x {} steps ({} mode) on {} workers -> {}",
+                        spec.scenarios.len(),
+                        spec.shard_ranges().len(),
+                        spec.steps,
+                        if grad { "gradient" } else { "forward" },
+                        spec.threads,
+                        dir.display()
+                    );
+                    match sweep::run_shards(&spec, dir, only) {
+                        Ok(reports) => {
+                            for r in &reports {
+                                match &r.outcome {
+                                    ShardOutcome::Skipped => {
+                                        println!("shard {:04}: skipped (valid artifact)", r.shard)
+                                    }
+                                    ShardOutcome::Computed { failures } => println!(
+                                        "shard {:04}: computed ({failures} failed slots)",
+                                        r.shard
+                                    ),
+                                }
+                            }
+                            ExitCode::SUCCESS
+                        }
+                        Err(e) => {
+                            eprintln!("pict sweep run: {e}");
+                            ExitCode::FAILURE
+                        }
+                    }
+                }
+                "merge" => {
+                    let out = args.get_or("out", "reports/sweep-merged.json");
+                    match sweep::merge(&spec, dir) {
+                        Ok(merged) => {
+                            if let Err(e) =
+                                sweep::write_merged(&spec, &merged, std::path::Path::new(&out))
+                            {
+                                eprintln!("pict sweep merge: writing {out}: {e}");
+                                return ExitCode::FAILURE;
+                            }
+                            println!(
+                                "merged {} scenarios ({} failed slots) -> {out}",
+                                merged.entries.len(),
+                                merged.failures
+                            );
+                            if let Some(shared) = &merged.shared {
+                                println!("batch-reduced: dnu = {:.4e}", shared.dnu);
+                            }
+                            ExitCode::SUCCESS
+                        }
+                        Err(e) => {
+                            eprintln!("pict sweep merge: {e}");
+                            ExitCode::FAILURE
+                        }
+                    }
+                }
+                "status" => {
+                    let statuses = sweep::sweep_status(&spec, dir);
+                    let mut valid = 0usize;
+                    for (s, st) in &statuses {
+                        match st {
+                            ShardStatus::Valid => {
+                                valid += 1;
+                                println!("shard {s:04}: valid");
+                            }
+                            ShardStatus::Missing => println!("shard {s:04}: missing"),
+                            ShardStatus::Invalid(why) => {
+                                println!("shard {s:04}: INVALID — {why}")
+                            }
+                        }
+                    }
+                    println!("{valid}/{} shards valid under {}", statuses.len(), dir.display());
+                    ExitCode::SUCCESS
+                }
+                other => {
+                    eprintln!("pict sweep: unknown action `{other}` (run | merge | status)");
+                    ExitCode::FAILURE
+                }
+            }
         }
         _ => {
             println!("PICT — differentiable multi-block PISO solver (Rust + JAX + Pallas)");
@@ -315,10 +460,15 @@ fn main() {
             println!("        [--every K] [--iters 10] [--threads N]  train one corrector across a scenario batch");
             println!("        [--probe [--probe-steps 16]]            record+backward gradient batch only (no network)");
             println!("        [--precision mixed]                     mixed forward frames (adjoint stays f64)");
+            println!("  sweep run|merge|status [--kind cavity] [--params 50,100,200,400]");
+            println!("        [--n 12] [--steps 5] [--shards 2]       sharded, resumable scenario sweep: one atomic");
+            println!("        [--shard i] [--threads N] [--grad]      artifact per shard, valid shards skipped on re-run");
+            println!("        [--dir reports/sweep] [--out FILE]      merge folds shards bit-for-bit (states + SharedGrads)");
             println!("  artifacts [--dir artifacts]                   list AOT artifacts (needs --features pjrt)");
             println!("env: PICT_THREADS=<n> sizes the worker pool (default: all cores; read per context, never cached)");
             println!("examples: cargo run --release --example quickstart | train_sgs_tcf | ...");
             println!("benches:  cargo bench  (one per paper table/figure — see DESIGN.md)");
+            ExitCode::SUCCESS
         }
     }
 }

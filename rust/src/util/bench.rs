@@ -3,6 +3,8 @@
 //! a JSON report under `reports/` so EXPERIMENTS.md tables can be regenerated.
 
 use super::json::Json;
+use std::io;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -55,17 +57,7 @@ impl Bench {
             std::hint::black_box(f());
             samples.push(t0.elapsed().as_secs_f64());
         }
-        let n = samples.len() as f64;
-        let mean = samples.iter().sum::<f64>() / n;
-        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
-        let res = BenchResult {
-            name: name.to_string(),
-            iters: self.iters,
-            mean_s: mean,
-            std_s: var.sqrt(),
-            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
-            max_s: samples.iter().cloned().fold(0.0, f64::max),
-        };
+        let res = summarize(name, self.iters, &samples);
         println!(
             "bench {:<44} mean {:>10.4} ms  (± {:>8.4} ms, min {:>10.4} ms, n={})",
             res.name,
@@ -78,20 +70,81 @@ impl Bench {
     }
 }
 
+/// Summary statistics over raw timing samples: mean, *sample* (n−1)
+/// standard deviation — the 5-iteration default is nowhere near the
+/// population regime, so the /n estimator biased `std_s` low — and a
+/// min/max fold seeded from the samples themselves (a `0.0` max seed would
+/// be silently wrong if it ever met an all-negative sample set, and read
+/// as a real measurement on an empty one).
+fn summarize(name: &str, iters: usize, samples: &[f64]) -> BenchResult {
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let std_s = if samples.len() > 1 {
+        (samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / (n - 1.0)).sqrt()
+    } else {
+        0.0
+    };
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        std_s,
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Durably write `j` to `path`: bytes go to a same-directory temp file that
+/// is flushed to disk and atomically renamed over the target, so concurrent
+/// readers — and the sweep layer's resume logic — only ever observe either
+/// a missing file or a complete document, never a truncated one. The
+/// containing directory is created if needed.
+pub fn write_json_atomic(path: &Path, j: &Json) -> io::Result<()> {
+    if let Some(dir) = path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(dir)?;
+    }
+    let file_name = path.file_name().and_then(|n| n.to_str()).ok_or_else(|| {
+        io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("report path {} has no file name", path.display()),
+        )
+    })?;
+    // pid-qualified temp name: concurrent writers of the same artifact each
+    // stage privately and the rename decides last-writer-wins atomically
+    let tmp = path.with_file_name(format!(".{file_name}.{}.tmp", std::process::id()));
+    let result = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        io::Write::write_all(&mut f, j.to_string_pretty().as_bytes())?;
+        io::Write::write_all(&mut f, b"\n")?;
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
 /// Write a collection of results (plus free-form extra fields) to
-/// `reports/<file>.json`, creating the directory if needed.
-pub fn write_report(file: &str, results: &[BenchResult], extra: Vec<(&str, Json)>) {
+/// `reports/<file>.json` via [`write_json_atomic`] (temp file + atomic
+/// rename), returning the written path. Callers must surface the error:
+/// a swallowed write failure leaves a missing or stale report that reads
+/// as "this work never ran" — or, for sweep shards, as a completed shard.
+pub fn write_report(
+    file: &str,
+    results: &[BenchResult],
+    extra: Vec<(&str, Json)>,
+) -> io::Result<PathBuf> {
     let mut fields = vec![(
         "benches",
         Json::Arr(results.iter().map(|r| r.to_json()).collect()),
     )];
     fields.extend(extra);
     let j = Json::obj(fields);
-    let _ = std::fs::create_dir_all("reports");
-    let path = format!("reports/{file}.json");
-    if std::fs::write(&path, j.to_string_pretty()).is_ok() {
-        println!("report written to {path}");
-    }
+    let path = PathBuf::from(format!("reports/{file}.json"));
+    write_json_atomic(&path, &j)?;
+    println!("report written to {}", path.display());
+    Ok(path)
 }
 
 /// Print a markdown-ish table row-aligned for paper-vs-measured comparisons.
@@ -131,5 +184,37 @@ mod tests {
         let r = b.run("noop", || 1 + 1);
         assert_eq!(r.iters, 3);
         assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s + 1e-12);
+        assert!(r.std_s.is_finite() && r.std_s >= 0.0);
+    }
+
+    #[test]
+    fn summary_uses_sample_variance_and_sample_seeded_extrema() {
+        let r = summarize("fixed", 3, &[1.0, 2.0, 3.0]);
+        assert_eq!(r.mean_s, 2.0);
+        // n-1 estimator: var = ((1)^2 + 0 + (1)^2) / 2 = 1.0
+        assert_eq!(r.std_s, 1.0);
+        assert_eq!(r.min_s, 1.0);
+        assert_eq!(r.max_s, 3.0);
+        // a single sample has no spread estimate, not a 0/0 NaN
+        let one = summarize("one", 1, &[0.25]);
+        assert_eq!(one.std_s, 0.0);
+        assert_eq!(one.max_s, 0.25);
+    }
+
+    #[test]
+    fn atomic_json_write_is_whole_file_or_nothing() {
+        let dir = std::env::temp_dir().join(format!("pict_bench_atomic_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("r.json");
+        write_json_atomic(&path, &Json::obj(vec![("a", Json::Num(1.0))])).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(&first).unwrap().get("a").unwrap().as_f64(), Some(1.0));
+        // overwrite goes through the same rename; the old document is fully
+        // replaced and no temp file is left behind
+        write_json_atomic(&path, &Json::obj(vec![("a", Json::Num(2.0))])).unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(&second).unwrap().get("a").unwrap().as_f64(), Some(2.0));
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1, "temp litter left behind");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -65,7 +65,13 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.is_finite() {
-                    if *x == x.trunc() && x.abs() < 1e15 {
+                    // integral values print as integers, except -0.0 (whose
+                    // sign bit `as i64` would drop); everything else uses
+                    // Rust's shortest-round-trip exponential formatting, so
+                    // every finite f64 survives write -> parse bit-for-bit
+                    // (the sweep layer's shard artifacts rely on this)
+                    if *x == x.trunc() && x.abs() < 1e15 && !(*x == 0.0 && x.is_sign_negative())
+                    {
                         let _ = write!(out, "{}", *x as i64);
                     } else {
                         let _ = write!(out, "{x:e}");
@@ -305,6 +311,35 @@ mod tests {
         assert_eq!(j.get("c").unwrap().as_f64(), Some(-2500.0));
         let arr = j.get("a").unwrap().as_arr().unwrap();
         assert_eq!(arr[1].get("b").unwrap().as_str(), Some("x\ny"));
+    }
+
+    #[test]
+    fn finite_f64_round_trips_bit_for_bit() {
+        // the sweep shard artifacts serialize whole solver states through
+        // Json; merge equality is defined bit-for-bit, so the writer must
+        // preserve every finite value exactly — including negative zero,
+        // subnormals, and values with no short decimal form
+        let vals = [
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            1.0 / 3.0,
+            std::f64::consts::PI,
+            1e-310,
+            5e-324,
+            f64::MIN_POSITIVE,
+            -2.2250738585072014e-308,
+            1e300,
+            -9.87654321e-12,
+            1e15 + 1.0,
+            123456789.123456789,
+        ];
+        for v in vals {
+            let s = Json::Num(v).to_string_pretty();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(v.to_bits(), back.to_bits(), "{v:e} wrote as {s}");
+        }
     }
 
     #[test]

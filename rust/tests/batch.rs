@@ -1,10 +1,14 @@
 //! Integration tests for the scenario registry and the batched runner:
 //! several distinct registered scenarios advanced concurrently in one call.
 
+use pict::adjoint::RolloutGrads;
 use pict::coordinator::scenario::{
-    builtin_scenarios, scenario_by_kind, BatchRunner, LidDrivenCavity, Poiseuille, Scenario,
-    TaylorGreen, TurbulentChannel, VortexStreet,
+    builtin_scenarios, reduce_shared, scenario_by_kind, taylor_green_nu_sweep, BatchRunner,
+    GradBatchResult, LidDrivenCavity, Poiseuille, Scenario, ScenarioRun, TaylorGreen,
+    TurbulentChannel, VortexStreet,
 };
+use pict::mesh::VectorField;
+use pict::piso::State;
 
 /// Small variants of every registered scenario family (fast to advance).
 fn small_scenarios() -> Vec<Box<dyn Scenario>> {
@@ -68,4 +72,131 @@ fn builtin_registry_covers_the_paper_workloads() {
     for kind in ["taylor-green", "cavity", "poiseuille", "channel", "vortex-street"] {
         assert!(scenario_by_kind(kind).is_some(), "missing scenario kind {kind}");
     }
+}
+
+#[test]
+fn batch_preserves_input_order_when_pool_is_wider_than_the_batch() {
+    // 8 workers racing over 3 scenarios: completion order is whatever the
+    // pool's claiming produces, but results must come back by input index
+    let scenarios = taylor_green_nu_sweep(8, &[0.05, 0.01, 0.03]);
+    let results = BatchRunner::new(1).with_threads(8).run(&scenarios);
+    assert_eq!(results.len(), 3);
+    for (r, s) in results.iter().zip(&scenarios) {
+        assert_eq!(r.label, s.label(), "slot came back out of input order");
+    }
+}
+
+/// Hand-built gradient result for `reduce_shared` edge-case tests (no
+/// solver run needed: the reduction only looks at grads + mesh_fp).
+fn synthetic_grad_result(label: &str, mesh_fp: u64, dnu: f64, nsteps: usize, seed: f64) -> GradBatchResult {
+    let mut du0 = VectorField::zeros(2);
+    du0.comp[0][0] = seed;
+    let dsource: Vec<VectorField> = (0..nsteps)
+        .map(|t| {
+            let mut f = VectorField::zeros(2);
+            f.comp[0][1] = seed + t as f64;
+            f
+        })
+        .collect();
+    GradBatchResult {
+        label: label.to_string(),
+        state: State { u: VectorField::zeros(2), p: vec![0.0; 2], time: 0.0, step: nsteps },
+        loss: 1.0,
+        grads: RolloutGrads { du0, dp0: vec![0.0; 2], dsource, dnu, dbc: Vec::new() },
+        mesh_fp,
+        peak_resident_f64: 0,
+        wall_s: 0.0,
+    }
+}
+
+#[test]
+fn reduce_shared_handles_empty_single_and_mixed_length_batches() {
+    // empty input: a zero dnu and no field reductions, not a panic
+    let empty = reduce_shared(&[]);
+    assert_eq!(empty.dnu, 0.0);
+    assert!(empty.dsource.is_none());
+    assert!(empty.du0.is_none());
+
+    // single scenario: the reduction is the scenario's own gradients
+    let one = [synthetic_grad_result("solo", 7, 0.25, 2, 1.5)];
+    let solo = reduce_shared(&one);
+    assert_eq!(solo.dnu, 0.25);
+    let du0 = solo.du0.expect("single-scenario batch reduces du0");
+    assert_eq!(du0, one[0].grads.du0);
+    let ds = solo.dsource.expect("single-scenario batch reduces dsource");
+    assert_eq!(ds.len(), 2);
+    assert_eq!(ds[0], one[0].grads.dsource[0]);
+
+    // same mesh but different rollout lengths: dsource entries would not
+    // line up step-for-step, so field reductions must be refused while the
+    // scalar dnu still sums
+    let mixed = [
+        synthetic_grad_result("short", 7, 0.25, 2, 1.5),
+        synthetic_grad_result("long", 7, 0.5, 3, 2.5),
+    ];
+    let shared = reduce_shared(&mixed);
+    assert_eq!(shared.dnu, 0.75);
+    assert!(shared.dsource.is_none(), "mixed-length batches must not reduce dsource");
+    assert!(shared.du0.is_none(), "mixed-length batches must not reduce du0");
+}
+
+/// Scenario whose build panics — the "bad config" failure mode, exercised
+/// through the public crate surface rather than the unit tests.
+struct PanicOnBuild;
+
+impl Scenario for PanicOnBuild {
+    fn kind(&self) -> &'static str {
+        "panic-on-build"
+    }
+    fn label(&self) -> String {
+        "panic-on-build".to_string()
+    }
+    fn build(&self) -> ScenarioRun {
+        panic!("injected build failure")
+    }
+}
+
+/// Taylor–Green seeded with a NaN — diverges or trips the debug
+/// non-finite guard on the first step.
+struct NanSeed;
+
+impl Scenario for NanSeed {
+    fn kind(&self) -> &'static str {
+        "nan-seed"
+    }
+    fn label(&self) -> String {
+        "nan-seed".to_string()
+    }
+    fn build(&self) -> ScenarioRun {
+        let mut run = TaylorGreen { n: 8, ..Default::default() }.build();
+        run.state.u.comp[0][2] = f64::NAN;
+        run.label = self.label();
+        run
+    }
+}
+
+#[test]
+fn checked_batch_isolates_failures_to_their_own_slots() {
+    let scenarios: Vec<Box<dyn Scenario>> = vec![
+        Box::new(TaylorGreen { n: 8, ..Default::default() }),
+        Box::new(PanicOnBuild),
+        Box::new(NanSeed),
+        Box::new(LidDrivenCavity { n: 8, ..Default::default() }),
+    ];
+    let results = BatchRunner::new(2).with_threads(4).run_checked(&scenarios);
+    assert_eq!(results.len(), 4);
+    for (i, healthy) in [(0usize, true), (1, false), (2, false), (3, true)] {
+        assert_eq!(
+            results[i].is_ok(),
+            healthy,
+            "slot {i}: expected {} but got {:?}",
+            if healthy { "Ok" } else { "Err" },
+            results[i].as_ref().err().map(|e| e.to_string()),
+        );
+    }
+    let trailing = results[3].as_ref().expect("trailing healthy slot completes");
+    assert_eq!(trailing.state.step, 2);
+    let err = results[1].as_ref().expect_err("panicking slot reports its error");
+    assert_eq!(err.label(), "panic-on-build");
+    assert!(err.to_string().contains("injected build failure"), "{err}");
 }

@@ -1,0 +1,271 @@
+//! End-to-end sweep tests: sharded execution + merge must be bit-for-bit
+//! equal to a single-process batch at the same pool width, resume must skip
+//! valid artifacts and recompute damaged ones, and a failing scenario must
+//! cost exactly its own slot of its own shard.
+
+use pict::adjoint::{GradientPaths, TapeStrategy};
+use pict::coordinator::scenario::{
+    reduce_shared, taylor_green_nu_sweep, BatchRunner, Scenario, ScenarioRun, TaylorGreen,
+    TerminalKineticEnergy,
+};
+use pict::coordinator::sweep::{self, ShardOutcome, ShardStatus, SweepEntry, SweepSpec};
+use std::path::PathBuf;
+
+const NUS: [f64; 4] = [0.01, 0.02, 0.03, 0.05];
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("pict_sweep_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn forward_spec(shards: usize, steps: usize) -> SweepSpec {
+    SweepSpec {
+        scenarios: taylor_green_nu_sweep(8, &NUS),
+        steps,
+        shards,
+        threads: 2,
+        grad: false,
+    }
+}
+
+fn assert_bits(a: f64, b: f64, what: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a:e} != {b:e}");
+}
+
+#[test]
+fn two_shard_forward_merge_is_bit_for_bit_single_process() {
+    let dir2 = fresh_dir("fwd2");
+    let spec2 = forward_spec(2, 2);
+    let reports = sweep::run_shards(&spec2, &dir2, None).expect("sweep shards run and write");
+    assert_eq!(reports.len(), 2);
+    assert!(
+        reports.iter().all(|r| r.outcome == ShardOutcome::Computed { failures: 0 }),
+        "fresh sweep computes every shard"
+    );
+    let merged = sweep::merge(&spec2, &dir2).expect("valid shards merge");
+    assert_eq!(merged.entries.len(), NUS.len());
+    assert_eq!(merged.failures, 0);
+
+    // single-process baseline: the whole grid in one batch, same width
+    let baseline = BatchRunner::new(2).with_threads(2).run(&taylor_green_nu_sweep(8, &NUS));
+    for (e, b) in merged.entries.iter().zip(&baseline) {
+        let r = match e {
+            SweepEntry::Forward(r) => r,
+            _ => panic!("forward sweep produced a non-forward entry"),
+        };
+        assert_eq!(r.label, b.label);
+        assert_eq!(r.state.u, b.state.u, "{}: velocity differs from single process", r.label);
+        for (x, y) in r.state.p.iter().zip(&b.state.p) {
+            assert_bits(*x, *y, "pressure");
+        }
+        assert_bits(r.state.time, b.state.time, "time");
+        assert_eq!(r.state.step, b.state.step);
+        assert_eq!(r.steps, b.steps);
+        assert_eq!(r.adv_iters, b.adv_iters);
+        assert_eq!(r.p_iters, b.p_iters);
+        assert_bits(r.adv_residual, b.adv_residual, "adv residual");
+        assert_bits(r.p_residual, b.p_residual, "pressure residual");
+        assert_bits(r.max_divergence, b.max_divergence, "divergence");
+        assert_bits(r.last.dt, b.last.dt, "last dt");
+    }
+
+    // merged documents are byte-identical regardless of shard count
+    let dir1 = fresh_dir("fwd1");
+    let spec1 = forward_spec(1, 2);
+    sweep::run_shards(&spec1, &dir1, None).expect("one-shard sweep runs");
+    let merged1 = sweep::merge(&spec1, &dir1).expect("one-shard sweep merges");
+    let out2 = dir2.join("merged.json");
+    let out1 = dir1.join("merged.json");
+    sweep::write_merged(&spec2, &merged, &out2).expect("merged doc writes");
+    sweep::write_merged(&spec1, &merged1, &out1).expect("merged doc writes");
+    let bytes2 = std::fs::read(&out2).expect("merged doc reads back");
+    let bytes1 = std::fs::read(&out1).expect("merged doc reads back");
+    assert_eq!(bytes1, bytes2, "merged bytes must not depend on shard count");
+
+    let _ = std::fs::remove_dir_all(&dir1);
+    let _ = std::fs::remove_dir_all(&dir2);
+}
+
+#[test]
+fn gradient_sweep_merges_states_and_shared_grads_bit_for_bit() {
+    let nus = [0.02, 0.05];
+    let steps = 2;
+    let dir = fresh_dir("grad");
+    let spec = SweepSpec {
+        scenarios: taylor_green_nu_sweep(8, &nus),
+        steps,
+        shards: 2,
+        threads: 2,
+        grad: true,
+    };
+    sweep::run_shards(&spec, &dir, None).expect("gradient shards run");
+    let merged = sweep::merge(&spec, &dir).expect("gradient shards merge");
+    assert_eq!(merged.failures, 0);
+
+    // baseline: same grid, one process, same width / loss / tape / paths
+    let loss = TerminalKineticEnergy { final_step: steps - 1 };
+    let baseline = BatchRunner::new(steps).with_threads(2).run_gradients(
+        &taylor_green_nu_sweep(8, &nus),
+        TapeStrategy::Full,
+        GradientPaths::FULL,
+        &loss,
+    );
+    for (e, b) in merged.entries.iter().zip(&baseline) {
+        let g = match e {
+            SweepEntry::Gradient(g) => g,
+            _ => panic!("gradient sweep produced a non-gradient entry"),
+        };
+        assert_eq!(g.label, b.label);
+        assert_bits(g.loss, b.loss, "loss");
+        assert_eq!(g.state.u, b.state.u, "{}: state differs from single process", g.label);
+        assert_eq!(g.grads.du0, b.grads.du0, "{}: du0 differs", g.label);
+        assert_bits(g.grads.dnu, b.grads.dnu, "dnu");
+        assert_eq!(g.grads.dsource.len(), b.grads.dsource.len());
+        for (x, y) in g.grads.dsource.iter().zip(&b.grads.dsource) {
+            assert_eq!(x, y, "{}: dsource differs", g.label);
+        }
+        assert_eq!(g.mesh_fp, b.mesh_fp);
+    }
+
+    // SharedGrads reduce over the merged list exactly like a single process
+    let shared = merged.shared.as_ref().expect("gradient sweep reduces shared grads");
+    let want = reduce_shared(&baseline);
+    assert_bits(shared.dnu, want.dnu, "shared dnu");
+    let du0 = shared.du0.as_ref().expect("same-mesh sweep reduces du0");
+    let want_du0 = want.du0.as_ref().expect("same-mesh baseline reduces du0");
+    assert_eq!(du0, want_du0, "shared du0 differs from single process");
+    let ds = shared.dsource.as_ref().expect("same-mesh sweep reduces dsource");
+    let want_ds = want.dsource.as_ref().expect("same-mesh baseline reduces dsource");
+    assert_eq!(ds, want_ds, "shared dsource differs from single process");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_skips_valid_shards_and_recomputes_damaged_ones() {
+    let dir = fresh_dir("resume");
+    let spec = SweepSpec {
+        scenarios: taylor_green_nu_sweep(8, &[0.01, 0.02, 0.03]),
+        steps: 1,
+        shards: 3,
+        threads: 2,
+        grad: false,
+    };
+    let first = sweep::run_shards(&spec, &dir, None).expect("initial sweep runs");
+    assert!(first.iter().all(|r| matches!(r.outcome, ShardOutcome::Computed { .. })));
+
+    // a clean re-invocation skips everything
+    let again = sweep::run_shards(&spec, &dir, None).expect("re-invocation runs");
+    assert!(
+        again.iter().all(|r| r.outcome == ShardOutcome::Skipped),
+        "all-valid sweep must be a no-op"
+    );
+
+    // damage the artifacts: delete one, truncate another mid-file
+    let baseline = sweep::merge(&spec, &dir).expect("undamaged sweep merges");
+    std::fs::remove_file(sweep::shard_path(&dir, 1)).expect("shard 1 artifact removable");
+    let victim = sweep::shard_path(&dir, 2);
+    let full = std::fs::read(&victim).expect("shard 2 artifact readable");
+    std::fs::write(&victim, &full[..full.len() / 2]).expect("shard 2 artifact truncatable");
+
+    let statuses = sweep::sweep_status(&spec, &dir);
+    assert_eq!(statuses[0].1, ShardStatus::Valid);
+    assert_eq!(statuses[1].1, ShardStatus::Missing);
+    assert!(
+        matches!(statuses[2].1, ShardStatus::Invalid(_)),
+        "truncated artifact must read as invalid, got {:?}",
+        statuses[2].1
+    );
+    // merge refuses a damaged sweep instead of treating it as complete
+    assert!(sweep::merge(&spec, &dir).is_err(), "merge must reject missing/truncated shards");
+
+    let resumed = sweep::run_shards(&spec, &dir, None).expect("resume runs");
+    assert_eq!(resumed[0].outcome, ShardOutcome::Skipped);
+    assert_eq!(resumed[1].outcome, ShardOutcome::Computed { failures: 0 });
+    assert_eq!(resumed[2].outcome, ShardOutcome::Computed { failures: 0 });
+
+    // the repaired sweep merges to exactly what the undamaged one did
+    let repaired = sweep::merge(&spec, &dir).expect("repaired sweep merges");
+    assert_eq!(repaired.entries.len(), baseline.entries.len());
+    for (a, b) in repaired.entries.iter().zip(&baseline.entries) {
+        let (ra, rb) = match (a, b) {
+            (SweepEntry::Forward(ra), SweepEntry::Forward(rb)) => (ra, rb),
+            _ => panic!("forward sweep entries changed kind across resume"),
+        };
+        assert_eq!(ra.label, rb.label);
+        assert_eq!(ra.state.u, rb.state.u, "{}: resume changed the result", ra.label);
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Taylor–Green with a NaN seeded into the initial velocity — diverges (or
+/// trips the debug non-finite guard) on the first step.
+struct NanSeed;
+
+impl Scenario for NanSeed {
+    fn kind(&self) -> &'static str {
+        "nan-seed"
+    }
+    fn label(&self) -> String {
+        "nan-seed".to_string()
+    }
+    fn build(&self) -> ScenarioRun {
+        let mut run = TaylorGreen { n: 8, ..Default::default() }.build();
+        run.state.u.comp[0][5] = f64::NAN;
+        run.label = self.label();
+        run
+    }
+}
+
+#[test]
+fn failing_scenario_costs_one_slot_and_its_shard_still_resumes() {
+    let dir = fresh_dir("fail");
+    let spec = SweepSpec {
+        scenarios: vec![
+            Box::new(TaylorGreen { n: 8, nu: 0.01, ..Default::default() }),
+            Box::new(NanSeed),
+            Box::new(TaylorGreen { n: 8, nu: 0.02, ..Default::default() }),
+        ],
+        steps: 1,
+        shards: 2,
+        threads: 2,
+        grad: false,
+    };
+    let reports = sweep::run_shards(&spec, &dir, None).expect("sweep with a failing slot runs");
+    let failed: usize = reports
+        .iter()
+        .map(|r| match r.outcome {
+            ShardOutcome::Computed { failures } => failures,
+            ShardOutcome::Skipped => 0,
+        })
+        .sum();
+    assert_eq!(failed, 1, "exactly the NaN-seeded slot fails");
+
+    let merged = sweep::merge(&spec, &dir).expect("sweep with a failed slot still merges");
+    assert_eq!(merged.failures, 1);
+    assert_eq!(merged.entries.len(), 3);
+    match &merged.entries[1] {
+        SweepEntry::Failed { label, error } => {
+            assert_eq!(label, "nan-seed");
+            assert!(!error.is_empty(), "failure reason must be recorded");
+        }
+        _ => panic!("the NaN-seeded slot must merge as Failed"),
+    }
+    for i in [0usize, 2] {
+        match &merged.entries[i] {
+            SweepEntry::Forward(r) => assert_eq!(r.state.step, 1, "{}: lost its work", r.label),
+            _ => panic!("healthy slot {i} must merge as a completed forward result"),
+        }
+    }
+
+    // a shard containing a failed slot is still a *valid, complete* artifact
+    let again = sweep::run_shards(&spec, &dir, None).expect("re-invocation runs");
+    assert!(
+        again.iter().all(|r| r.outcome == ShardOutcome::Skipped),
+        "failed slots are recorded outcomes, not resume work"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
